@@ -1,0 +1,203 @@
+"""Paper reproductions: Table 5/6/7, Fig 2, Fig 10 on the VCK190 board
+model (the paper's own platform constants), plus the cross-platform §6-Q1
+check on Stratix 10 NX.
+
+Every function returns a list of (name, us_per_call, derived) rows.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import List, Tuple
+
+from benchmarks.common import (BOARD_UNITS, STRATIX_UNIT, VCK190_UNIT, emit,
+                               timed)
+from repro.configs.deit import DEIT_160, DEIT_256, DEIT_T, LV_VIT_T, vit_shape
+from repro.core import (Features, build_graph, evolutionary_search,
+                        exhaustive_search, pareto_front,
+                        sequential_assignment, simulate, spatial_assignment,
+                        ssr_dse, strategy_points)
+from repro.core.pareto import best_under_latency
+
+PAPER_MODELS = [DEIT_T, DEIT_160, DEIT_256, LV_VIT_T]
+
+# Paper Table 5, SSR on VCK190 (latency ms / throughput TOPS) per batch.
+PAPER_T5 = {
+    "deit-t": {1: (0.22, 10.90), 3: (0.39, 18.62), 6: (0.54, 26.70)},
+    "deit-160": {1: (0.21, 8.19), 3: (0.37, 14.92), 6: (0.50, 20.90)},
+    "deit-256": {1: (0.40, 10.30), 3: (0.66, 18.73), 6: (0.98, 25.22)},
+    "lv-vit-t": {1: (0.38, 8.21), 3: (0.62, 15.10), 6: (0.85, 22.03)},
+}
+
+# Paper Table 7: #accs -> measured latency (ms), DeiT-T batch 6.
+PAPER_T7 = {1: 1.30, 2: 1.08, 3: 0.85, 4: 0.83, 5: 0.79, 6: 0.54}
+
+# Paper Table 6: latency constraint (ms) -> best TOPS per strategy.
+PAPER_T6 = {2.0: (11.17, 26.70, 26.70), 1.0: (11.12, 26.70, 26.70),
+            0.5: (11.05, 19.37, 19.37), 0.4: (10.90, None, 18.56)}
+
+
+def _board_points(cfg, batch, n_acc, *, feats=Features()):
+    """SSR design point on the 8-unit VCK190 board model: op-granularity
+    graph (paper Fig. 4) + role-based acc assignment (paper Fig. 9)."""
+    from repro.core.assignment import role_assignment
+    g = build_graph(cfg, vit_shape(batch), granularity="op")
+    acc_of = role_assignment(g, BOARD_UNITS, max_accs=n_acc).acc_of
+    lat, thr, assign = ssr_dse(
+        g, acc_of, BOARD_UNITS, n_batches=batch,
+        hw=VCK190_UNIT, feats=feats)
+    return lat, thr, g
+
+
+def _contig(n_nodes, n_acc):
+    out = []
+    per = max(n_nodes // n_acc, 1)
+    for i in range(n_nodes):
+        out.append(min(i // per, n_acc - 1))
+    return tuple(out)
+
+
+def table5() -> List[Tuple[str, float, str]]:
+    """SSR throughput per model x batch — model vs the paper's on-board
+    measurements (the paper-claims validation)."""
+    rows = []
+    for cfg in PAPER_MODELS:
+        for batch in (1, 3, 6):
+            t0 = time.perf_counter()
+            lat, thr, g = _board_points(cfg, batch, n_acc=min(batch, 6))
+            us = (time.perf_counter() - t0) * 1e6
+            p_lat, p_thr = PAPER_T5[cfg.name][batch]
+            rows.append((
+                f"table5/{cfg.name}/b{batch}", us,
+                f"lat_ms={lat*1e3:.3f} thr_tops={thr:.2f} "
+                f"paper_lat_ms={p_lat} paper_tops={p_thr} "
+                f"thr_ratio={thr/p_thr:.2f}"))
+    return rows
+
+
+def table6() -> List[Tuple[str, float, str]]:
+    """Throughput under latency constraints: sequential vs spatial vs
+    hybrid — the Pareto-dominance claim."""
+    rows = []
+    g6 = build_graph(DEIT_T, vit_shape(6), granularity="op")
+    t0 = time.perf_counter()
+    pts = strategy_points(g6, BOARD_UNITS, hw=VCK190_UNIT,
+                          batches=(1, 2, 3, 4, 6),
+                          hybrid_accs=(2, 3, 4), ea_iters=4)
+    build_us = (time.perf_counter() - t0) * 1e6
+    for lat_ms, (p_seq, p_spa, p_hyb) in PAPER_T6.items():
+        cons = lat_ms * 1e-3
+        seq = best_under_latency(
+            [p for p in pts if p.strategy == "sequential"], cons)
+        spa = best_under_latency(
+            [p for p in pts if p.strategy == "spatial"], cons)
+        hyb = best_under_latency(pts, cons, strategy="hybrid")
+        fmt = lambda p: f"{p.throughput_tops:.2f}" if p else "x"
+        rows.append((
+            f"table6/lat<{lat_ms}ms", build_us / len(PAPER_T6),
+            f"seq={fmt(seq)} spatial={fmt(spa)} hybrid={fmt(hyb)} "
+            f"paper=({p_seq}/{p_spa or 'x'}/{p_hyb}) "
+            f"hybrid_dominates={bool(hyb and (not seq or hyb.throughput_tops >= seq.throughput_tops - 1e-9) and (not spa or hyb.throughput_tops >= spa.throughput_tops - 1e-9))}"))
+    return rows
+
+
+def table7() -> List[Tuple[str, float, str]]:
+    """Analytical model vs paper's measured on-board latency per #accs
+    (DeiT-T, batch 6): the <5% model-fidelity claim, here reported as our
+    model's relative trend error vs their measurements."""
+    rows = []
+    ours = {}
+    for n_acc in range(1, 7):
+        t0 = time.perf_counter()
+        lat, thr, _ = _board_points(DEIT_T, 6, n_acc)
+        us = (time.perf_counter() - t0) * 1e6
+        ours[n_acc] = lat * 1e3
+        rows.append((f"table7/accs{n_acc}", us,
+                     f"est_ms={lat*1e3:.3f} paper_ms={PAPER_T7[n_acc]}"))
+    # trend fidelity: normalized-latency correlation against paper curve
+    import numpy as np
+    a = np.array([ours[i] for i in range(1, 7)])
+    b = np.array([PAPER_T7[i] for i in range(1, 7)])
+    a, b = a / a[0], b / b[0]
+    err = float(np.mean(np.abs(a - b) / b)) * 100
+    corr = float(np.corrcoef(a, b)[0, 1])
+    rows.append(("table7/trend", 0.0,
+                 f"mean_rel_err_pct={err:.1f} corr={corr:.3f}"))
+    return rows
+
+
+def fig2() -> List[Tuple[str, float, str]]:
+    """Latency-throughput Pareto front: hybrid must dominate."""
+    g = build_graph(DEIT_T, vit_shape(6), granularity="op")
+    t0 = time.perf_counter()
+    pts = strategy_points(g, BOARD_UNITS, hw=VCK190_UNIT,
+                          batches=(1, 2, 4, 6), hybrid_accs=(2, 4),
+                          ea_iters=3)
+    us = (time.perf_counter() - t0) * 1e6
+    front = pareto_front(pts)
+    n_hybrid = sum(1 for p in front if p.strategy == "hybrid")
+    rows = [("fig2/pareto", us,
+             f"points={len(pts)} front={len(front)} "
+             f"hybrid_on_front={n_hybrid} "
+             f"front_lat_ms={[round(p.latency*1e3,3) for p in front[:6]]} "
+             f"front_tops={[round(p.throughput_tops,1) for p in front[:6]]}")]
+    return rows
+
+
+def fig10() -> List[Tuple[str, float, str]]:
+    """Search efficiency: EA + inter-acc-aware pruning vs exhaustive."""
+    g = build_graph(DEIT_T, vit_shape(6), granularity="op")
+    t0 = time.perf_counter()
+    ea = evolutionary_search(g, BOARD_UNITS, n_acc=4, n_batches=6,
+                             n_pop=10, n_child=10, n_iter=6, seed=0,
+                             hw=VCK190_UNIT)
+    ea_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ex = exhaustive_search(g, BOARD_UNITS, n_acc=4, n_batches=6,
+                           max_evals=600, hw=VCK190_UNIT)
+    ex_s = time.perf_counter() - t0
+    return [("fig10/ea", ea_s * 1e6,
+             f"best_tops={ea.throughput:.2f} evals={ea.evaluations} "
+             f"wall_s={ea_s:.2f}"),
+            ("fig10/exhaustive", ex_s * 1e6,
+             f"best_tops={ex.throughput:.2f} evals={ex.evaluations} "
+             f"wall_s={ex_s:.2f} "
+             f"ea_speedup_evals={ex.evaluations/max(ea.evaluations,1):.2f}")]
+
+
+def step_by_step() -> List[Tuple[str, float, str]]:
+    """§5.2.6 feature ablation on DeiT-T batch=6 (12ms -> 0.54ms story)."""
+    g = build_graph(DEIT_T, vit_shape(6), granularity="op")
+    rows = []
+    base = Features(onchip_forwarding=False, fine_grained_pipeline=False)
+    f1 = Features(onchip_forwarding=True, fine_grained_pipeline=False)
+    f13 = Features(onchip_forwarding=True, fine_grained_pipeline=True)
+    # baseline: spatial accs, no forwarding, no pipeline
+    spa = spatial_assignment(g, BOARD_UNITS)
+    seq = sequential_assignment(g, BOARD_UNITS)
+    t0 = time.perf_counter()
+    l_base = simulate(g, spa, 6, hw=VCK190_UNIT, feats=base).latency
+    l_f1 = simulate(g, spa, 6, hw=VCK190_UNIT, feats=f1).latency
+    l_seq1 = simulate(g, seq, 6, hw=VCK190_UNIT, feats=f1).latency
+    l_all = simulate(g, spa, 6, hw=VCK190_UNIT, feats=f13).latency
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("ablation/step_by_step", us,
+                 f"baseline_ms={l_base*1e3:.2f} +forwarding_ms={l_f1*1e3:.2f} "
+                 f"+pipeline_ms={l_all*1e3:.2f} "
+                 f"forwarding_gain={l_base/l_f1:.2f}x "
+                 f"pipeline_gain={l_f1/l_all:.2f}x paper=(3.4x,2.7x)"))
+    return rows
+
+
+def q1_cross_platform() -> List[Tuple[str, float, str]]:
+    """§6 Q1: SSR mapped onto Intel Stratix 10 NX — paper models 0.49ms for
+    DeiT-T batch 6 (vs 0.54ms on VCK190)."""
+    g = build_graph(DEIT_T, vit_shape(6), granularity="op")
+    t0 = time.perf_counter()
+    from repro.core.assignment import role_assignment
+    lat, thr, _ = ssr_dse(g, role_assignment(g, BOARD_UNITS,
+                                             max_accs=6).acc_of, BOARD_UNITS,
+                          n_batches=6, hw=STRATIX_UNIT)
+    us = (time.perf_counter() - t0) * 1e6
+    return [("q1/stratix10nx", us,
+             f"est_ms={lat*1e3:.3f} paper_ms=0.49 thr_tops={thr:.2f}")]

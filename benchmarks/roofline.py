@@ -1,0 +1,58 @@
+"""§Roofline table: read the dry-run JSONs and report the three terms per
+(arch × shape), the dominant bottleneck, and MODEL_FLOPS/HLO ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Tuple
+
+
+def load_results(directory: str = "results/dryrun", tag: str = "sp"
+                 ) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(directory, f"*__{tag}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def roofline_rows(directory: str = "results/dryrun"
+                  ) -> List[Tuple[str, float, str]]:
+    rows = []
+    for res in load_results(directory):
+        name = f"roofline/{res['arch']}/{res['shape']}"
+        if res.get("status") == "skipped":
+            rows.append((name, 0.0, f"SKIPPED: {res['reason'][:60]}"))
+            continue
+        r = res["roofline"]
+        terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+                 "collective": r["collective_s"]}
+        dom = max(terms, key=terms.get)
+        bound = max(terms.values())
+        frac = terms["compute"] / bound if bound else 0.0
+        rows.append((
+            name, res.get("compile_s", 0) * 1e6,
+            f"compute_s={terms['compute']:.4g} memory_s={terms['memory']:.4g} "
+            f"collective_s={terms['collective']:.4g} dominant={dom} "
+            f"roofline_frac={frac:.3f} "
+            f"model/hlo={r['model_to_hlo_ratio']:.3f}"))
+    return rows
+
+
+def summary(directory: str = "results/dryrun"):
+    """Aggregate: count per dominant term, worst cells (hillclimb pick)."""
+    res = [r for r in load_results(directory) if r.get("status") == "ok"]
+    doms = {}
+    worst = []
+    for r in res:
+        rf = r["roofline"]
+        terms = {"compute": rf["compute_s"], "memory": rf["memory_s"],
+                 "collective": rf["collective_s"]}
+        d = max(terms, key=terms.get)
+        doms[d] = doms.get(d, 0) + 1
+        bound = max(terms.values())
+        frac = terms["compute"] / bound if bound else 0.0
+        worst.append((frac, r["arch"], r["shape"], d))
+    worst.sort()
+    return doms, worst[:5]

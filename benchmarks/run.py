@@ -1,0 +1,81 @@
+"""Benchmark harness — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+  table5      — perf per model x batch vs paper's on-board numbers
+  table6      — throughput under latency constraints (seq/spatial/hybrid)
+  table7      — analytical model vs paper measurements per #accs
+  fig2        — latency-throughput Pareto front
+  fig10       — EA vs exhaustive search efficiency
+  ablation    — §5.2.6 step-by-step feature gains
+  q1          — §6 cross-platform (Stratix 10 NX) modeling
+  roofline    — §Roofline terms per (arch x shape) from the dry-run JSONs
+  micro       — measured CPU microbenchmarks of the runnable substrate
+"""
+from __future__ import annotations
+
+import sys
+
+
+def micro_rows():
+    """Measured wall-time microbenchmarks (CPU, reduced configs): the
+    runnable-path sanity numbers."""
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import timed
+    from repro.configs import REGISTRY, ShapeConfig, reduced
+    from repro.data import SyntheticLM
+    from repro.models import build_model
+    from repro.training import AdamW, make_train_step
+
+    rows = []
+    for arch in ("yi-6b", "qwen2-moe-a2.7b", "xlstm-125m"):
+        cfg = reduced(REGISTRY[arch])
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        data = SyntheticLM(cfg, ShapeConfig("b", 64, 4, "train"))
+        batch = jax.tree.map(jnp.asarray, data.batch_at(0))
+        opt = AdamW(warmup_steps=1, total_steps=100)
+        step = jax.jit(make_train_step(model, opt, remat=False))
+        st = opt.init(params)
+        jax.block_until_ready(step(params, st, batch))  # warmup/compile
+        (_, us) = timed(lambda: jax.block_until_ready(
+            step(params, st, batch)), repeat=5)
+        tok = 64 * 4
+        rows.append((f"micro/train_step/{arch}", us,
+                     f"tokens_per_s={tok/(us/1e6):.0f} (reduced cfg; CPU)"))
+    return rows
+
+
+def main() -> None:
+    from benchmarks import paper_tables as P
+    from benchmarks.roofline import roofline_rows
+    from benchmarks.tpu_tradeoff import rows as tpu_rows
+
+    sections = {
+        "table5": P.table5,
+        "table6": P.table6,
+        "table7": P.table7,
+        "fig2": P.fig2,
+        "fig10": P.fig10,
+        "ablation": P.step_by_step,
+        "q1": P.q1_cross_platform,
+        "tpu_tradeoff": tpu_rows,
+        "roofline": roofline_rows,
+        "micro": micro_rows,
+    }
+    only = sys.argv[1:] or list(sections)
+    print("name,us_per_call,derived")
+    for key in only:
+        fn = sections.get(key)
+        if fn is None:
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # keep the harness running
+            print(f"{key}/ERROR,0,{type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""TPU-side SSR latency-throughput tradeoff — the paper's technique applied
+to the assigned LM architectures on the v5e pod (256 chips).
+
+For a heterogeneous stack (jamba: mamba/attention/MoE layer shapes differ;
+qwen2-moe: router+experts vs attention) the hybrid layer→acc search has
+room to specialize stage submeshes; for a uniform dense LM (yi-6b) it
+should collapse onto sequential (DESIGN.md §7).  This is the TPU analogue
+of paper Table 6.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.configs import SHAPES, get_config
+from repro.core import (build_graph, pareto_front, sequential_assignment,
+                        simulate, strategy_points)
+from repro.core.hw import TPU_V5E
+
+CELLS = [
+    ("jamba-1.5-large-398b", "prefill_32k"),
+    ("qwen2-moe-a2.7b", "prefill_32k"),
+    ("yi-6b", "prefill_32k"),
+]
+
+
+def rows() -> List[Tuple[str, float, str]]:
+    out = []
+    for arch, shape in CELLS:
+        g = build_graph(get_config(arch), SHAPES[shape])
+        t0 = time.perf_counter()
+        pts = strategy_points(g, 256, hw=TPU_V5E, batches=(1, 2, 4),
+                              hybrid_accs=(2, 4), ea_iters=3)
+        us = (time.perf_counter() - t0) * 1e6
+        front = pareto_front(pts)
+        seq = [p for p in pts if p.strategy == "sequential"
+               and p.n_batches == 1][0]
+        best = max(pts, key=lambda p: p.throughput_tops)
+        out.append((
+            f"tpu_tradeoff/{arch}", us,
+            f"seq_lat_s={seq.latency:.3f} seq_tops={seq.throughput_tops:.0f} "
+            f"best={best.strategy}(accs={best.n_acc},b={best.n_batches}) "
+            f"best_tops={best.throughput_tops:.0f} "
+            f"hybrid_gain={best.throughput_tops/seq.throughput_tops:.2f}x "
+            f"front={[p.strategy for p in front]}"))
+    return out

@@ -1,0 +1,59 @@
+"""SSR design-space exploration — the paper's core workflow (§4):
+
+given an architecture and a target platform, run the Layer→Acc evolutionary
+search across accelerator counts and batch pipelining depths, and print the
+latency-throughput Pareto front with the winning strategy per point
+(paper Fig. 2 / Table 6).
+
+    PYTHONPATH=src python examples/pareto_explore.py --arch deit-t --plat vck190
+    PYTHONPATH=src python examples/pareto_explore.py --arch yi-6b \
+        --shape prefill_32k --plat tpu
+"""
+import argparse
+
+from repro.configs import REGISTRY, SHAPES
+from repro.configs.deit import vit_shape
+from repro.core import build_graph, pareto_front, strategy_points
+from repro.core.hw import TPU_V5E
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deit-t")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--plat", default="vck190", choices=["vck190", "tpu"])
+    ap.add_argument("--batch", type=int, default=6)
+    args = ap.parse_args()
+
+    cfg = REGISTRY[args.arch]
+    if args.plat == "vck190":
+        from benchmarks.common import BOARD_UNITS, VCK190_UNIT
+        hw, chips = VCK190_UNIT, BOARD_UNITS
+        shape = vit_shape(args.batch) if cfg.family == "vision" \
+            else SHAPES[args.shape or "prefill_32k"]
+        gran = "op"
+    else:
+        hw, chips = TPU_V5E, 256
+        shape = SHAPES[args.shape or "prefill_32k"]
+        gran = "block"
+
+    g = build_graph(cfg, shape, granularity=gran)
+    print(f"graph: {len(g.nodes)} nodes, "
+          f"{g.total_mm_flops/1e12:.2f} TFLOP total on {hw.name} x{chips}")
+    pts = strategy_points(g, chips, hw=hw, batches=(1, 2, 4, 6),
+                          hybrid_accs=(2, 4), ea_iters=4)
+    front = pareto_front(pts)
+
+    print(f"\n{'strategy':12s} {'accs':>4s} {'batches':>7s} "
+          f"{'latency_ms':>11s} {'TOPS':>8s}  on_front")
+    fs = set(id(p) for p in front)
+    for p in sorted(pts, key=lambda p: p.latency):
+        mark = "  *" if id(p) in fs else ""
+        print(f"{p.strategy:12s} {p.n_acc:4d} {p.n_batches:7d} "
+              f"{p.latency*1e3:11.3f} {p.throughput_tops:8.2f}{mark}")
+    print(f"\nPareto front: {len(front)} points "
+          f"({sum(1 for p in front if p.strategy == 'hybrid')} hybrid)")
+
+
+if __name__ == "__main__":
+    main()

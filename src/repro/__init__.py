@@ -1,0 +1,3 @@
+"""repro: SSR (FPGA'24) spatial-sequential hybrid architecture as a
+multi-pod JAX framework for TPU v5e.  See README.md / DESIGN.md."""
+__version__ = "1.0.0"

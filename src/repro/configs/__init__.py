@@ -1,0 +1,44 @@
+"""Config registry: ``get_config(name)`` / ``ARCHS`` (the 10 assigned archs)
+plus the paper's own DeiT family."""
+from repro.configs.base import (ALL_SHAPES, LONG_500K, SHAPES, SMOKE_DECODE,
+                                SMOKE_SHAPE, BlockSpec, ModelConfig,
+                                MoEConfig, ShapeConfig, SSMConfig,
+                                XLSTMConfig, reduced, shapes_for)
+from repro.configs.deit import DEIT_160, DEIT_256, DEIT_T, LV_VIT_T, vit_shape
+from repro.configs.gemma2_9b import CONFIG as GEMMA2_9B
+from repro.configs.granite_moe_1b_a400m import CONFIG as GRANITE_MOE
+from repro.configs.jamba_1_5_large_398b import CONFIG as JAMBA_398B
+from repro.configs.nemotron_4_15b import CONFIG as NEMOTRON_15B
+from repro.configs.qwen2_moe_a2_7b import CONFIG as QWEN2_MOE
+from repro.configs.qwen2_vl_72b import CONFIG as QWEN2_VL_72B
+from repro.configs.whisper_base import CONFIG as WHISPER_BASE
+from repro.configs.xlstm_125m import CONFIG as XLSTM_125M
+from repro.configs.yi_34b import CONFIG as YI_34B
+from repro.configs.yi_6b import CONFIG as YI_6B
+
+# The 10 assigned architectures, in the assignment's order.
+ARCHS = {
+    c.name: c for c in (
+        QWEN2_MOE, GRANITE_MOE, WHISPER_BASE, JAMBA_398B, QWEN2_VL_72B,
+        YI_34B, YI_6B, NEMOTRON_15B, GEMMA2_9B, XLSTM_125M,
+    )
+}
+
+# Paper models (FPGA'24 Table 3).
+PAPER_MODELS = {c.name: c for c in (DEIT_T, DEIT_160, DEIT_256, LV_VIT_T)}
+
+REGISTRY = {**ARCHS, **PAPER_MODELS}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+__all__ = [
+    "ARCHS", "PAPER_MODELS", "REGISTRY", "get_config", "reduced",
+    "shapes_for", "vit_shape", "ALL_SHAPES", "SHAPES", "LONG_500K",
+    "SMOKE_SHAPE", "SMOKE_DECODE", "ModelConfig", "ShapeConfig", "MoEConfig",
+    "SSMConfig", "XLSTMConfig", "BlockSpec",
+]

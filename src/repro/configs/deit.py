@@ -1,0 +1,40 @@
+"""The paper's own models (Table 3): DeiT-T, DeiT-160, DeiT-256, LV-ViT-T.
+
+Encoder-only vision transformers for image classification; 196 patches + 1
+cls token = 197 sequence positions at 224x224/16.  These drive the paper
+reproduction benchmarks (Tables 5-7, Figs 2/10).  The patch-embedding conv
+is a stub (``input_specs()`` provides patch embeddings), matching how the
+assigned-modality archs are handled.
+"""
+from repro.configs.base import BlockSpec, ModelConfig, ShapeConfig
+
+
+def _vit(name, heads, dim, depth, d_ff=None):
+    return ModelConfig(
+        name=name,
+        family="vision",
+        num_layers=depth,
+        d_model=dim,
+        num_heads=heads,
+        num_kv_heads=heads,
+        d_ff=d_ff if d_ff is not None else 4 * dim,
+        vocab_size=1000,              # classifier head
+        block_pattern=(BlockSpec("attn", "dense"),),
+        mlp_activation="gelu",
+        gated_mlp=False,
+        norm_kind="layernorm",
+        rope_theta=0.0,               # learned positions
+        frontend="vision",
+    )
+
+
+DEIT_T = _vit("deit-t", heads=3, dim=192, depth=12)
+DEIT_160 = _vit("deit-160", heads=4, dim=160, depth=12)
+DEIT_256 = _vit("deit-256", heads=4, dim=256, depth=12)
+LV_VIT_T = _vit("lv-vit-t", heads=4, dim=240, depth=12)
+
+VIT_SEQ = 197  # 196 patches + cls
+
+
+def vit_shape(batch: int) -> ShapeConfig:
+    return ShapeConfig(f"vit_b{batch}", VIT_SEQ, batch, "prefill")

@@ -1,0 +1,36 @@
+"""Jamba-1.5-Large (398B total / 94B active class)  [arXiv:2403.19887].
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536.
+Mamba:attention 1:7 interleave (one attention layer per 8-layer period,
+position 3 inside the period, as in the released model), MoE 16 experts
+top-2 on every other layer.
+"""
+from repro.configs.base import BlockSpec, ModelConfig, MoEConfig, SSMConfig
+
+_PERIOD = []
+for i in range(8):
+    mixer = "attn" if i == 3 else "mamba"
+    ffn = "moe" if i % 2 == 1 else "dense"
+    _PERIOD.append(BlockSpec(mixer, ffn))
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=24_576,
+    vocab_size=65_536,
+    block_pattern=tuple(_PERIOD),
+    moe=MoEConfig(
+        num_experts=16,
+        experts_per_token=2,
+        expert_d_ff=24_576,
+    ),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+    rope_theta=0.0,               # jamba attention layers use no RoPE
+    mlp_activation="silu",
+    norm_kind="rmsnorm",
+    subquadratic=True,            # mamba-dominated: long_500k applies
+)

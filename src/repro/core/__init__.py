@@ -1,0 +1,14 @@
+"""SSR core: the paper's contribution — layer-graph IR, analytical TPU cost
+model, Layer→Acc evolutionary search (Alg. 1), inter-acc-aware
+customization (Alg. 2), pipeline scheduling, Pareto exploration."""
+from repro.core.assignment import (Assignment, ScheduleResult,
+                                   contiguous_assignment,
+                                   sequential_assignment, simulate,
+                                   spatial_assignment)
+from repro.core.costmodel import AccConfig, Features, node_time, stage_time
+from repro.core.ea import (DSEResult, evolutionary_search, exhaustive_search,
+                           ssr_dse)
+from repro.core.graph import Graph, MatmulShape, Node, build_graph, model_flops
+from repro.core.hw import CHIPS, TPU_V5E, VCK190, mxu_efficiency
+from repro.core.pareto import (DesignPoint, best_under_latency, pareto_front,
+                               strategy_points)

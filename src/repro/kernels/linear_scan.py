@@ -1,0 +1,71 @@
+"""Gated linear recurrence Pallas TPU kernel:  h_t = a_t * h_{t-1} + b_t.
+
+Backs the Mamba selective scan (jamba) and the xLSTM recurrences.  The GPU
+formulation (CUDA selective-scan with warp shuffles) does not transfer;
+the TPU-native shape is: grid over (rows, feature blocks), sequential over
+sequence blocks, with the carry h held in VMEM scratch — the sequence
+streams HBM→VMEM once and states never rematerialize in HBM (the same
+"single streaming pass with carried state" idea as SSR's line buffer).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, h0_ref, o_ref, h_ref, *, block_s):
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        h_ref[...] = h0_ref[...].astype(jnp.float32)  # (1, bf)
+
+    a = a_ref[0].astype(jnp.float32)                 # (bs, bf)
+    b = b_ref[0].astype(jnp.float32)
+    h = h_ref[...]                                   # (1, bf)
+
+    def step(t, carry):
+        h, out = carry
+        h = a[t][None, :] * h + b[t][None, :]
+        out = jax.lax.dynamic_update_slice(out, h, (t, 0))
+        return h, out
+
+    out0 = jnp.zeros((block_s, a.shape[1]), jnp.float32)
+    h, out = jax.lax.fori_loop(0, block_s, step, (h, out0))
+    h_ref[...] = h
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_f",
+                                             "interpret"))
+def linear_scan(a, b, h0=None, *, block_s=256, block_f=512, interpret=False):
+    """a, b: (N, S, F); h0: (N, F) or None.  Returns h_all (N, S, F)."""
+    n, s, f = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((n, f), jnp.float32)
+    bs = min(block_s, s)
+    bf = min(block_f, f)
+    assert s % bs == 0 and f % bf == 0, (s, f, bs, bf)
+
+    kernel = functools.partial(_scan_kernel, block_s=bs)
+    # NB: the sequential (sequence) dimension is the *last* grid dim so the
+    # VMEM carry scratch persists correctly between consecutive steps.
+    return pl.pallas_call(
+        kernel,
+        grid=(n, f // bf, s // bs),
+        in_specs=[
+            pl.BlockSpec((1, bs, bf), lambda i, fb, sb: (i, sb, fb)),
+            pl.BlockSpec((1, bs, bf), lambda i, fb, sb: (i, sb, fb)),
+            pl.BlockSpec((1, bf), lambda i, fb, sb: (i, fb)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bf), lambda i, fb, sb: (i, sb, fb)),
+        out_shape=jax.ShapeDtypeStruct((n, s, f), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bf), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+used by the per-kernel sweep tests and by the CPU execution path)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, q_pos, k_pos, k_valid, *, causal=True,
+                        window=0, softcap=0.0):
+    """q: (B,H,Sq,D), k/v: (B,Hkv,Skv,D) -> (B,H,Sq,D).  Plain softmax."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    groups = h // hkv
+    k = jnp.repeat(k, groups, axis=1)
+    v = jnp.repeat(v, groups, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    rel = q_pos[:, None] - k_pos[None, :]
+    ok = k_valid[None, :] > 0
+    if causal:
+        ok &= rel >= 0
+    if window > 0:
+        ok &= rel < window
+    s = jnp.where(ok, s, NEG_INF)
+    # guard fully-masked rows like the kernel (output 0, not nan)
+    any_ok = jnp.any(ok, axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    out = jnp.where(any_ok[None, None, :, None], out, 0.0)
+    return out.astype(q.dtype)
+
+
+def matmul_fused_ref(x, w, bias=None, *, activation="none", out_dtype=None):
+    acc = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    if activation == "gelu":
+        acc = jax.nn.gelu(acc, approximate=True)
+    elif activation == "silu":
+        acc = jax.nn.silu(acc)
+    elif activation == "relu2":
+        acc = jnp.square(jnp.maximum(acc, 0.0))
+    return acc.astype(out_dtype or x.dtype)
+
+
+def norm_onepass_ref(x, scale, bias=None, *, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * scale.astype(jnp.float32) + (0 if bias is None
+                                             else bias.astype(jnp.float32))
+    else:
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def linear_scan_ref(a, b, h0=None):
+    """a, b: (N, S, F) -> all states (N, S, F) via a plain sequential scan."""
+    n, s, f = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((n, f), jnp.float32)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    a_t = jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    b_t = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype)

@@ -1,0 +1,2 @@
+from repro.launch.mesh import (make_host_mesh, make_pipeline_mesh,
+                               make_production_mesh, use_mesh)

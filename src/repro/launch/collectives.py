@@ -1,0 +1,198 @@
+"""Parse collective traffic out of lowered/compiled HLO text.
+
+``cost_analysis()`` does not report collective bytes, so we walk the HLO:
+sum the operand/result sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, weighting ops inside
+``while`` bodies by the loop trip count (the scan over layer groups executes
+its collectives num_groups times even though they appear once in the text).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^\s*%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_CALL_RE = re.compile(
+    r"(?:to_apply|body|condition|branch_computations|called_computations|"
+    r"calls)=\{?%?([\w\.\-,% ]+)\}?")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all shapes in an op line's result part."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and ("->" in stripped or
+                                       stripped.startswith("ENTRY")):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            cur = m.group(1) if m else None
+            if cur:
+                comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _loop_trip_count(cond_lines: List[str]) -> int:
+    """Best-effort: the largest integer constant compared in the condition."""
+    best = 1
+    for ln in cond_lines:
+        if "constant(" in ln:
+            for m in _TRIP_RE.finditer(ln):
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_DOT_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\bdot\(")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+def _comp_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """Trip-count multiplier per computation (while bodies × trip count)."""
+    mult: Dict[str, float] = defaultdict(lambda: 1.0)
+    changed, guard = True, 0
+    while changed and guard < 6:
+        changed = False
+        guard += 1
+        for name, lines in comps.items():
+            base = mult[name]
+            for ln in lines:
+                m = _WHILE_RE.search(ln)
+                if m:
+                    cond, body = m.group(1), m.group(2)
+                    trips = _loop_trip_count(comps.get(cond, []))
+                    for target in (body, cond):
+                        new = base * trips
+                        if target in comps and mult[target] < new:
+                            mult[target] = new
+                            changed = True
+                cm = _CALL_RE.search(ln)
+                if cm:
+                    for target in re.split(r"[,\s%]+", cm.group(1)):
+                        if target in comps and mult[target] < base:
+                            mult[target] = base
+                            changed = True
+    return mult
+
+
+_DEF_RE = re.compile(r"^%?([\w\.\-]+)\s*=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _symbol_shapes(lines) -> Dict[str, List[int]]:
+    """name -> dims for every value defined in a computation (post-opt HLO
+    has no inline operand shapes, so dots need a symbol table)."""
+    syms: Dict[str, List[int]] = {}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            dims = [int(d) for d in m.group(3).split(",") if d.strip()]
+            syms[m.group(1)] = dims
+    return syms
+
+
+def dot_flops(hlo: str) -> float:
+    """Loop-aware matmul FLOPs: 2 × prod(result dims) × prod(contracting
+    dims), each dot weighted by its computation's while-loop trip count.
+    (XLA cost_analysis counts loop bodies once — this does not.)"""
+    comps = _split_computations(hlo)
+    mult = _comp_multipliers(comps)
+    total = 0.0
+    for name, lines in comps.items():
+        f = mult[name]
+        syms = None
+        for ln in lines:
+            if "dot(" not in ln:
+                continue
+            m = _DOT_RE.search(ln)
+            if not m:
+                continue
+            res_dims = [int(d) for d in m.group(2).split(",") if d.strip()]
+            res_n = 1
+            for d in res_dims:
+                res_n *= d
+            # contracting dim sizes come from the lhs operand's shape:
+            # inline if present, else via the computation's symbol table.
+            inside = ln.split("dot(", 1)[1]
+            shapes = _SHAPE_RE.findall(inside.split(",")[0])
+            if shapes:
+                lhs_dims = [int(d) for d in shapes[0][1].split(",")
+                            if d.strip()]
+            else:
+                if syms is None:
+                    syms = _symbol_shapes(lines)
+                op = inside.split(",")[0].split(")")[0].strip().lstrip("%")
+                lhs_dims = syms.get(op)
+                if lhs_dims is None:
+                    continue
+            cm = _LHS_CONTRACT_RE.search(ln)
+            contract = 1
+            if cm:
+                for idx in cm.group(1).split(","):
+                    if idx.strip() and int(idx) < len(lhs_dims):
+                        contract *= lhs_dims[int(idx)]
+            total += f * 2.0 * res_n * contract
+    return total
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Returns {collective_kind: bytes} (per device, trip-count weighted),
+    plus '_total'."""
+    comps = _split_computations(hlo)
+    mult = _comp_multipliers(comps)
+
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+    for name, lines in comps.items():
+        f = mult[name]
+        for ln in lines:
+            for kind in COLLECTIVES:
+                # match op name at the '= <shape> kind(' position
+                if re.search(rf"=\s*[a-z0-9\[\],\s()]*{kind}", ln) or \
+                   re.search(rf"\b{kind}(?:-start|-done)?\(", ln):
+                    # result shape(s) appear before the op name
+                    lhs = ln.split("=")[1] if "=" in ln else ln
+                    head = lhs.split(kind)[0]
+                    b = _shape_bytes(head)
+                    if b == 0:
+                        b = _shape_bytes(ln.split("=")[0])
+                    out[kind] += f * b
+                    counts[kind] += 1
+                    break
+    out["_total"] = sum(out[k] for k in COLLECTIVES)
+    out["_counts"] = counts  # type: ignore
+    return out

@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape) cell, lower + compile the step
+function (train_step / prefill / serve_step per shape kind) on the
+single-pod (16,16) and multi-pod (2,16,16) production meshes with
+ShapeDtypeStruct inputs (no allocation), then record:
+
+  * memory_analysis  (bytes/device — proves it fits),
+  * cost_analysis    (FLOPs / bytes for §Roofline),
+  * collective bytes (parsed from HLO — §Roofline third term),
+  * the three roofline terms + dominant bottleneck + MODEL_FLOPS ratio.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k \
+      --strategy pipeline:4   # SSR spatial/hybrid executor dry-run
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, get_config, shapes_for
+from repro.configs.base import LONG_500K, ModelConfig, ShapeConfig
+from repro.core.graph import build_graph, model_flops
+from repro.core.hw import TPU_V5E
+from repro.launch.collectives import collective_bytes, dot_flops
+from repro.launch.mesh import (make_pipeline_mesh, make_production_mesh,
+                               use_mesh)
+from repro.models import build_model
+from repro.sharding import input_shardings_tree, param_shardings
+from repro.training import AdamW, make_train_step
+
+
+def _tree_bytes_per_device(tree, shardings, n_dev: int) -> float:
+    total = 0.0
+    for leaf, shd in zip(jax.tree.leaves(tree), jax.tree.leaves(shardings)):
+        size = np.prod(leaf.shape) * np.dtype(leaf.dtype).itemsize
+        # shard count = product of mesh axis sizes used by the spec
+        spec = getattr(shd, "spec", None)
+        div = 1
+        if spec is not None:
+            mesh = shd.mesh
+            for entry in spec:
+                if entry is None:
+                    continue
+                names = entry if isinstance(entry, tuple) else (entry,)
+                for nm in names:
+                    div *= mesh.shape[nm]
+        total += size / div
+    return total
+
+
+def _auto_grad_accum(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Pick microbatching so each microbatch carries ≤2 sequences per
+    data shard (keeps remat'd activations within HBM)."""
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    per_shard = max(shape.global_batch // dp, 1)
+    ga = max(per_shard // 2, 1)
+    while ga > 1 and shape.global_batch % ga:   # ga must divide global batch
+        ga -= 1
+    return max(ga, 1)
+
+
+def step_fn_and_args(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     strategy: str = "sequential", *, grad_accum: int = 0,
+                     zero1: bool = True, expert_parallel: bool = False):
+    """Build (fn, args, in_shardings) for the cell."""
+    model = build_model(cfg)
+    specs = model.input_specs(shape)
+    params_sds = jax.eval_shape(model.init, jax.random.key(0))
+    # FSDP auto-enable: TP-only would leave >4GB of weights per device
+    pbytes = sum(np.prod(l.shape) * np.dtype(l.dtype).itemsize
+                 for l in jax.tree.leaves(params_sds))
+    tp = mesh.shape.get("model", 1)
+    fsdp = (pbytes / tp) > 4e9
+    pshard = param_shardings(params_sds, mesh, fsdp=fsdp,
+                             expert_parallel=expert_parallel)
+
+    if shape.kind == "train":
+        opt = AdamW()
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        from jax.sharding import NamedSharding
+        from repro.sharding import param_specs as _pspecs
+        from repro.training import zero1_specs
+        mspecs = _pspecs(params_sds, mesh, fsdp=fsdp,
+                         expert_parallel=expert_parallel)
+        if zero1:
+            mspecs = zero1_specs(mspecs, params_sds, mesh)
+        msh = jax.tree.map(lambda s: NamedSharding(mesh, s), mspecs,
+                           is_leaf=lambda x: hasattr(x, "_normalized_spec")
+                           or type(x).__name__ == "PartitionSpec")
+        oshard = type(opt_sds)(step=NamedSharding(
+            mesh, jax.sharding.PartitionSpec()), m=msh,
+            v=jax.tree.map(lambda s: s, msh))
+        bshard = input_shardings_tree(specs, mesh)
+        if strategy.startswith("pipeline"):
+            n_stages = int(strategy.split(":")[1])
+            from repro.pipeline import pipeline_forward
+
+            def fn(params, opt_state, batch):
+                # pipelined loss (SSR spatial/hybrid execution)
+                logits = pipeline_forward(model, params, batch, mesh,
+                                          n_stages, n_microbatches=n_stages)
+                labels = batch["labels"]
+                lp = jax.nn.log_softmax(logits, axis=-1)
+                nll = -jnp.take_along_axis(
+                    lp, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+                return jnp.mean(nll)
+            return fn, (params_sds, opt_sds, specs), \
+                (pshard, oshard, bshard), None
+        ga = grad_accum or _auto_grad_accum(cfg, shape, mesh)
+        step = make_train_step(model, opt, remat=True, grad_accum=ga)
+        return step, (params_sds, opt_sds, specs), \
+            (pshard, oshard, bshard), (pshard, oshard, None)
+
+    if shape.kind == "prefill":
+        bshard = input_shardings_tree(specs, mesh)
+
+        def fn(params, batch):
+            return model.prefill(params, batch, shape.seq_len)
+        return fn, (params_sds, specs), (pshard, bshard), None
+
+    # decode
+    from repro.serving import make_serve_step
+    serve = make_serve_step(model)
+    cache = specs.pop("cache")
+    tokens = specs.pop("tokens")
+    cidx = specs.pop("cache_index")
+    pos = specs.pop("positions", None)
+    cshard = input_shardings_tree({"cache": cache}, mesh)["cache"]
+    tshard = input_shardings_tree({"tokens": tokens}, mesh)["tokens"]
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ishard = NamedSharding(mesh, P())
+    args = (params_sds, cache, tokens, cidx)
+    shards = (pshard, cshard, tshard, ishard)
+    if pos is not None:
+        posshard = input_shardings_tree({"positions": pos}, mesh)["positions"]
+        args = args + (pos,)
+        shards = shards + (posshard,)
+    return serve, args, shards, None
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             strategy: str = "sequential", with_text: bool = True,
+             grad_accum: int = 0, expert_parallel: bool = False
+             ) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    applicable = shape in shapes_for(cfg) or shape.name != "long_500k"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "pure full-attention arch: long_500k requires "
+                          "sub-quadratic attention (DESIGN.md §skips)"}
+
+    if strategy.startswith("pipeline"):
+        n_stages = int(strategy.split(":")[1])
+        mesh = make_pipeline_mesh(n_stages, multi_pod=multi_pod)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+
+    t0 = time.perf_counter()
+    fn, args, in_sh, out_sh = step_fn_and_args(
+        cfg, shape, mesh, strategy, grad_accum=grad_accum,
+        expert_parallel=expert_parallel)
+    with use_mesh(mesh):
+        if out_sh is not None:
+            # train step: donate params+opt (buffer reuse — ZeRO-1 friendly)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=(0, 1))
+        else:
+            jitted = jax.jit(fn, in_shardings=in_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    # --- analyses ---
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and
+                k in ("flops", "bytes accessed", "transcendentals",
+                      "optimal_seconds")}
+    except Exception as e:  # pragma: no cover
+        cost = {"error": str(e)}
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = {a: float(getattr(ma, a)) for a in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, a)}
+    except Exception:
+        pass
+
+    arg_bytes_dev = _tree_bytes_per_device(
+        jax.tree.leaves((args,)), jax.tree.leaves((in_sh,)), n_dev) \
+        if in_sh is not None else 0.0
+
+    coll = {}
+    dflops = 0.0
+    if with_text:
+        try:
+            txt = compiled.as_text()
+            coll = collective_bytes(txt)
+            coll.pop("_counts", None)
+            dflops = dot_flops(txt)     # loop-aware (cost_analysis counts
+            del txt                     # while bodies once; this does not)
+        except Exception as e:  # pragma: no cover
+            coll = {"error": str(e)}
+
+    # --- roofline terms (per device) ---
+    hw = TPU_V5E
+    flops_static = cost.get("flops", 0.0)
+    flops_dev = dflops or flops_static
+    bytes_dev = cost.get("bytes accessed", 0.0)
+    # scale the (loop-body-once) byte count by the same loop expansion the
+    # dot FLOPs saw — documented approximation for the §Roofline memory term.
+    byte_scale = (flops_dev / flops_static) if flops_static else 1.0
+    bytes_scaled = bytes_dev * max(byte_scale, 1.0)
+    coll_dev = coll.get("_total", 0.0)
+    t_comp = flops_dev / hw.peak_flops
+    t_mem = bytes_scaled / hw.hbm_bw
+    t_coll = coll_dev / (hw.ici_links_per_axis * hw.ici_bw)
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_total = flops_dev * n_dev
+    ratio = mf / hlo_total if hlo_total else 0.0
+
+    return {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+        "strategy": strategy, "devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost_analysis": cost, "memory_analysis": mem,
+        "argument_bytes_per_device": arg_bytes_dev,
+        "collective_bytes": coll,
+        "roofline": {**terms, "dominant": dominant,
+                     "model_flops": mf,
+                     "hlo_flops_per_dev_static": flops_static,
+                     "hlo_flops_per_dev": flops_dev,
+                     "hlo_bytes_per_dev_scaled": bytes_scaled,
+                     "hlo_flops_total": hlo_total,
+                     "model_to_hlo_ratio": ratio},
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default="sequential")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-text", action="store_true",
+                    help="skip HLO text parsing (faster)")
+    ap.add_argument("--grad-accum", type=int, default=0,
+                    help="0 = auto (≤2 sequences per microbatch per shard)")
+    ap.add_argument("--ep", action="store_true",
+                    help="expert-parallel MoE sharding (experts over model)")
+    ap.add_argument("--tag", default="", help="suffix for the output json")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        os.makedirs(args.out, exist_ok=True)
+        failures = []
+        for arch in ARCHS:
+            for shp in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+                tag = "mp" if args.multi_pod else "sp"
+                out_file = os.path.join(args.out,
+                                        f"{arch}__{shp}__{tag}.json")
+                if os.path.exists(out_file):
+                    print(f"[skip existing] {out_file}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shp, "--out", args.out]
+                if args.multi_pod:
+                    cmd.append("--multi-pod")
+                if args.no_text:
+                    cmd.append("--no-text")
+                print(f"[run] {arch} x {shp} ({tag})", flush=True)
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                if r.returncode != 0:
+                    failures.append((arch, shp))
+                    print(r.stdout[-2000:])
+                    print(r.stderr[-4000:])
+        print(f"done; failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    res = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   strategy=args.strategy, with_text=not args.no_text,
+                   grad_accum=args.grad_accum, expert_parallel=args.ep)
+    print(json.dumps(res, indent=2, default=str))
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        tag = "mp" if args.multi_pod else "sp"
+        sfx = "" if args.strategy == "sequential" else \
+            f"__{args.strategy.replace(':', '')}"
+        if args.tag:
+            sfx += f"__{args.tag}"
+        path = os.path.join(
+            args.out, f"{args.arch}__{args.shape}__{tag}{sfx}.json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Production meshes.
+
+``make_production_mesh`` builds the assignment's target meshes:
+  * single-pod: (16, 16) over ("data", "model") — 256 chips;
+  * multi-pod:  (2, 16, 16) over ("pod", "data", "model") — 512 chips.
+
+``make_pipeline_mesh`` carves an SSR ``stage`` axis out of the data axis for
+the spatial/hybrid executor.
+
+These are FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before first jax init while tests/benches see 1 device.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def _make_mesh(shape, axes):
+    # Auto axis types: we rely on GSPMD propagation + constraints.
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def use_mesh(mesh):
+    """Context manager putting `mesh` in ambient context (jax>=0.7:
+    jax.set_mesh; older: jax.sharding.use_mesh)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return jax.sharding.use_mesh(mesh)  # pragma: no cover
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _make_mesh(shape, axes)
+
+
+def make_pipeline_mesh(n_stages: int, *, model: int = 16, total: int = 256,
+                       multi_pod: bool = False):
+    """SSR spatial/hybrid mesh: ("stage", "data", "model").  The stage axis
+    is carved out of the data axis of the production mesh."""
+    if multi_pod:
+        total = 512
+    data = total // (n_stages * model)
+    assert data >= 1 and n_stages * data * model == total, \
+        (n_stages, data, model, total)
+    return _make_mesh((n_stages, data, model), ("stage", "data", "model"))
+
+
+def make_host_mesh(axes=("data", "model")):
+    """Whatever devices exist locally, as a small mesh (tests/examples)."""
+    n = len(jax.devices())
+    if len(axes) == 1:
+        return _make_mesh((n,), axes)
+    # put everything on data
+    return _make_mesh((n, 1), axes)

@@ -1,0 +1,509 @@
+"""Core transformer layer primitives (pure JAX, functional).
+
+Conventions:
+  * params are nested dicts of jnp arrays;
+  * activations ``x`` are (batch, seq, d_model);
+  * all matmuls accumulate in fp32 (``preferred_element_type``);
+  * attention softmax in fp32 (this is also what the Pallas flash kernel
+    does — see ``repro.kernels``).
+
+The SSR "fine-grained pipeline" for nonlinear ops appears here as the
+*dispatch point*: ``attention``/``rmsnorm`` route to the fused Pallas kernels
+on TPU (``repro.kernels.ops``) and to the jnp reference elsewhere.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None):
+    dim = dim or cfg.d_model
+    p = {"scale": jnp.ones((dim,), jnp.float32)}
+    if cfg.norm_kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm (gemma-style 1+scale for gemma configs is folded into init)
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float, mrope_sections=()):
+    """x: (B, S, H, D); positions: (B, S) or (3, B, S) for M-RoPE."""
+    b, s, h, d = x.shape
+    inv = rope_freqs(d, theta)                      # (d/2,)
+    if mrope_sections:
+        # M-RoPE: frequency bands split into (temporal, h, w) sections, each
+        # rotated by its own position stream.  positions: (3, B, S).
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        sec = jnp.concatenate([
+            jnp.full((n,), i, jnp.int32)
+            for i, n in enumerate(mrope_sections)])  # (d/2,)
+        pos = positions.astype(jnp.float32)          # (3, B, S)
+        # pick per-frequency position stream: (B, S, d/2)
+        pos_per_freq = jnp.take(pos, sec, axis=0)    # (d/2, B, S)
+        angles = jnp.einsum("fbs,f->bsf", pos_per_freq, inv)
+    else:
+        if positions.ndim == 3:
+            positions = positions[0]
+        angles = positions.astype(jnp.float32)[..., None] * inv  # (B,S,d/2)
+    cos = jnp.cos(angles)[:, :, None, :]             # (B,S,1,d/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, jnp.float32) * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((seq, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def sinusoidal_position_at(pos, dim: int):
+    """Single (possibly traced) position -> (dim,) sinusoidal embedding."""
+    div = jnp.exp(jnp.arange(0, dim, 2, jnp.float32) * (-math.log(10000.0) / dim))
+    ang = pos.astype(jnp.float32) * div
+    pe = jnp.zeros((dim,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang))
+    pe = pe.at[1::2].set(jnp.cos(ang))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    kq, kk, kv, ko = split_keys(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": dense_init(kq, (d, qd), d, dt),
+        "wk": dense_init(kk, (d, kvd), d, dt),
+        "wv": dense_init(kv, (d, kvd), d, dt),
+        "wo": dense_init(ko, (qd, d), qd, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(cfg, cfg.head_dim)
+        p["k_norm"] = init_norm(cfg, cfg.head_dim)
+    return p
+
+
+CHUNKED_ATTN_THRESHOLD = 8192   # chunk prefill queries beyond this length
+
+
+def _attend_block(qg, k, v, cfg, q_pos, k_pos, k_valid, causal, window, dt):
+    """One (q-block) x (full kv) attention.  qg: (B,cq,Hk,G,D)."""
+    b, cq = qg.shape[:2]
+    hd = qg.shape[-1]
+    rel = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(rel.shape, bool)
+    if causal:
+        ok &= rel >= 0
+    if window and window > 0:
+        ok &= rel < window
+    if k_valid is not None:
+        ok &= k_valid[None, :]
+    bias = jnp.where(ok, 0.0, -1e30)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if cfg.attn_logit_softcap > 0:
+        c = cfg.attn_logit_softcap
+        scores = c * jnp.tanh(scores / c)
+    scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(dt), v.astype(dt))
+    return out.reshape(b, cq, -1)
+
+
+def _attend(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, k_valid, causal,
+            window, dt):
+    """Core GQA attention with position-based masking.
+
+    q: (B,S,H,D); k,v: (B,T,Hkv,D); q_pos: (S,) absolute query positions;
+    k_pos: (T,) absolute key positions; k_valid: (T,) bool or None.
+    Dispatches to the fused flash kernel on TPU (repro.kernels.ops);
+    long-prefill falls back to q-chunked attention so the (S,T) score
+    matrix never materializes at full size (flash-attention structure,
+    visible to XLA on every backend — §Perf jamba iteration 2)."""
+    import os
+
+    from repro.kernels import ops as kops
+    b, s, h, hd = q.shape
+    hk = k.shape[2]
+    groups = h // hk
+
+    if kops.use_flash(cfg, q, k):
+        return kops.flash_attention(
+            q, k, v, q_pos=q_pos, k_pos=k_pos, k_valid=k_valid,
+            causal=causal, window=window,
+            softcap=cfg.attn_logit_softcap).astype(dt)
+
+    qg = q.reshape(b, s, hk, groups, hd)
+    thresh = int(os.environ.get("REPRO_CHUNKED_ATTN",
+                                CHUNKED_ATTN_THRESHOLD))
+    if thresh and s > thresh and s % (cq := thresh // 4) == 0:
+        nc = s // cq
+        qc = jnp.moveaxis(qg.reshape(b, nc, cq, hk, groups, hd), 1, 0)
+        pc = q_pos.reshape(nc, cq)
+
+        def body(_, inp):
+            q_i, p_i = inp
+            o = _attend_block(q_i, k, v, cfg, p_i, k_pos, k_valid,
+                              causal, window, dt)
+            return None, o
+        _, outs = lax.scan(body, None, (qc, pc))
+        return jnp.moveaxis(outs, 0, 1).reshape(b, s, h * hd)
+
+    return _attend_block(qg, k, v, cfg, q_pos, k_pos, k_valid, causal,
+                         window, dt)
+
+
+def cross_kv(p, enc_out, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output (cached once at
+    prefill so decode steps skip the projections)."""
+    b, t, _ = enc_out.shape
+    hk, hd = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.einsum("bsd,dq->bsq", enc_out, p["wk"],
+                   preferred_element_type=jnp.float32)
+    v = jnp.einsum("bsd,dq->bsq", enc_out, p["wv"],
+                   preferred_element_type=jnp.float32)
+    return (k.astype(enc_out.dtype).reshape(b, t, hk, hd),
+            v.astype(enc_out.dtype).reshape(b, t, hk, hd))
+
+
+def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
+                         causal=True, window=0, kv_cache=None,
+                         cache_index=None, kv_source=None, use_rope=True,
+                         precomputed_kv=None):
+    """General attention supporting GQA, RoPE/M-RoPE, logit softcap, sliding
+    window (ring-buffer cache), cross-attention (``kv_source``), and KV-cache
+    prefill/decode.
+
+    Modes:
+      * train:   kv_cache is None — full attention over x itself.
+      * prefill: kv_cache given, x length > 1 — attend over fresh k/v and
+                 write the (window-)tail into the cache.
+      * decode:  kv_cache given, x length small — read/modify/write cache.
+
+    kv_cache: {"k": (B, W, Hkv, D), "v": ...} where W is max_seq for global
+    attention or the window size (ring buffer) for local attention.
+    cache_index: scalar int — tokens already in the cache.
+    Returns (out, new_kv_cache_or_None).
+    """
+    b, s, _ = x.shape
+    h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = x.dtype
+
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(dt)
+    q = q.reshape(b, s, h, hd)
+    if precomputed_kv is not None:
+        k, v = precomputed_kv
+        kv_source = k          # marks cross-attention (no rope on k, no causal)
+    else:
+        kv_in = x if kv_source is None else kv_source
+        k = jnp.einsum("bsd,dq->bsq", kv_in, p["wk"],
+                       preferred_element_type=jnp.float32).astype(dt)
+        v = jnp.einsum("bsd,dq->bsq", kv_in, p["wv"],
+                       preferred_element_type=jnp.float32).astype(dt)
+        k = k.reshape(b, kv_in.shape[1], hk, hd)
+        v = v.reshape(b, kv_in.shape[1], hk, hd)
+
+    if "q_norm" in p:
+        q = apply_norm(p["q_norm"], q, cfg)
+        k = apply_norm(p["k_norm"], k, cfg)
+
+    offset = 0 if cache_index is None else cache_index
+    if positions is None:
+        base = offset + jnp.arange(s)[None, :]
+        positions = jnp.broadcast_to(base, (b, s))
+    if use_rope and cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        if kv_source is None:
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+
+    causal = causal and kv_source is None
+    q_pos = jnp.arange(s) + offset
+
+    if kv_cache is None:
+        out = _attend(q, k, v, cfg, q_pos=q_pos, k_pos=jnp.arange(k.shape[1]),
+                      k_valid=None, causal=causal, window=window, dt=dt)
+        new_cache = None
+    else:
+        W = kv_cache["k"].shape[1]
+        cdt = kv_cache["k"].dtype
+        if s > 1:
+            # ---- prefill: attend over the fresh full-length k/v ----
+            out = _attend(q, k, v, cfg, q_pos=q_pos,
+                          k_pos=jnp.arange(k.shape[1]), k_valid=None,
+                          causal=causal, window=window, dt=dt)
+            # write the last min(s, W) tokens into (ring) cache slots.
+            tail = min(s, W)
+            k_tail = k[:, s - tail:].astype(cdt)
+            v_tail = v[:, s - tail:].astype(cdt)
+            tail_pos = offset + jnp.arange(s - tail, s)
+            slots = tail_pos % W
+            new_k = kv_cache["k"].at[:, slots].set(k_tail)
+            new_v = kv_cache["v"].at[:, slots].set(v_tail)
+            new_cache = {"k": new_k, "v": new_v}
+        else:
+            # ---- decode: ring write then attend over the cache ----
+            t_new = offset + s                       # total tokens after step
+            slots = (offset + jnp.arange(s)) % W
+            new_k = kv_cache["k"].at[:, slots].set(k.astype(cdt))
+            new_v = kv_cache["v"].at[:, slots].set(v.astype(cdt))
+            new_cache = {"k": new_k, "v": new_v}
+            i = jnp.arange(W)
+            k_pos = (t_new - 1) - ((t_new - 1 - i) % W)
+            k_valid = k_pos >= 0
+            out = _attend(q, new_k, new_v, cfg, q_pos=q_pos, k_pos=k_pos,
+                          k_valid=k_valid, causal=causal, window=window,
+                          dt=dt)
+
+    out = jnp.einsum("bsq,qd->bsd", out, p["wo"],
+                     preferred_element_type=jnp.float32).astype(dt)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def _act(name):
+    return {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True),
+            "relu2": lambda x: jnp.square(jax.nn.relu(x))}[name]
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 3)
+    p = {"wi": dense_init(ks[0], (cfg.d_model, d_ff), cfg.d_model, dt),
+         "wo": dense_init(ks[1], (d_ff, cfg.d_model), d_ff, dt)}
+    if cfg.gated_mlp:
+        p["wg"] = dense_init(ks[2], (cfg.d_model, d_ff), cfg.d_model, dt)
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    hid = jnp.einsum("bsd,df->bsf", x, p["wi"],
+                     preferred_element_type=jnp.float32)
+    act = _act(cfg.mlp_activation)
+    if "wg" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["wg"],
+                          preferred_element_type=jnp.float32)
+        hid = act(gate) * hid
+    else:
+        hid = act(hid)
+    out = jnp.einsum("bsf,fd->bsd", hid.astype(dt), p["wo"],
+                     preferred_element_type=jnp.float32)
+    return out.astype(dt)
+
+
+def init_moe(key, cfg: ModelConfig):
+    moe: MoEConfig = cfg.moe
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 6)
+    e, d, f = moe.num_experts, cfg.d_model, moe.expert_d_ff
+    p = {
+        "router": dense_init(ks[0], (d, e), d, jnp.float32),
+        "wi": dense_init(ks[1], (e, d, f), d, dt),
+        "wg": dense_init(ks[2], (e, d, f), d, dt),
+        "wo": dense_init(ks[3], (e, f, d), f, dt),
+    }
+    if moe.num_shared_experts:
+        sf = moe.shared_expert_d_ff
+        p["shared"] = {
+            "wi": dense_init(ks[4], (d, sf), d, dt),
+            "wg": dense_init(ks[5], (d, sf), d, dt),
+            "wo": dense_init(ks[4], (sf, d), sf, dt),
+        }
+    return p
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """GShard-style top-k capacity-limited dispatch (scatter/gather, no
+    (N,E,C) dense dispatch tensor): FLOPs scale with tokens*k*capacity_factor,
+    which keeps MODEL_FLOPS/HLO_FLOPS honest for the roofline."""
+    moe: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    e, k = moe.num_experts, moe.experts_per_token
+    # capacity per choice-round: each token contributes ONE slot per round,
+    # so a round routes n slots over e experts (not n*k — that would k²-
+    # inflate the expert matmul FLOPs).
+    cap = max(1, int(math.ceil(n * moe.capacity_factor / e)))
+    dt = x.dtype
+    xf = x.reshape(n, d)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = lax.top_k(probs, k)                       # (n, k)
+    top_w = top_w / jnp.sum(top_w, -1, keepdims=True)
+
+    # position-in-expert via per-round cumulative counts (GShard Alg.1,
+    # with one dispatch buffer per choice round).
+    pos_list, keep_list = [], []
+    for j in range(k):
+        onehot = jax.nn.one_hot(top_e[:, j], e, dtype=jnp.int32)   # (n, e)
+        pos = jnp.cumsum(onehot, axis=0) - 1
+        pos_j = jnp.sum(pos * onehot, axis=-1)                     # (n,)
+        keep_list.append(pos_j < cap)
+        pos_list.append(jnp.clip(pos_j, 0, cap - 1))
+
+    y = jnp.zeros((n, d), jnp.float32)
+    # dispatch buffers (e, cap, d) per choice are scatter-filled then
+    # expert-matmul'd; combine gathers back with routing weights.
+    for j in range(k):
+        idx_e = top_e[:, j]
+        idx_c = pos_list[j]
+        keep = keep_list[j]
+        buf = jnp.zeros((e, cap, d), dt)
+        src = jnp.where(keep[:, None], xf, 0).astype(dt)
+        buf = buf.at[idx_e, idx_c].add(src, mode="drop")
+        hid = jnp.einsum("ecd,edf->ecf", buf, p["wi"],
+                         preferred_element_type=jnp.float32)
+        gate = jnp.einsum("ecd,edf->ecf", buf, p["wg"],
+                          preferred_element_type=jnp.float32)
+        hid = (jax.nn.silu(gate) * hid).astype(dt)
+        out = jnp.einsum("ecf,efd->ecd", hid, p["wo"],
+                         preferred_element_type=jnp.float32)
+        tok_out = out[idx_e, idx_c]                                # (n, d)
+        y = y + jnp.where(keep[:, None], tok_out, 0) * top_w[:, j:j + 1]
+
+    if "shared" in p:
+        sh = p["shared"]
+        hid = jnp.einsum("nd,df->nf", xf, sh["wi"],
+                         preferred_element_type=jnp.float32)
+        gate = jnp.einsum("nd,df->nf", xf, sh["wg"],
+                          preferred_element_type=jnp.float32)
+        hid = (jax.nn.silu(gate) * hid).astype(dt)
+        y = y + jnp.einsum("nf,fd->nd", hid, sh["wo"],
+                           preferred_element_type=jnp.float32)
+
+    # auxiliary load-balance loss (Switch): stored for the training loop.
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return y.reshape(b, s, d).astype(dt), aux
+
+
+# ---------------------------------------------------------------------------
+# embeddings / heads
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"table": dense_init(key, (cfg.vocab_size, cfg.d_model), cfg.d_model, dt)}
+
+
+def embed(p, ids, cfg: ModelConfig):
+    out = jnp.take(p["table"], ids, axis=0)
+    if cfg.family == "dense" and cfg.tie_embeddings:
+        out = out * jnp.sqrt(jnp.float32(cfg.d_model)).astype(out.dtype)
+    return out
+
+
+def chunked_softmax_xent(x, w, labels, cfg: ModelConfig, *,
+                         chunk: int = 8192):
+    """Cross-entropy fused with the LM head over vocab chunks: the
+    (tokens × vocab) logits tensor never materializes — an online
+    logsumexp runs across vocab chunks (flash-softmax structure applied to
+    the loss; the dominant train activation for 256k-vocab archs).
+
+    x: (N, D) final hidden; w: (D, V); labels: (N,) int32 (< 0 = masked).
+    Returns per-token nll (N,)."""
+    n, d = x.shape
+    v = w.shape[1]
+    if v % chunk:
+        chunk = v  # fallback: single chunk
+    n_chunks = v // chunk
+    wc = w.T.reshape(n_chunks, chunk, d)      # (C, chunk, D)
+    cap = cfg.final_logit_softcap
+    xf = x.astype(jnp.float32)
+
+    def body(carry, inp):
+        m, l, tgt = carry
+        w_c, c_idx = inp
+        logits = jnp.einsum("nd,cd->nc", xf, w_c.astype(jnp.float32))
+        if cap > 0:
+            logits = cap * jnp.tanh(logits / cap)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        l = l * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[:, None]), axis=-1)
+        # pick up the target logit if it lives in this chunk
+        local = labels - c_idx * chunk
+        in_chunk = (local >= 0) & (local < chunk)
+        got = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, chunk - 1)[:, None], axis=-1)[:, 0]
+        tgt = jnp.where(in_chunk, got, tgt)
+        return (m_new, l, tgt), None
+
+    body = jax.checkpoint(body)   # recompute chunk logits in bwd
+    m0 = jnp.full((n,), -1e30, jnp.float32)
+    l0 = jnp.zeros((n,), jnp.float32)
+    t0 = jnp.zeros((n,), jnp.float32)
+    (m, l, tgt), _ = lax.scan(body, (m0, l0, t0),
+                              (wc, jnp.arange(n_chunks)))
+    lse = m + jnp.log(l)
+    return lse - tgt                          # (N,) nll
+
+
+def logits_head(p_embed, p_head, x, cfg: ModelConfig):
+    if cfg.tie_embeddings or p_head is None:   # (whisper ties decoder embed)
+        w = p_embed["table"].T
+    else:
+        w = p_head["w"]
+    out = jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=jnp.float32)
+    if cfg.final_logit_softcap > 0:
+        c = cfg.final_logit_softcap
+        out = c * jnp.tanh(out / c)
+    return out

@@ -1,0 +1,300 @@
+"""Model facade: init / forward / loss / prefill / decode for every family.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are pure functions of
+(params, batch) — suitable for jit/pjit, the SSR pipeline executor, and the
+dry-run's ``.lower().compile()``.
+
+Input contracts per family (see ``input_specs``):
+  * LM (dense/moe/hybrid/ssm):  tokens (B,S) i32, labels (B,S) i32
+  * vlm:   embeds (B,S,D) — merged text+vision embeddings (vision tower is a
+           stub per the assignment), positions (3,B,S) for M-RoPE
+  * audio: enc_embeds (B,S,D) frame embeddings (conv frontend stub),
+           dec_tokens (B,S/4), labels (B,S/4)
+  * vision (DeiT): embeds (B,197,D) patch embeddings, labels (B,) classes
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+AUDIO_DECODER_RATIO = 4  # decoder length = seq_len // 4 for audio shapes
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = L.split_keys(rng, 6)
+        params: Dict[str, Any] = {}
+        if cfg.family == "audio":
+            params["enc_stack"] = T.init_stack(ks[0], cfg)
+            params["enc_norm"] = L.init_norm(cfg)
+            params["embed"] = L.init_embedding(ks[1], cfg)
+            params["stack"] = T.init_stack(ks[2], cfg, cross=True)
+            params["final_norm"] = L.init_norm(cfg)
+        elif cfg.family == "vision":
+            params["pos_embed"] = 0.02 * jax.random.normal(
+                ks[0], (1, 256, cfg.d_model), jnp.float32)
+            params["cls"] = jnp.zeros((1, 1, cfg.d_model), jnp.float32)
+            params["stack"] = T.init_stack(ks[2], cfg)
+            params["final_norm"] = L.init_norm(cfg)
+            params["head"] = {"w": L.dense_init(
+                ks[3], (cfg.d_model, cfg.vocab_size), cfg.d_model,
+                jnp.dtype(cfg.param_dtype))}
+        else:  # LM families (dense / moe / hybrid / ssm / vlm)
+            params["embed"] = L.init_embedding(ks[1], cfg)
+            params["stack"] = T.init_stack(ks[2], cfg)
+            params["final_norm"] = L.init_norm(cfg)
+            if not cfg.tie_embeddings:
+                params["head"] = {"w": L.dense_init(
+                    ks[3], (cfg.d_model, cfg.vocab_size), cfg.d_model,
+                    jnp.dtype(cfg.param_dtype))}
+        return params
+
+    # --------------------------------------------------------------- forward
+    def _lm_hidden(self, params, x, *, positions=None, cache=None,
+                   cache_index=None, remat=False, collect_state=False):
+        cfg = self.cfg
+        x = T.shard_act(x)
+        x, new_cache, aux = T.run_stack(
+            params["stack"], x, cfg, positions=positions, causal=True,
+            cache=cache, cache_index=cache_index, remat=remat,
+            collect_state=collect_state)
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        return x, new_cache, aux
+
+    def _lm_trunk(self, params, x, *, positions=None, cache=None,
+                  cache_index=None, remat=False, collect_state=False):
+        x, new_cache, aux = self._lm_hidden(
+            params, x, positions=positions, cache=cache,
+            cache_index=cache_index, remat=remat,
+            collect_state=collect_state)
+        logits = L.logits_head(params.get("embed"), params.get("head"), x,
+                               self.cfg)
+        return logits, new_cache, aux
+
+    def _head_weight(self, params):
+        cfg = self.cfg
+        if cfg.tie_embeddings or params.get("head") is None:
+            return params["embed"]["table"].T
+        return params["head"]["w"]
+
+    def _use_chunked_ce(self) -> bool:
+        import os
+        thresh = int(os.environ.get("REPRO_CHUNKED_CE", 65536))
+        return bool(thresh) and self.cfg.vocab_size >= thresh \
+            and self.cfg.family not in ("vision",)
+
+    def forward(self, params, batch, *, remat: bool = False):
+        """Full forward pass -> (logits, aux_loss)."""
+        cfg = self.cfg
+        if cfg.family == "vision":
+            x = batch["embeds"].astype(cfg.dtype)
+            b, s, _ = x.shape
+            cls = jnp.broadcast_to(params["cls"].astype(cfg.dtype),
+                                   (b, 1, cfg.d_model))
+            x = jnp.concatenate([cls, x], axis=1)
+            x = x + params["pos_embed"][:, :s + 1].astype(cfg.dtype)
+            x, _, aux = T.run_stack(params["stack"], x, cfg, causal=False,
+                                    remat=remat)
+            x = L.apply_norm(params["final_norm"], x, cfg)
+            logits = jnp.einsum("bd,dv->bv", x[:, 0], params["head"]["w"],
+                                preferred_element_type=jnp.float32)
+            return logits, aux
+        if cfg.family == "audio":
+            enc = self.encode(params, batch["enc_embeds"], remat=remat)
+            y = L.embed(params["embed"], batch["dec_tokens"], cfg)
+            y = y.astype(cfg.dtype)
+            pos = L.sinusoidal_positions(y.shape[1], cfg.d_model)
+            y = y + pos[None].astype(cfg.dtype)
+            y, _, aux = T.run_stack(params["stack"], y, cfg, causal=True,
+                                    enc_out=enc, remat=remat)
+            y = L.apply_norm(params["final_norm"], y, cfg)
+            logits = L.logits_head(params["embed"], params.get("head"), y, cfg)
+            return logits, aux
+        # LM
+        if "embeds" in batch:
+            x = batch["embeds"].astype(cfg.dtype)
+        else:
+            x = L.embed(params["embed"], batch["tokens"], cfg).astype(cfg.dtype)
+        logits, _, aux = self._lm_trunk(
+            params, x, positions=batch.get("positions"), remat=remat)
+        return logits, aux
+
+    def encode(self, params, enc_embeds, *, remat=False):
+        cfg = self.cfg
+        x = enc_embeds.astype(cfg.dtype)
+        pos = L.sinusoidal_positions(x.shape[1], cfg.d_model)
+        x = x + pos[None].astype(cfg.dtype)
+        x, _, _ = T.run_stack(params["enc_stack"], x, cfg, causal=False,
+                              remat=remat)
+        return L.apply_norm(params["enc_norm"], x, cfg)
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch, *, remat: bool = False):
+        cfg = self.cfg
+        labels = batch["labels"]
+        if cfg.family == "vision":
+            logits, aux = self.forward(params, batch, remat=remat)
+            lp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(lp, labels[:, None], axis=-1)
+            return jnp.mean(nll) + 0.01 * aux
+
+        if self._use_chunked_ce():
+            # fused head+CE: the (tokens, vocab) logits never materialize
+            # (dominant train activation for 256k-vocab archs — §Perf).
+            hidden, aux = self._hidden_for_loss(params, batch, remat=remat)
+            n = hidden.shape[0] * hidden.shape[1]
+            nll = L.chunked_softmax_xent(
+                hidden.reshape(n, cfg.d_model), self._head_weight(params),
+                labels.reshape(n), cfg)
+            mask = (labels.reshape(n) >= 0).astype(jnp.float32)
+            loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+            return loss + 0.01 * aux
+
+        logits, aux = self.forward(params, batch, remat=remat)
+        mask = (labels >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, safe[..., None], axis=-1)[..., 0]
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return loss + 0.01 * aux
+
+    def _hidden_for_loss(self, params, batch, *, remat=False):
+        """Final hidden states (pre-head) for the fused-CE path."""
+        cfg = self.cfg
+        if cfg.family == "audio":
+            enc = self.encode(params, batch["enc_embeds"], remat=remat)
+            y = L.embed(params["embed"], batch["dec_tokens"], cfg)
+            y = y.astype(cfg.dtype)
+            pos = L.sinusoidal_positions(y.shape[1], cfg.d_model)
+            y = y + pos[None].astype(cfg.dtype)
+            y, _, aux = T.run_stack(params["stack"], y, cfg, causal=True,
+                                    enc_out=enc, remat=remat)
+            return L.apply_norm(params["final_norm"], y, cfg), aux
+        if "embeds" in batch:
+            x = batch["embeds"].astype(cfg.dtype)
+        else:
+            x = L.embed(params["embed"], batch["tokens"], cfg).astype(cfg.dtype)
+        hidden, _, aux = self._lm_hidden(
+            params, x, positions=batch.get("positions"), remat=remat)
+        return hidden, aux
+
+    # --------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_seq: int, enc_len: int = 0,
+                   factory=None):
+        return T.make_cache(self.cfg, batch, max_seq, enc_len=enc_len,
+                            factory=factory)
+
+    def prefill(self, params, batch, max_seq: int):
+        """Process the prompt; returns (logits_last, cache)."""
+        cfg = self.cfg
+        if cfg.family == "audio":
+            enc = self.encode(params, batch["enc_embeds"])
+            y = L.embed(params["embed"], batch["dec_tokens"], cfg)
+            y = y.astype(cfg.dtype)
+            pos = L.sinusoidal_positions(y.shape[1], cfg.d_model)
+            y = y + pos[None].astype(cfg.dtype)
+            cache = self.init_cache(y.shape[0], max_seq,
+                                    enc_len=enc.shape[1])
+            y, cache, _ = T.run_stack(
+                params["stack"], y, cfg, causal=True, enc_out=enc,
+                cache=cache, cache_index=jnp.int32(0), collect_state=True)
+            y = L.apply_norm(params["final_norm"], y, cfg)
+            logits = L.logits_head(params["embed"], params.get("head"),
+                                   y[:, -1:], cfg)
+            return logits, cache
+        if "embeds" in batch:
+            x = batch["embeds"].astype(cfg.dtype)
+        else:
+            x = L.embed(params["embed"], batch["tokens"], cfg).astype(cfg.dtype)
+        cache = self.init_cache(x.shape[0], max_seq)
+        logits, cache, _ = self._lm_trunk(
+            params, x, positions=batch.get("positions"), cache=cache,
+            cache_index=jnp.int32(0), collect_state=True)
+        return logits[:, -1:], cache
+
+    def decode_step(self, params, cache, tokens, cache_index,
+                    positions=None):
+        """One decode step.  tokens: (B, 1).  Returns (logits, new_cache)."""
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, cfg).astype(cfg.dtype)
+        if cfg.family == "audio":
+            pos = L.sinusoidal_position_at(cache_index, cfg.d_model)
+            x = x + pos[None, None].astype(cfg.dtype)
+            x, cache, _ = T.run_stack(
+                params["stack"], x, cfg, causal=True, cache=cache,
+                cache_index=cache_index, collect_state=True)
+            x = L.apply_norm(params["final_norm"], x, cfg)
+            logits = L.logits_head(params["embed"], params.get("head"), x, cfg)
+            return logits, cache
+        logits, cache, _ = self._lm_trunk(
+            params, x, positions=positions, cache=cache,
+            cache_index=cache_index, collect_state=True)
+        return logits, cache
+
+    # ------------------------------------------------------------ input spec
+    def input_specs(self, shape: ShapeConfig, *, batch_override: int = 0
+                    ) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this shape
+        (weak-type-correct, shardable, no device allocation)."""
+        cfg = self.cfg
+        B = batch_override or shape.global_batch
+        S = shape.seq_len
+        i32, dt = jnp.int32, jnp.dtype(cfg.dtype)
+
+        if cfg.family == "vision":
+            return {"embeds": _sds((B, S, cfg.d_model), dt),
+                    "labels": _sds((B,), i32)}
+
+        if cfg.family == "audio":
+            dec = max(S // AUDIO_DECODER_RATIO, 8)
+            if shape.is_decode:
+                cache = T.make_cache(cfg, B, S, enc_len=S, factory=_sds)
+                return {"tokens": _sds((B, 1), i32),
+                        "cache": cache,
+                        "cache_index": _sds((), i32)}
+            return {"enc_embeds": _sds((B, S, cfg.d_model), dt),
+                    "dec_tokens": _sds((B, dec), i32),
+                    "labels": _sds((B, dec), i32)}
+
+        if shape.is_decode:
+            spec = {"tokens": _sds((B, 1), i32),
+                    "cache": T.make_cache(cfg, B, S, factory=_sds),
+                    "cache_index": _sds((), i32)}
+            if cfg.mrope_sections:
+                spec["positions"] = _sds((3, B, 1), i32)
+            return spec
+
+        spec = {}
+        if cfg.family == "vlm":
+            spec["embeds"] = _sds((B, S, cfg.d_model), dt)
+        else:
+            spec["tokens"] = _sds((B, S), i32)
+        spec["labels"] = _sds((B, S), i32)
+        if cfg.mrope_sections:
+            spec["positions"] = _sds((3, B, S), i32)
+        return spec
+
+    # --------------------------------------------------------------- counts
+    def param_count(self, params) -> int:
+        return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

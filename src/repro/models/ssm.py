@@ -1,0 +1,389 @@
+"""State-space / recurrent mixers: Mamba-1 (jamba), mLSTM + sLSTM (xlstm).
+
+Each mixer exposes:
+  init_<kind>(key, cfg)                          -> params
+  apply_<kind>(p, x, cfg, state=None)            -> (y, new_state)
+where ``state`` is the O(1) recurrent state used for decode; ``state=None``
+runs the full-sequence (chunked-parallel where possible) form.
+
+The inner recurrences route through ``repro.kernels.ops.linear_scan`` (Pallas
+on TPU, chunked ``jax.lax`` elsewhere) — this is the TPU analogue of the
+paper's line-buffer fine-grained pipeline: a single streaming pass that
+carries running state instead of a second full read of the sequence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, split_keys
+
+# ---------------------------------------------------------------------------
+# generic gated linear recurrence   h_t = a_t * h_{t-1} + b_t
+# ---------------------------------------------------------------------------
+
+def mamba_scan_fused(delta, xi, Bm, Cm, A, h0=None, chunk: int = 128):
+    """Memory-lean selective scan: computes a_t = exp(Δ·A) and b_t = Δ·B·x
+    INSIDE the chunk loop so the (B,S,d_inner,d_state) gate/input tensors
+    never materialize in HBM — only (B,chunk,d_inner,d_state) working sets.
+    Returns (y = C·h per step (B,S,d_inner), h_last).
+
+    delta, xi: (B,S,di) fp32; Bm, Cm: (B,S,n) fp32; A: (di,n)."""
+    Bsz, S, di = delta.shape
+    n = A.shape[1]
+    if S % chunk:
+        chunk = S if S < chunk else math.gcd(S, chunk) or 1
+    n_chunks = S // chunk
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, di, n), jnp.float32)
+
+    def to_chunks(x):
+        return jnp.moveaxis(x, 1, 0).reshape((n_chunks, chunk) + x.shape[:1]
+                                             + x.shape[2:])
+
+    dc, xc, bc, cc = map(to_chunks, (delta, xi, Bm, Cm))
+
+    def body(h, inp):
+        d_c, x_c, b_c, c_c = inp                  # (chunk, B, ...)
+        a = jnp.exp(d_c[..., None] * A)           # (chunk,B,di,n)
+        b = (d_c * x_c)[..., None] * b_c[:, :, None, :]
+
+        def assoc(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, br + ar * bl
+        a_acc, b_acc = lax.associative_scan(assoc, (a, b), axis=0)
+        h_all = a_acc * h[None] + b_acc
+        y = jnp.einsum("tbin,tbn->tbi", h_all, c_c)
+        return h_all[-1], y
+
+    h_last, y_chunks = lax.scan(body, h0, (dc, xc, bc, cc))
+    y = jnp.moveaxis(y_chunks.reshape((S, Bsz, di)), 0, 1)
+    return y, h_last
+
+
+def linear_scan_chunked(a, b, h0=None, chunk: int = 128):
+    """Chunked scan along axis 1 (seq).  a, b: (B, S, ...) broadcastable.
+    Returns all h: (B, S, ...) and final state.  Memory stays O(B*chunk*state)
+    inside each chunk (the within-chunk scan is associative/parallel)."""
+    B, S = b.shape[0], b.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros_like(b[:, 0])
+    if S % chunk:
+        chunk = S if S < chunk else math.gcd(S, chunk) or 1
+    n_chunks = S // chunk
+
+    def body(h, ab):
+        a_c, b_c = ab                                   # (chunk, B, ...)
+        def assoc(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, br + ar * bl
+        a_acc, b_acc = lax.associative_scan(assoc, (a_c, b_c), axis=0)
+        h_all = a_acc * h[None] + b_acc                 # (chunk, B, ...)
+        return h_all[-1], h_all
+
+    a_t = jnp.moveaxis(a, 1, 0).reshape((n_chunks, chunk) + a.shape[:1] + a.shape[2:])
+    b_t = jnp.moveaxis(b, 1, 0).reshape((n_chunks, chunk) + b.shape[:1] + b.shape[2:])
+    h_last, h_chunks = lax.scan(body, h0, (a_t, b_t))
+    h_all = h_chunks.reshape((S,) + b.shape[:1] + b.shape[2:])
+    return jnp.moveaxis(h_all, 0, 1), h_last
+
+
+def _scan_dispatch(a, b, h0=None):
+    """Route the (B,S,di,n) recurrence through the Pallas linear-scan kernel
+    on TPU, chunked associative scan elsewhere.  Returns (h_all, h_last)."""
+    import os
+    mode = os.environ.get("REPRO_KERNELS", "auto")
+    on_tpu = jax.default_backend() == "tpu"
+    if (mode == "auto" and on_tpu) or mode in ("pallas", "interpret"):
+        from repro.kernels import ops as kops
+        B, S = a.shape[:2]
+        feat = a.shape[2:]
+        f = 1
+        for d in feat:
+            f *= d
+        h0f = None if h0 is None else h0.reshape(B, f)
+        h_all = kops.linear_scan(a.reshape(B, S, f), b.reshape(B, S, f), h0f)
+        h_all = h_all.reshape((B, S) + feat)
+        return h_all, h_all[:, -1].astype(jnp.float32)
+    return linear_scan_chunked(a, b, h0)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 mixer
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    dt_rank = cfg.ssm.dt_rank or math.ceil(cfg.d_model / 16)
+    return d_inner, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d, s = cfg.d_model, cfg.ssm.d_state
+    d_inner, dt_rank = mamba_dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 6)
+    a_init = jnp.tile(jnp.arange(1, s + 1, dtype=jnp.float32)[None, :],
+                      (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_inner), d, dt),
+        "conv_w": dense_init(ks[1], (cfg.ssm.d_conv, d_inner), cfg.ssm.d_conv,
+                             jnp.float32),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "x_proj": dense_init(ks[2], (d_inner, dt_rank + 2 * s), d_inner, dt),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_inner), dt_rank, jnp.float32),
+        "dt_bias": jnp.full((d_inner,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(a_init),                           # (d_inner, s)
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_inner, d), d_inner, dt),
+    }
+
+
+def _mamba_conv(p, x_in, conv_state):
+    """Depthwise causal conv over seq.  x_in: (B, S, d_inner).
+    conv_state: (B, d_conv-1, d_inner) history or None."""
+    k = p["conv_w"].shape[0]
+    B = x_in.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, k - 1, x_in.shape[-1]), x_in.dtype)
+    padded = jnp.concatenate([conv_state, x_in], axis=1)
+    out = jnp.zeros_like(x_in, dtype=jnp.float32)
+    for i in range(k):
+        out = out + padded[:, i:i + x_in.shape[1]].astype(jnp.float32) \
+            * p["conv_w"][i]
+    out = out + p["conv_b"]
+    new_state = padded[:, -(k - 1):]
+    return jax.nn.silu(out).astype(x_in.dtype), new_state
+
+
+def apply_mamba(p, x, cfg: ModelConfig, state: Optional[dict] = None):
+    """x: (B, S, d).  state: {"conv": (B,k-1,di), "ssm": (B,di,s)} or None."""
+    B, S, _ = x.shape
+    d_inner, dt_rank = mamba_dims(cfg)
+    n = cfg.ssm.d_state
+    dt_ = x.dtype
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"],
+                    preferred_element_type=jnp.float32).astype(dt_)
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = state["conv"] if state is not None else None
+    xi, new_conv = _mamba_conv(p, xi, conv_state)
+
+    proj = jnp.einsum("bsi,ie->bse", xi, p["x_proj"],
+                      preferred_element_type=jnp.float32)
+    dt_raw, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_raw, p["dt_proj"]) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                  # (di, n)
+
+    # selective SSM:  h_t = exp(delta*A) h_{t-1} + delta*B_t*x_t ; y = C_t.h
+    import os
+    h0 = state["ssm"] if state is not None else None
+    if os.environ.get("REPRO_MAMBA", "fused") == "fused" and S > 1:
+        # fused chunk path: gate/input tensors never materialize at full
+        # sequence length (hillclimb §Perf: -2x HBM on mamba layers)
+        y, h_last = mamba_scan_fused(delta, xi.astype(jnp.float32),
+                                     Bm, Cm, A, h0)
+    else:
+        a = jnp.exp(delta[..., None] * A)                     # (B,S,di,n)
+        b = (delta * xi.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+        h_all, h_last = _scan_dispatch(a, b, h0)
+        y = jnp.einsum("bsin,bsn->bsi", h_all, Cm)
+    y = y + xi.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(dt_)
+    return out, {"conv": new_conv, "ssm": h_last}
+
+
+def mamba_state_shape(cfg: ModelConfig, batch: int):
+    d_inner, _ = mamba_dims(cfg)
+    return {
+        "conv": (batch, cfg.ssm.d_conv - 1, d_inner),
+        "ssm": (batch, d_inner, cfg.ssm.d_state),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory)
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg: ModelConfig):
+    d_inner = int(cfg.xlstm.mlstm_proj_factor * cfg.d_model)
+    hd = d_inner // cfg.num_heads
+    return d_inner, hd
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, hd = mlstm_dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], (d, 2 * d_inner), d, dt),
+        "wq": dense_init(ks[1], (d_inner, d_inner), d_inner, dt),
+        "wk": dense_init(ks[2], (d_inner, d_inner), d_inner, dt),
+        "wv": dense_init(ks[3], (d_inner, d_inner), d_inner, dt),
+        "w_i": dense_init(ks[4], (d_inner, cfg.num_heads), d_inner, jnp.float32),
+        "w_f": dense_init(ks[5], (d_inner, cfg.num_heads), d_inner, jnp.float32),
+        "f_bias": jnp.full((cfg.num_heads,), 3.0, jnp.float32),
+        "out_norm": {"scale": jnp.ones((d_inner,), jnp.float32)},
+        "down_proj": dense_init(ks[6], (d_inner, d), d_inner, dt),
+    }
+
+
+def apply_mlstm(p, x, cfg: ModelConfig, state: Optional[dict] = None):
+    """Chunkwise-parallel mLSTM (TFLA-style, stabilized exponential gating).
+
+    state: {"C": (B,H,hd,hd), "n": (B,H,hd), "m": (B,H)} for decode."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    d_inner, hd = mlstm_dims(cfg)
+    dt_ = x.dtype
+
+    up = jnp.einsum("bsd,de->bse", x, p["up_proj"],
+                    preferred_element_type=jnp.float32).astype(dt_)
+    xin, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ef->bsf", xin, p["wq"],
+                   preferred_element_type=jnp.float32).reshape(B, S, H, hd)
+    k = jnp.einsum("bse,ef->bsf", xin, p["wk"],
+                   preferred_element_type=jnp.float32).reshape(B, S, H, hd)
+    v = jnp.einsum("bse,ef->bsf", xin, p["wv"],
+                   preferred_element_type=jnp.float32).reshape(B, S, H, hd)
+    q = q / math.sqrt(hd)
+    i_gate = jnp.einsum("bse,eh->bsh", xin.astype(jnp.float32), p["w_i"])
+    f_gate = jnp.einsum("bse,eh->bsh", xin.astype(jnp.float32), p["w_f"]) \
+        + p["f_bias"]
+    log_f = jax.nn.log_sigmoid(f_gate)                        # (B,S,H)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, lf_t = inp                        # (B,H,hd)...
+        m_new = jnp.maximum(lf_t + m, i_t)                    # (B,H)
+        f_eff = jnp.exp(lf_t + m - m_new)
+        i_eff = jnp.exp(i_t - m_new)
+        C = f_eff[..., None, None] * C \
+            + i_eff[..., None, None] * (k_t[..., :, None] * v_t[..., None, :])
+        n = f_eff[..., None] * n + i_eff[..., None] * k_t
+        num = jnp.einsum("bhd,bhde->bhe", q_t, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", q_t, n))
+        den = jnp.maximum(den, jnp.exp(-m_new))
+        h_t = num / den[..., None]
+        return (C, n, m_new), h_t
+
+    qs = jnp.moveaxis(q.astype(jnp.float32), 1, 0)
+    ks_ = jnp.moveaxis(k.astype(jnp.float32), 1, 0)
+    vs = jnp.moveaxis(v.astype(jnp.float32), 1, 0)
+    is_ = jnp.moveaxis(i_gate, 1, 0)
+    lfs = jnp.moveaxis(log_f, 1, 0)
+    (C, n, m), h = lax.scan(step, (C0, n0, m0), (qs, ks_, vs, is_, lfs))
+    h = jnp.moveaxis(h, 0, 1).reshape(B, S, d_inner)          # (B,S,di)
+
+    # group-norm-ish output norm per head then gate + down-project
+    hf = h.reshape(B, S, H, hd)
+    var = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
+    hf = hf * lax.rsqrt(var + 1e-6)
+    h = hf.reshape(B, S, d_inner) * p["out_norm"]["scale"]
+    h = (h * jax.nn.silu(z.astype(jnp.float32))).astype(dt_)
+    out = jnp.einsum("bse,ed->bsd", h, p["down_proj"],
+                     preferred_element_type=jnp.float32).astype(dt_)
+    return out, {"C": C, "n": n, "m": m}
+
+
+def mlstm_state_shape(cfg: ModelConfig, batch: int):
+    _, hd = mlstm_dims(cfg)
+    H = cfg.num_heads
+    return {"C": (batch, H, hd, hd), "n": (batch, H, hd), "m": (batch, H)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, recurrent mixing)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    H = cfg.num_heads
+    hd = d // H
+    ks = split_keys(key, 6)
+    d_ff = int(cfg.xlstm.slstm_proj_factor * d)
+    return {
+        # input weights for 4 gates (i, f, z, o)
+        "w_x": dense_init(ks[0], (d, 4 * d), d, dt),
+        # block-diagonal recurrent weights per head: (H, hd, 4*hd)
+        "w_h": dense_init(ks[1], (H, hd, 4 * hd), hd, jnp.float32),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "f_bias": jnp.full((d,), 3.0, jnp.float32),
+        "up": dense_init(ks[2], (d, 2 * d_ff), d, dt),
+        "down": dense_init(ks[3], (d_ff, d), d_ff, dt),
+    }
+
+
+def apply_slstm(p, x, cfg: ModelConfig, state: Optional[dict] = None):
+    """Strictly sequential scalar-memory LSTM with exponential gating.
+    state: {"c","n","h","m"} each (B, d)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    dt_ = x.dtype
+
+    gates_x = jnp.einsum("bsd,de->bse", x, p["w_x"],
+                         preferred_element_type=jnp.float32) + p["bias"]
+
+    if state is None:
+        zeros = jnp.zeros((B, d), jnp.float32)
+        c0, n0, h0 = zeros, zeros, zeros
+        m0 = jnp.full((B, d), -1e30, jnp.float32)
+    else:
+        c0, n0, h0, m0 = state["c"], state["n"], state["h"], state["m"]
+
+    w_h = p["w_h"]                                            # (H, hd, 4hd)
+
+    def step(carry, gx):
+        c, n, h, m = carry
+        hh = h.reshape(B, H, hd)
+        rec = jnp.einsum("bhi,hio->bho", hh, w_h).reshape(B, 4 * d)
+        g = gx + rec
+        i_r, f_r, z_r, o_r = jnp.split(g, 4, axis=-1)
+        f_r = f_r + p["f_bias"]
+        m_new = jnp.maximum(jax.nn.log_sigmoid(f_r) + m, i_r)
+        i_e = jnp.exp(i_r - m_new)
+        f_e = jnp.exp(jax.nn.log_sigmoid(f_r) + m - m_new)
+        c = f_e * c + i_e * jnp.tanh(z_r)
+        n = f_e * n + i_e
+        h_new = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h_new, m_new), h_new
+
+    gx_t = jnp.moveaxis(gates_x, 1, 0)
+    (c, n, h, m), hs = lax.scan(step, (c0, n0, h0, m0), gx_t)
+    hs = jnp.moveaxis(hs, 0, 1)                               # (B,S,d)
+
+    # post-up/down projection (GLU)
+    up = jnp.einsum("bsd,de->bse", hs.astype(dt_), p["up"],
+                    preferred_element_type=jnp.float32)
+    a, b = jnp.split(up, 2, axis=-1)
+    y = (jax.nn.gelu(a) * b).astype(dt_)
+    out = jnp.einsum("bse,ed->bsd", y, p["down"],
+                     preferred_element_type=jnp.float32).astype(dt_)
+    return out, {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_state_shape(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {"c": (batch, d), "n": (batch, d), "h": (batch, d),
+            "m": (batch, d)}

@@ -1,0 +1,281 @@
+"""Block assembly and full-model forward passes.
+
+The layer stack is organized as ``num_groups`` repetitions of the config's
+``block_pattern`` (one period).  Per-position parameters are stacked with a
+leading group axis and the stack is executed with ``jax.lax.scan`` — this
+keeps the lowered HLO size O(pattern) instead of O(num_layers), which is what
+makes 80-layer 72B dry-run compiles tractable and is also the deployment-
+grade structure (MaxText-style).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+
+# ---------------------------------------------------------------------------
+# sharding constraint helper (mesh-agnostic: no-op without an ambient mesh)
+# ---------------------------------------------------------------------------
+
+BATCH_AXES = ("pod", "data")
+
+
+def constrain(x, spec_axes):
+    """Apply a sharding constraint using only axes present in the ambient
+    abstract mesh.  spec_axes: tuple of axis-name-or-None per dim."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if mesh is None or not mesh.axis_names:
+        return x
+    names = set(mesh.axis_names)
+
+    def _filt(a):
+        if a is None:
+            return None
+        if isinstance(a, tuple):
+            kept = tuple(n for n in a if n in names)
+            return kept if kept else None
+        return a if a in names else None
+
+    spec = P(*[_filt(a) for a in spec_axes])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def shard_act(x):
+    """(B, S, D) activations: batch over (pod,data); with REPRO_SP=1 the
+    residual stream is additionally SEQUENCE-sharded over 'model' between
+    blocks (Megatron sequence parallelism): norms/elementwise run on 1/tp of
+    the tokens and the per-block TP all-reduce becomes reduce-scatter +
+    all-gather — half the ICI traffic (§Perf iteration)."""
+    import os
+    if x.ndim == 3:
+        if os.environ.get("REPRO_SP", "0") == "1" and x.shape[1] > 1:
+            try:
+                mesh = jax.sharding.get_abstract_mesh()
+                if mesh is not None and "model" in (mesh.axis_names or ()) \
+                        and x.shape[1] % mesh.shape["model"] == 0:
+                    return constrain(x, (BATCH_AXES, "model", None))
+            except Exception:
+                pass
+        return constrain(x, (BATCH_AXES, None, None))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, blk: BlockSpec, cross: bool = False):
+    ks = L.split_keys(key, 4)
+    p: Dict[str, Any] = {"norm1": L.init_norm(cfg)}
+    m = blk.mixer
+    if m.startswith("attn"):
+        p["mixer"] = L.init_attention(ks[0], cfg)
+    elif m == "mamba":
+        p["mixer"] = S.init_mamba(ks[0], cfg)
+    elif m == "mlstm":
+        p["mixer"] = S.init_mlstm(ks[0], cfg)
+    elif m == "slstm":
+        p["mixer"] = S.init_slstm(ks[0], cfg)
+    else:
+        raise ValueError(m)
+    if cross:
+        p["norm_x"] = L.init_norm(cfg)
+        p["cross"] = L.init_attention(ks[3], cfg, cross=True)
+    if blk.ffn != "none":
+        p["norm2"] = L.init_norm(cfg)
+        p["ffn"] = (L.init_moe(ks[1], cfg) if blk.ffn == "moe"
+                    else L.init_mlp(ks[1], cfg))
+    if cfg.post_block_norm:
+        p["post_norm1"] = L.init_norm(cfg)
+        if blk.ffn != "none":
+            p["post_norm2"] = L.init_norm(cfg)
+    return p
+
+
+def apply_block(p, x, cfg: ModelConfig, blk: BlockSpec, *,
+                positions=None, causal=True, state=None, cache_index=None,
+                enc_out=None):
+    """Returns (x, new_state, aux_loss)."""
+    m = blk.mixer
+    h = L.apply_norm(p["norm1"], x, cfg)
+    new_state = None
+    if m.startswith("attn"):
+        window = cfg.window_size if m == "attn_local" else 0
+        attn_cache = state.get("kv") if state else None
+        h, new_kv = L.multi_head_attention(
+            p["mixer"], h, cfg, positions=positions, causal=causal,
+            window=window, kv_cache=attn_cache, cache_index=cache_index)
+        new_state = {"kv": new_kv} if new_kv is not None else None
+    elif m == "mamba":
+        h, st = S.apply_mamba(p["mixer"], h, cfg,
+                              state=state.get("ssm_state") if state else None)
+        new_state = {"ssm_state": st}
+    elif m == "mlstm":
+        h, st = S.apply_mlstm(p["mixer"], h, cfg,
+                              state=state.get("ssm_state") if state else None)
+        new_state = {"ssm_state": st}
+    elif m == "slstm":
+        h, st = S.apply_slstm(p["mixer"], h, cfg,
+                              state=state.get("ssm_state") if state else None)
+        new_state = {"ssm_state": st}
+    if cfg.post_block_norm:
+        h = L.apply_norm(p["post_norm1"], h, cfg)
+    x = shard_act(x + h)
+
+    if "cross" in p:
+        h = L.apply_norm(p["norm_x"], x, cfg)
+        # enc_out present => training/prefill: compute cross-K/V fresh from
+        # the encoder (and cache it).  Only decode (no enc_out) may use the
+        # cached cross_kv — a zero-initialized prefill cache must NOT
+        # shadow the encoder (XLA would DCE the whole encoder).
+        if enc_out is not None:
+            h, _ = L.multi_head_attention(
+                p["cross"], h, cfg, causal=False, kv_source=enc_out,
+                use_rope=False)
+            if new_state is not None:
+                # prefill: cache cross K/V so decode skips the projections.
+                ck, cv = L.cross_kv(p["cross"], enc_out, cfg)
+                new_state["cross_kv"] = {"k": ck, "v": cv}
+        elif state is not None and "cross_kv" in state:
+            pkv = state["cross_kv"]
+            h, _ = L.multi_head_attention(
+                p["cross"], h, cfg, causal=False, use_rope=False,
+                precomputed_kv=(pkv["k"], pkv["v"]))
+            if new_state is not None:
+                new_state["cross_kv"] = pkv
+        else:
+            raise ValueError("cross-attention block needs enc_out or cache")
+        x = shard_act(x + h)
+
+    aux = jnp.zeros((), jnp.float32)
+    if blk.ffn != "none":
+        h = L.apply_norm(p["norm2"], x, cfg)
+        if blk.ffn == "moe":
+            h, aux = L.apply_moe(p["ffn"], h, cfg)
+        else:
+            h = L.apply_mlp(p["ffn"], h, cfg)
+        if cfg.post_block_norm:
+            h = L.apply_norm(p["post_norm2"], h, cfg)
+        x = shard_act(x + h)
+    return x, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# state (KV-cache / recurrent) shape bookkeeping
+# ---------------------------------------------------------------------------
+
+def block_state_shapes(cfg: ModelConfig, blk: BlockSpec, batch: int,
+                       max_seq: int, enc_len: int = 0) -> Dict[str, Any]:
+    m = blk.mixer
+    out: Dict[str, Any] = {}
+    if m.startswith("attn"):
+        kv_len = min(max_seq, cfg.window_size) if m == "attn_local" else max_seq
+        shp = (batch, kv_len, cfg.num_kv_heads, cfg.head_dim)
+        out["kv"] = {"k": shp, "v": shp}
+    elif m == "mamba":
+        out["ssm_state"] = S.mamba_state_shape(cfg, batch)
+    elif m == "mlstm":
+        out["ssm_state"] = S.mlstm_state_shape(cfg, batch)
+    elif m == "slstm":
+        out["ssm_state"] = S.slstm_state_shape(cfg, batch)
+    else:
+        raise ValueError(m)
+    if enc_len:
+        shp = (batch, enc_len, cfg.num_kv_heads, cfg.head_dim)
+        out["cross_kv"] = {"k": shp, "v": shp}
+    return out
+
+
+def _state_leaf_dtype(cfg: ModelConfig, blk: BlockSpec, key: str, dtype):
+    if key == "kv" or key == "cross_kv" or blk.mixer.startswith("attn"):
+        return dtype
+    return jnp.float32
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_seq: int, *, enc_len: int = 0,
+               dtype=None, factory=None):
+    """Decode cache pytree, stacked over groups per pattern slot.
+
+    factory(shape, dtype) -> leaf;  defaults to jnp.zeros (concrete cache);
+    pass jax.ShapeDtypeStruct for dry-run specs."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    factory = factory or jnp.zeros
+    cache = {}
+    for j, blk in enumerate(cfg.block_pattern):
+        shapes = block_state_shapes(cfg, blk, batch, max_seq, enc_len)
+        sub = {}
+        for key, val in shapes.items():
+            leaf_dt = dt if key in ("kv", "cross_kv") else jnp.float32
+            sub[key] = jax.tree.map(
+                lambda shp, d=leaf_dt: factory((cfg.num_groups,) + shp, d),
+                val, is_leaf=lambda x: isinstance(x, tuple))
+        cache[f"b{j}"] = sub
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
+               enc_len: int = 0):
+    return make_cache(cfg, batch, max_seq, enc_len=enc_len, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# stacked-parameter init
+# ---------------------------------------------------------------------------
+
+def init_stack(key, cfg: ModelConfig, cross: bool = False):
+    """Init all groups: returns pytree with leading group axis on leaves."""
+    keys = jax.random.split(key, cfg.num_groups)
+
+    def one_group(k):
+        ks = L.split_keys(k, len(cfg.block_pattern))
+        return {f"b{j}": init_block(ks[j], cfg, blk, cross=cross)
+                for j, blk in enumerate(cfg.block_pattern)}
+    return jax.vmap(one_group)(keys)
+
+
+# ---------------------------------------------------------------------------
+# stack execution (scan over groups)
+# ---------------------------------------------------------------------------
+
+def run_stack(stack_params, x, cfg: ModelConfig, *, positions=None,
+              causal=True, cache=None, cache_index=None, enc_out=None,
+              remat: bool = False, collect_state: bool = False):
+    """Run the whole layer stack.  Returns (x, new_cache, aux_sum).
+
+    collect_state: emit per-group state (KV cache / recurrent state) as scan
+    outputs — used by prefill/decode; train leaves it off so SSM states are
+    not materialized across groups."""
+
+    def body(carry, inp):
+        x, aux = carry
+        gp, gc = inp
+        new_gc = {}
+        for j, blk in enumerate(cfg.block_pattern):
+            st = gc[f"b{j}"] if gc is not None else None
+            x, nst, a = apply_block(
+                gp[f"b{j}"], x, cfg, blk, positions=positions, causal=causal,
+                state=st, cache_index=cache_index, enc_out=enc_out)
+            if nst is not None:
+                new_gc[f"b{j}"] = nst
+            aux = aux + a
+        out = new_gc if (collect_state and new_gc) else None
+        return (x, aux), out
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, aux), new_cache = lax.scan(body, (x, aux0), (stack_params, cache))
+    return x, new_cache, aux

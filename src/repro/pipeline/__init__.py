@@ -1,0 +1,2 @@
+from repro.pipeline.executor import (make_pipeline_runner, pipeline_forward,
+                                     stage_params_reshape)

@@ -1,0 +1,125 @@
+"""SSR spatial/hybrid runtime executor — GPipe-style microbatch pipeline.
+
+This is the *execution* counterpart of the SSR scheduler: the chosen
+Layer→Acc map (contiguous stage partition at runtime) becomes a ``stage``
+mesh axis; each stage owns ``num_groups/S`` layer groups whose weights are
+sharded onto that stage's submesh; microbatches stream through via
+``collective_permute`` over the ICI — the on-chip-forwarding analogue (no
+host round trip).  Stage-internal sharding still uses the data/model axes
+(they are `auto` axes inside the shard_map), so each "SSR accelerator" is
+itself a DPxTP submesh — exactly the paper's Acc-Customization degree of
+freedom.
+
+Bubble accounting matches the paper's Fig. 1(b): M microbatches through S
+stages take (M + S - 1) stage-times.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+def stage_params_reshape(stack_params, n_stages: int):
+    """(num_groups, ...) stacked params -> (n_stages, groups_per_stage, ...)."""
+    def f(x):
+        g = x.shape[0]
+        assert g % n_stages == 0, (g, n_stages)
+        return x.reshape((n_stages, g // n_stages) + x.shape[1:])
+    return jax.tree.map(f, stack_params)
+
+
+def pipeline_spec(stack_params_staged, mesh: Mesh):
+    """Shard the leading stage axis over 'stage'; leave the rest to auto."""
+    def f(x):
+        return NamedSharding(mesh, P("stage"))
+    return jax.tree.map(f, stack_params_staged)
+
+
+def make_pipeline_runner(cfg: ModelConfig, mesh: Mesh, n_stages: int,
+                         n_microbatches: int) -> Callable:
+    """Returns pipelined(params_staged, x_mb) -> y_mb.
+
+    params_staged: stack params reshaped to (S, G/S, ...), stage-sharded.
+    x_mb: (M, mb, seq, d_model) microbatched embedded activations.
+    y_mb: (M, mb, seq, d_model) final hidden states.
+    """
+    S = n_stages
+    M = n_microbatches
+
+    def stage_apply(p_local, x):
+        y, _, _ = T.run_stack(p_local, x, cfg)
+        return y
+
+    def inner(p_local, x_all):
+        # p_local leaves: (1, G/S, ...) — this stage's groups.
+        p_local = jax.tree.map(lambda a: a[0], p_local)
+        stage_id = lax.axis_index("stage")
+        state = jnp.zeros_like(x_all[0])
+        outputs = jnp.zeros_like(x_all)
+        # carries become stage-varying inside the loop: mark them up front
+        state = lax.pcast(state, ("stage",), to="varying")
+        outputs = lax.pcast(outputs, ("stage",), to="varying")
+
+        def tick(t, carry):
+            state, outputs = carry
+            inp = lax.dynamic_index_in_dim(
+                x_all, jnp.clip(t, 0, M - 1), 0, keepdims=False)
+            cur = jnp.where(stage_id == 0, inp, state)
+            out = stage_apply(p_local, cur)
+            # last stage banks its finished microbatch t-(S-1)
+            oidx = jnp.clip(t - (S - 1), 0, M - 1)
+            prev = lax.dynamic_index_in_dim(outputs, oidx, 0, keepdims=False)
+            write = jnp.where((stage_id == S - 1) & (t >= S - 1), out, prev)
+            outputs = lax.dynamic_update_index_in_dim(outputs, write, oidx, 0)
+            # forward over ICI to the next stage (on-chip forwarding)
+            state = lax.ppermute(out, "stage",
+                                 [(i, (i + 1) % S) for i in range(S)])
+            return state, outputs
+
+        state, outputs = lax.fori_loop(0, M + S - 1, tick, (state, outputs))
+        # only the last stage holds real outputs: mask + sum-replicate.
+        outputs = jnp.where(stage_id == S - 1, outputs, 0.0)
+        outputs = lax.psum(outputs, "stage")
+        return outputs
+
+    # Only the manual 'stage' axis appears in specs; data/model sharding of
+    # activations is handled by GSPMD (auto axes) outside the shard_map.
+    batch_in = P(None, None, None, None)
+    pipelined = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P("stage"), batch_in),
+        out_specs=batch_in,
+        axis_names=frozenset({"stage"}),
+    )
+    return pipelined
+
+
+def pipeline_forward(model, params, batch, mesh: Mesh, n_stages: int,
+                     n_microbatches: int):
+    """End-to-end SSR-hybrid forward: embed (data-parallel) -> pipelined
+    stages -> head.  batch: {'tokens' | 'embeds': ...}."""
+    from repro.models import layers as L
+    cfg = model.cfg
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = L.embed(params["embed"], batch["tokens"], cfg).astype(cfg.dtype)
+    B, seq, d = x.shape
+    M = n_microbatches
+    assert B % M == 0, (B, M)
+    x_mb = x.reshape(M, B // M, seq, d)
+
+    staged = stage_params_reshape(params["stack"], n_stages)
+    runner = make_pipeline_runner(cfg, mesh, n_stages, n_microbatches)
+    y_mb = runner(staged, x_mb)
+    y = y_mb.reshape(B, seq, d)
+    y = L.apply_norm(params["final_norm"], y, cfg)
+    return L.logits_head(params.get("embed"), params.get("head"), y, cfg)

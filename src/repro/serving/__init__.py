@@ -1,0 +1,2 @@
+from repro.serving.engine import (Request, ServingEngine, make_prefill_step,
+                                  make_serve_step)

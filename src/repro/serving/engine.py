@@ -1,0 +1,131 @@
+"""Batched serving engine: prefill + decode with a slot-based continuous
+batching scheduler (vLLM-lite).
+
+``serve_step`` — the function the decode-shape dry-runs lower — is one
+batched decode step over a fixed slot set.  The ``ServingEngine`` drives it:
+requests occupy slots, finished slots are refilled from the queue, so the
+batch stays full (the serving-side utilization knob the paper's throughput
+story depends on).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+def make_serve_step(model: Model):
+    """serve_step(params, cache, tokens, cache_index) ->
+    (next_tokens, logits, new_cache) — one greedy decode step."""
+
+    def serve_step(params, cache, tokens, cache_index, positions=None):
+        logits, cache = model.decode_step(params, cache, tokens, cache_index,
+                                          positions=positions)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt[:, None], logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, max_seq: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_seq)
+    return prefill_step
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (prompt_len,)
+    max_new_tokens: int
+    out_tokens: List[int] = field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclass
+class ServingEngine:
+    """Fixed-slot continuous batching over a single shared max_seq cache."""
+    model: Model
+    params: Any
+    slots: int
+    max_seq: int
+
+    def __post_init__(self):
+        self.cfg = self.model.cfg
+        self.serve_step = jax.jit(make_serve_step(self.model))
+        self._decode_one = jax.jit(
+            lambda p, b: self.model.prefill(p, b, self.max_seq))
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+
+    def submit(self, req: Request):
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000):
+        """Simple loop: (re)fill slots via per-slot prefill, then batched
+        decode steps until all requests finish."""
+        while self.queue or getattr(self, "_active", None):
+            self._fill_slots()
+            if not self._active:
+                break
+            self._decode_burst(max_steps)
+        return self.done
+
+    # -- internals --------------------------------------------------------
+    def _fill_slots(self):
+        self._active: List[Request] = getattr(self, "_active", [])
+        while self.queue and len(self._active) < self.slots:
+            req = self.queue.pop(0)
+            self._active.append(req)
+        if not self._active:
+            return
+        # batch prefill (pad to same prompt len)
+        plen = max(len(r.prompt) for r in self._active)
+        B = len(self._active)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(self._active):
+            toks[i, plen - len(r.prompt):] = r.prompt
+        logits, cache = self._decode_one(self.params, {"tokens": jnp.asarray(toks)})
+        self._cache = cache
+        self._pos = plen
+        nxt = np.asarray(jnp.argmax(logits[:, -1], -1)).astype(np.int32)
+        now = time.perf_counter()
+        for i, r in enumerate(self._active):
+            r.out_tokens.append(int(nxt[i]))
+            r.t_first = now
+        self._cur = nxt[:, None]
+
+    def _decode_burst(self, max_steps: int):
+        steps = 0
+        while self._active and steps < max_steps:
+            nxt, _, self._cache = self.serve_step(
+                self.params, self._cache, jnp.asarray(self._cur),
+                jnp.int32(self._pos))
+            self._pos += 1
+            steps += 1
+            arr = np.asarray(nxt)
+            still = []
+            now = time.perf_counter()
+            for i, r in enumerate(self._active):
+                r.out_tokens.append(int(arr[i, 0]))
+                if len(r.out_tokens) >= r.max_new_tokens \
+                        or self._pos >= self.max_seq - 1:
+                    r.t_done = now
+                    self.done.append(r)
+                else:
+                    still.append(r)
+            if len(still) != len(self._active):
+                # slots freed: return to fill (simplified: finish burst)
+                self._active = still
+                break
+            self._active = still
+            self._cur = arr

@@ -1,0 +1,3 @@
+from repro.sharding.rules import (batch_axes_for, input_shardings_tree,
+                                  input_specs_tree, param_shardings,
+                                  param_specs)

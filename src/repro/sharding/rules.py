@@ -1,0 +1,214 @@
+"""Logical-axis sharding rules: param/input pytrees -> PartitionSpecs.
+
+Megatron-style TP over the ``model`` axis, DP over ``("pod","data")``:
+  * attention: wq/wk/wv column-parallel, wo row-parallel;
+  * MLP: wi/wg column-parallel, wo row-parallel;
+  * MoE: TP-within-expert by default (dispatch stays local to the data
+    shard); ``expert_parallel=True`` switches to EP (experts over model);
+  * embeddings vocab-sharded when divisible (else replicated — e.g.
+    granite's vocab 49155 is indivisible by 16);
+  * KV caches: sequence(W)-sharded over ``model`` (FlashDecoding-style
+    KV-split — the memory owner of long contexts), batch over data axes.
+
+Stacked stack-params carry a leading group axis (never sharded; it is the
+scan dimension — or the ``stage`` axis for the SSR pipeline executor).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")
+
+
+def _axes_in(mesh) -> set:
+    return set(mesh.axis_names)
+
+
+def _size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1) \
+        if hasattr(mesh, "devices") else mesh.shape.get(name, 1)
+
+
+def mesh_axis_size(mesh, name: str) -> int:
+    try:
+        return int(np.prod([mesh.shape[n] for n in ([name] if isinstance(name, str) else name) if n in mesh.shape]))
+    except Exception:
+        return 1
+
+
+def batch_axes_for(mesh, batch: int) -> Optional[Tuple[str, ...]]:
+    """Largest prefix of ('pod','data') whose product divides batch."""
+    axes = [a for a in BATCH_AXES if a in mesh.axis_names]
+    out = []
+    prod = 1
+    for a in axes:
+        sz = mesh.shape[a]
+        if batch % (prod * sz) == 0:
+            out.append(a)
+            prod *= sz
+    return tuple(out) if out else None
+
+
+def _maybe(mesh, axis: str, dim: int) -> Optional[str]:
+    """Shard `dim` over `axis` only if present and divisible."""
+    if axis in mesh.axis_names and dim % mesh.shape[axis] == 0:
+        return axis
+    return None
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def _param_spec(path: Tuple[str, ...], leaf, mesh, *,
+                expert_parallel: bool = False) -> P:
+    """Spec from the param path.  Leaves under 'stack'/'enc_stack' have a
+    leading group axis."""
+    names = [getattr(k, "key", str(k)) for k in path]
+    leading = 1 if any(n in ("stack", "enc_stack") for n in names) else 0
+    nd = leaf.ndim
+    last = names[-1]
+    mdl = "model" if "model" in mesh.axis_names else None
+
+    def spec(*tail):
+        full = [None] * leading + list(tail)
+        full += [None] * (nd - len(full))
+        return P(*full[:nd])
+
+    if mdl is None:
+        return P(*([None] * nd))
+
+    in_moe = "ffn" in names and nd - leading == 3  # (E, d, f) expert weights
+    msz = mesh.shape["model"]
+
+    if last in ("wq", "wk", "wv", "wi", "wg", "up", "up_proj", "in_proj",
+                "dt_proj", "w_x"):
+        if in_moe:
+            if expert_parallel:
+                return spec(_maybe(mesh, "model", leaf.shape[leading]), None,
+                            None)
+            return spec(None, None, _maybe(mesh, "model", leaf.shape[-1]))
+        return spec(None, _maybe(mesh, "model", leaf.shape[-1]))
+    if last in ("wo", "down", "down_proj", "out_proj", "x_proj"):
+        if in_moe:
+            if expert_parallel:
+                return spec(_maybe(mesh, "model", leaf.shape[leading]), None,
+                            None)
+            return spec(None, _maybe(mesh, "model", leaf.shape[-2]), None)
+        return spec(_maybe(mesh, "model", leaf.shape[leading]), None)
+    if last == "w_h":                           # slstm (H, hd, 4hd)
+        return spec(_maybe(mesh, "model", leaf.shape[leading]), None, None)
+    if last in ("conv_w",):                     # (k, d_inner)
+        return spec(None, _maybe(mesh, "model", leaf.shape[-1]))
+    if last in ("conv_b", "dt_bias", "D"):      # (d_inner,)
+        return spec(_maybe(mesh, "model", leaf.shape[-1]))
+    if last == "A_log":                         # (d_inner, n)
+        return spec(_maybe(mesh, "model", leaf.shape[leading]), None)
+    if last == "table":                         # (V, D) vocab-sharded
+        return P(_maybe(mesh, "model", leaf.shape[0]), None)
+    if last == "w" and "head" in names:         # (D, V)
+        return P(None, _maybe(mesh, "model", leaf.shape[-1]))
+    if last == "router":
+        return spec(None, None)
+    # norms, biases, gates, pos embeddings: replicated
+    return P(*([None] * nd))
+
+
+def _fsdp_extend(spec: P, leaf, mesh, axes=("data",)) -> P:
+    """FSDP: additionally shard the weight over the data axis on the first
+    unsharded, divisible, non-scan dim (dim 0 of stacked params is the scan
+    axis: sharding it would gather whole layers, so prefer dims >= 1 and
+    only fall back to dim 0 for non-stacked leaves)."""
+    for ax in axes:
+        if ax not in mesh.axis_names:
+            return spec
+    sz = int(np.prod([mesh.shape[a] for a in axes]))
+    entries = list(spec) + [None] * (leaf.ndim - len(spec))
+    order = list(range(1, leaf.ndim)) + ([0] if leaf.ndim == 2 else [])
+    for i in order:
+        if entries[i] is None and leaf.shape[i] % sz == 0 \
+                and leaf.shape[i] >= sz:
+            entries[i] = axes[0] if len(axes) == 1 else tuple(axes)
+            return P(*entries)
+    return spec
+
+
+def param_shardings(params, mesh: Mesh, *, expert_parallel: bool = False,
+                    fsdp: bool = False):
+    """Pytree of NamedShardings matching `params`."""
+    specs = param_specs(params, mesh, expert_parallel=expert_parallel,
+                        fsdp=fsdp)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(params, mesh: Mesh, *, expert_parallel: bool = False,
+                fsdp: bool = False):
+    def f(path, leaf):
+        spec = _param_spec(path, leaf, mesh, expert_parallel=expert_parallel)
+        if fsdp and leaf.ndim >= 2:
+            spec = _fsdp_extend(spec, leaf, mesh)
+        return spec
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+# ---------------------------------------------------------------------------
+# input rules
+# ---------------------------------------------------------------------------
+
+def input_specs_tree(batch_tree, mesh: Mesh, *, seq_axis_for_cache=True):
+    """Shardings for a model-input pytree (tokens/labels/embeds/positions/
+    cache/cache_index) based on leaf path + rank."""
+    def f(path, leaf):
+        names = [getattr(k, "key", str(k)) for k in path]
+        nd = leaf.ndim
+        in_cache = "cache" in names
+        if in_cache:
+            return _cache_spec(names, leaf, mesh)
+        if names and names[0] == "positions":
+            bspec = batch_axes_for(mesh, leaf.shape[1])
+            return P(None, bspec, None)
+        if nd == 0:
+            return P()
+        bspec = batch_axes_for(mesh, leaf.shape[0])
+        return P(*([bspec] + [None] * (nd - 1)))
+    return jax.tree_util.tree_map_with_path(f, batch_tree)
+
+
+def _cache_spec(names, leaf, mesh) -> P:
+    """Cache leaves are stacked (G, B, ...).  KV caches (G,B,W,Hk,hd):
+    shard W over model (+ data when batch doesn't use it).  Recurrent
+    states (G,B,...): shard trailing feature dim over model if divisible."""
+    nd = leaf.ndim
+    B = leaf.shape[1]
+    bspec = batch_axes_for(mesh, B)
+    if "kv" in names or "cross_kv" in names:       # (G, B, W, Hk, hd)
+        W = leaf.shape[2]
+        seq_axes = []
+        if bspec is None:
+            for a in ("data",):
+                if a in mesh.axis_names and W % mesh.shape[a] == 0:
+                    seq_axes.append(a)
+        if "model" in mesh.axis_names and W % mesh.shape["model"] == 0:
+            seq_axes.append("model")
+        sspec = tuple(seq_axes) if seq_axes else None
+        return P(None, bspec, sspec, None, None)
+    # recurrent state: shard the largest trailing dim over model
+    if nd >= 3:
+        dims = list(leaf.shape[2:])
+        tgt = int(np.argmax(dims)) + 2
+        ax = _maybe(mesh, "model", leaf.shape[tgt])
+        spec = [None, bspec] + [None] * (nd - 2)
+        spec[tgt] = ax
+        return P(*spec)
+    return P(None, bspec)
+
+
+def input_shardings_tree(batch_tree, mesh: Mesh):
+    specs = input_specs_tree(batch_tree, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,2 @@
+from repro.training.optimizer import AdamW, AdamWState, zero1_specs
+from repro.training.trainer import jit_train_step, make_train_step

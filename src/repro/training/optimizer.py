@@ -1,0 +1,102 @@
+"""AdamW in pure JAX (no optax dependency), with cosine schedule, global
+gradient clipping, and ZeRO-1-style optimizer-state sharding hooks.
+
+Moments are stored fp32; `zero1_specs` extends each parameter's
+PartitionSpec with the data axis on the first still-unsharded divisible dim
+so the m/v buffers spread over the whole pod (ZeRO-1)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+    def schedule(self, step):
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        frac = self.min_lr_frac + (1 - self.min_lr_frac) * cos
+        return self.lr * warm * frac
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        # global-norm clip
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
+        lr = self.schedule(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x:
+                             isinstance(x, tuple) and len(x) == 3)
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x:
+                             isinstance(x, tuple) and len(x) == 3)
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x:
+                             isinstance(x, tuple) and len(x) == 3)
+        return new_p, AdamWState(step=step, m=new_m, v=new_v), \
+            {"grad_norm": gn, "lr": lr}
+
+
+def zero1_specs(param_specs, params, mesh) -> Any:
+    """Optimizer-moment specs: parameter spec + 'data' sharding on the first
+    dim that is unsharded and divisible by the data axis (ZeRO-1)."""
+    if "data" not in mesh.axis_names:
+        return param_specs
+    dsz = mesh.shape["data"]
+
+    def f(spec: P, p):
+        entries = list(spec) + [None] * (p.ndim - len(spec))
+        used = {n for e in entries if e is not None
+                for n in (e if isinstance(e, tuple) else (e,))}
+        if "data" in used:          # FSDP already spreads over data
+            return P(*entries)
+        for i, (e, dim) in enumerate(zip(entries, p.shape)):
+            if e is None and dim % dsz == 0 and dim >= dsz:
+                entries[i] = "data"
+                break
+        return P(*entries)
+    return jax.tree.map(f, param_specs, params,
+                        is_leaf=lambda x: isinstance(x, P))

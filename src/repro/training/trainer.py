@@ -1,0 +1,73 @@
+"""Train-step factory: loss -> grad -> AdamW, with remat, gradient
+accumulation (microbatching), donation, and sharding constraints — the
+function handed to jit/pjit and to the dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training.optimizer import AdamW, AdamWState
+
+
+def make_train_step(model: Model, opt: AdamW, *, remat: bool = True,
+                    grad_accum: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics).  With grad_accum > 1 the global batch is
+    split on the leading axis and gradients are accumulated in a scan
+    (microbatching — keeps peak activation memory 1/grad_accum)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat)
+
+    def split_mb(batch):
+        def f(x):
+            if x.ndim == 0:
+                return x
+            # positions: (3, B, S) — microbatch on axis 1
+            if x.shape[0] == 3 and x.ndim == 3:
+                b = x.shape[1]
+                return jnp.moveaxis(
+                    x.reshape(x.shape[0], grad_accum, b // grad_accum,
+                              x.shape[2]), 1, 0)
+            b = x.shape[0]
+            return x.reshape((grad_accum, b // grad_accum) + x.shape[1:])
+        return jax.tree.map(f, batch)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = split_mb(batch)
+
+            def body(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), g0), mbs)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        params, opt_state, om = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def jit_train_step(train_step, mesh, param_shardings, opt_shardings,
+                   batch_shardings):
+    """pjit wrapper with donation of params/opt_state."""
+    return jax.jit(
+        train_step,
+        in_shardings=(param_shardings, opt_shardings, batch_shardings),
+        out_shardings=(param_shardings, opt_shardings, None),
+        donate_argnums=(0, 1),
+    )

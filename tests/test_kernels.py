@@ -1,0 +1,148 @@
+"""Per-kernel sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.fused_matmul import matmul_fused
+from repro.kernels.layernorm import norm_onepass
+from repro.kernels.linear_scan import linear_scan
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hk,sq,skv,d", [
+    (1, 2, 2, 128, 128, 128),     # MHA
+    (2, 4, 2, 256, 256, 128),     # GQA
+    (1, 8, 1, 128, 384, 128),     # MQA, uneven kv
+])
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (True, 128, 0.0), (False, 0, 0.0), (True, 0, 30.0),
+])
+def test_flash_attention(b, h, hk, sq, skv, d, dtype, causal, window,
+                         softcap):
+    r = _rng(hash((b, h, sq, skv)) % 2**31)
+    q = jnp.asarray(r.standard_normal((b, h, sq, d)), dtype)
+    k = jnp.asarray(r.standard_normal((b, hk, skv, d)), dtype)
+    v = jnp.asarray(r.standard_normal((b, hk, skv, d)), dtype)
+    qp = jnp.arange(sq) + (skv - sq)
+    kp = jnp.arange(skv)
+    kv = jnp.ones((skv,), jnp.int32)
+    out = flash_attention_bhsd(q, k, v, qp, kp, kv, causal=causal,
+                               window=window, softcap=softcap,
+                               block_q=128, block_k=128, interpret=True)
+    ref = R.flash_attention_ref(q, k, v, qp, kp, kv, causal=causal,
+                                window=window, softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_ring_validity():
+    """Decode over a ring cache: invalid (unwritten) slots must be ignored."""
+    r = _rng(3)
+    b, h, skv, d = 1, 2, 128, 128
+    q = jnp.asarray(r.standard_normal((b, h, 8, d)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((b, h, skv, d)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((b, h, skv, d)), jnp.float32)
+    k_pos = jnp.where(jnp.arange(skv) < 40, jnp.arange(skv), -1)
+    k_valid = (k_pos >= 0).astype(jnp.int32)
+    qp = jnp.arange(8) + 40
+    out = flash_attention_bhsd(q, k, v, qp, k_pos, k_valid, causal=True,
+                               interpret=True)
+    ref = R.flash_attention_ref(q, k, v, qp, k_pos, k_valid, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (256, 512, 384),
+                                   (512, 128, 256)])
+@pytest.mark.parametrize("act", ["none", "gelu", "silu", "relu2"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_fused(m, k, n, act, dtype):
+    r = _rng(hash((m, k, n)) % 2**31)
+    x = jnp.asarray(r.standard_normal((m, k)) * 0.1, dtype)
+    w = jnp.asarray(r.standard_normal((k, n)) * 0.1, dtype)
+    b = jnp.asarray(r.standard_normal((n,)) * 0.1, dtype)
+    out = matmul_fused(x, w, b, activation=act, block_m=128, block_n=128,
+                       block_k=128, interpret=True)
+    ref = R.matmul_fused_ref(x, w, b, activation=act)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_matmul_fused_no_bias():
+    r = _rng(9)
+    x = jnp.asarray(r.standard_normal((128, 128)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((128, 128)), jnp.float32)
+    out = matmul_fused(x, w, None, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(x @ w), atol=1e-3, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# one-pass norm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["rmsnorm", "layernorm"])
+@pytest.mark.parametrize("r_,d", [(128, 256), (512, 384), (256, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_norm_onepass(kind, r_, d, dtype):
+    r = _rng(hash((kind, r_, d)) % 2**31)
+    x = jnp.asarray(r.standard_normal((r_, d)), dtype)
+    s = jnp.asarray(r.standard_normal((d,)), dtype)
+    b = jnp.asarray(r.standard_normal((d,)), dtype)
+    out = norm_onepass(x, s, b, kind=kind, block_rows=128, interpret=True)
+    ref = R.norm_onepass_ref(x, s, b, kind=kind)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# linear scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,s,f", [(2, 128, 256), (4, 256, 128),
+                                   (1, 512, 512)])
+def test_linear_scan(n, s, f):
+    r = _rng(hash((n, s, f)) % 2**31)
+    a = jnp.asarray(r.uniform(0.5, 0.999, (n, s, f)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((n, s, f)), jnp.float32)
+    h0 = jnp.asarray(r.standard_normal((n, f)), jnp.float32)
+    out = linear_scan(a, b, h0, block_s=128, block_f=128, interpret=True)
+    ref = R.linear_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_linear_scan_matches_chunked_model_path():
+    """The model-side chunked associative scan must agree with the kernel."""
+    from repro.models.ssm import linear_scan_chunked
+    r = _rng(11)
+    a = jnp.asarray(r.uniform(0.5, 0.999, (2, 128, 8, 4)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((2, 128, 8, 4)), jnp.float32)
+    h_all, h_last = linear_scan_chunked(a, b, chunk=32)
+    flat = linear_scan(a.reshape(2, 128, 32), b.reshape(2, 128, 32),
+                       block_s=64, block_f=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(h_all.reshape(2, 128, 32)),
+                               np.asarray(flat), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_last),
+                               np.asarray(h_all[:, -1]), atol=1e-6)

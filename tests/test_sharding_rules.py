@@ -1,0 +1,82 @@
+"""Sharding rules: every produced spec must divide the corresponding dim
+on the production meshes (validated on abstract meshes — no devices)."""
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, reduced
+from repro.models import build_model
+from repro.sharding import batch_axes_for, input_specs_tree, param_specs
+from repro.sharding.rules import _fsdp_extend
+
+
+def abstract_mesh(shape=(16, 16), axes=("data", "model")):
+    return AbstractMesh(shape, axes)
+
+
+def _check_divisible(specs, tree, mesh, label):
+    for spec, leaf in zip(jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.leaves(tree)):
+        entries = list(spec)
+        for i, e in enumerate(entries):
+            if e is None:
+                continue
+            names = e if isinstance(e, tuple) else (e,)
+            div = int(np.prod([mesh.shape[n] for n in names]))
+            assert leaf.shape[i] % div == 0, \
+                (label, spec, leaf.shape, i, div)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divisible_full_size(arch, multi_pod):
+    """FULL configs: abstract-mesh spec check (no allocation)."""
+    cfg = ARCHS[arch]
+    mesh = abstract_mesh((2, 16, 16), ("pod", "data", "model")) if multi_pod \
+        else abstract_mesh()
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    for fsdp in (False, True):
+        specs = param_specs(params, mesh, fsdp=fsdp)
+        _check_divisible(specs, params, mesh, f"{arch} fsdp={fsdp}")
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "jamba-1.5-large-398b",
+                                  "whisper-base", "qwen2-vl-72b"])
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k", "decode_32k"])
+def test_input_specs_divisible(arch, shape):
+    cfg = ARCHS[arch]
+    mesh = abstract_mesh()
+    model = build_model(cfg)
+    specs_in = model.input_specs(SHAPES[shape])
+    sspecs = input_specs_tree(specs_in, mesh)
+    _check_divisible(sspecs, specs_in, mesh, f"{arch}/{shape}")
+
+
+def test_batch_axes_prefix_logic():
+    mesh = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    assert batch_axes_for(mesh, 256) == ("pod", "data")
+    assert batch_axes_for(mesh, 2) == ("pod",)
+    assert batch_axes_for(mesh, 1) is None
+    assert batch_axes_for(mesh, 32) == ("pod", "data")
+
+
+def test_fsdp_never_shards_scan_axis_on_3d():
+    mesh = abstract_mesh()
+    leaf = jax.ShapeDtypeStruct((32, 4096, 1024), np.float32)
+    spec = _fsdp_extend(P(None, None, "model"), leaf, mesh)
+    assert spec[0] is None          # group/scan axis untouched
+    assert "data" in spec
+
+
+def test_vocab_indivisible_replicated():
+    """granite vocab 49155 is indivisible by 16 -> embed must replicate."""
+    cfg = ARCHS["granite-moe-1b-a400m"]
+    mesh = abstract_mesh()
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    specs = param_specs(params, mesh)
+    assert specs["embed"]["table"] == P(None, None)

@@ -1,0 +1,248 @@
+"""SSR core: cost model, scheduler, EA, Pareto — unit + property tests."""
+import math
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+from repro.configs import SHAPES, get_config
+from repro.core import (AccConfig, Features, TPU_V5E, build_graph,
+                        contiguous_assignment, evolutionary_search,
+                        exhaustive_search, mxu_efficiency, node_time,
+                        pareto_front, sequential_assignment, simulate,
+                        spatial_assignment, ssr_dse)
+from repro.core.customize import (_compatible, count_design_points,
+                                  customize_accs)
+from repro.core.ea import _renumber
+from repro.core.pareto import DesignPoint
+
+
+def graph_of(arch="yi-6b", shape="train_4k"):
+    return build_graph(get_config(arch), SHAPES[shape])
+
+
+# ---------------------------------------------------------------------------
+# graph IR
+# ---------------------------------------------------------------------------
+
+def test_graph_structure():
+    g = graph_of()
+    cfg = get_config("yi-6b")
+    assert len(g.nodes) == cfg.num_layers + 2        # embed + blocks + head
+    assert g.nodes[0].kind == "embed"
+    assert g.nodes[-1].kind == "head"
+    for n in g.nodes[1:]:
+        assert n.deps, n.name
+    assert g.total_mm_flops > 0
+
+
+def test_graph_flops_magnitude():
+    """Train FLOPs ≈ 6·N·D within 25% for a dense model (sanity anchor)."""
+    g = graph_of("yi-6b", "train_4k")
+    n_params = 6.05e9
+    tokens = 256 * 4096
+    expected = 6 * n_params * tokens
+    assert 0.75 * expected < g.total_mm_flops < 1.35 * expected
+
+
+def test_decode_graph_much_smaller():
+    gd = graph_of("yi-6b", "decode_32k")
+    gt = graph_of("yi-6b", "train_4k")
+    assert gd.total_mm_flops < gt.total_mm_flops / 100
+
+
+def test_moe_graph_counts_active_flops():
+    """MoE FLOPs must scale with top-k·capacity, not num_experts."""
+    g = graph_of("qwen2-moe-a2.7b", "train_4k")
+    cfg = get_config("qwen2-moe-a2.7b")
+    dense_equiv = 6 * 14e9 * 256 * 4096     # if all 60 experts were active
+    assert g.total_mm_flops < dense_equiv   # far below all-expert compute
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_mxu_efficiency_bounds():
+    assert 0 < mxu_efficiency(1, 1, 1) <= 0.95
+    assert mxu_efficiency(128, 128, 128) == pytest.approx(0.95)
+    assert mxu_efficiency(64, 128, 128) == pytest.approx(0.95 * 0.5)
+
+
+def test_node_time_scales_with_chips():
+    g = graph_of()
+    n = g.nodes[5]
+    t1 = node_time(n, AccConfig(16, 16, 1), train=True)["total"]
+    t2 = node_time(n, AccConfig(256, 256, 1), train=True)["total"]
+    assert t2 < t1
+
+
+def test_fine_grained_pipeline_reduces_time():
+    g = graph_of()
+    n = g.nodes[5]
+    acc = AccConfig(64, 16, 4)
+    on = node_time(n, acc, train=True, feats=Features())["total"]
+    off = node_time(n, acc, train=True,
+                    feats=Features(fine_grained_pipeline=False))["total"]
+    assert on <= off
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants
+# ---------------------------------------------------------------------------
+
+def test_sequential_latency_le_makespan():
+    g = graph_of()
+    a = sequential_assignment(g, 256)
+    r = simulate(g, a, 4)
+    assert r.latency <= r.makespan + 1e-12
+    assert r.throughput_flops > 0
+
+
+def test_spatial_improves_with_batches():
+    """More pipelined batches -> higher spatial throughput (Fig 1(b))."""
+    g = graph_of()
+    a = spatial_assignment(g, 256, max_accs=8)
+    t1 = simulate(g, a, 1, batch_frac=0.125).throughput_flops
+    t8 = simulate(g, a, 8, batch_frac=0.125).throughput_flops
+    assert t8 > t1
+
+
+def test_dependencies_respected():
+    """Makespan of 1 batch on a spatial map >= sum of critical-path durs."""
+    g = graph_of()
+    a = spatial_assignment(g, 256, max_accs=4)
+    r = simulate(g, a, 1)
+    from repro.core.costmodel import node_time as nt
+    crit = sum(nt(n, a.accs[a.acc_of[n.idx]], train=g.train)["total"]
+               for n in g.nodes)
+    assert r.latency >= crit * 0.999
+
+
+def test_onchip_forwarding_ablation():
+    """Paper §5.2.6 feature (1): disabling forwarding inflates latency."""
+    g = graph_of()
+    a = spatial_assignment(g, 256, max_accs=8)
+    on = simulate(g, a, 4, feats=Features(onchip_forwarding=True))
+    off = simulate(g, a, 4, feats=Features(onchip_forwarding=False))
+    assert off.latency > on.latency
+
+
+# ---------------------------------------------------------------------------
+# customization (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def test_customize_respects_force_partition():
+    g = graph_of()
+    n_acc = 4
+    a = contiguous_assignment(g, n_acc, 256)
+    alloc = [acc.chips for acc in a.accs]
+    accs = customize_accs(g, a.acc_of, alloc,
+                          feats=Features(inter_acc_aware=True))
+    # every communicating pair must be divisibility-compatible
+    for i, n in enumerate(g.nodes):
+        for d in n.deps:
+            ai, ad = a.acc_of[i], a.acc_of[d]
+            if ai != ad:
+                assert _compatible(accs[ai], accs[ad]), (ai, ad)
+
+
+def test_customize_dp_bounded_by_batch():
+    g = build_graph(get_config("xlstm-125m"), SHAPES["long_500k"])  # B=1
+    a = contiguous_assignment(g, 2, 256)
+    accs = customize_accs(g, a.acc_of, [acc.chips for acc in a.accs])
+    for acc in accs:
+        assert acc.dp == 1          # batch=1 cannot data-parallelize
+
+
+def test_design_space_counting():
+    assert count_design_points([4, 4]) == 9   # divisors(4)=3 pairs each
+
+
+# ---------------------------------------------------------------------------
+# EA (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def test_renumber_canonical():
+    assert _renumber((2, 2, 0, 1)) == (0, 0, 1, 2)
+    assert _renumber((0, 1, 2)) == (0, 1, 2)
+
+
+def test_ea_meets_latency_constraint():
+    g = graph_of("yi-6b", "prefill_32k")
+    seq = sequential_assignment(g, 256)
+    base = simulate(g, seq, 1)
+    res = evolutionary_search(g, 256, lat_cons=base.latency * 2.0,
+                              n_acc=4, n_batches=2, n_pop=6, n_child=6,
+                              n_iter=3, seed=0)
+    assert res.latency <= base.latency * 2.0
+    assert res.throughput > 0
+
+
+def test_ea_beats_or_matches_worst_random():
+    g = graph_of()
+    res = evolutionary_search(g, 256, n_acc=4, n_batches=4, n_pop=8,
+                              n_child=8, n_iter=4, seed=1)
+    # must at least match a naive fully-spatial split at same batch count
+    spa = spatial_assignment(g, 256, max_accs=4)
+    worst = simulate(g, spa, 4)
+    assert res.throughput >= worst.throughput_tops() * 0.5
+
+
+def test_exhaustive_finds_feasible():
+    g = graph_of("whisper-base", "prefill_32k")
+    res = exhaustive_search(g, 256, n_acc=2, n_batches=2, max_evals=40)
+    assert res.throughput > 0
+    assert res.evaluations <= 40
+
+
+# ---------------------------------------------------------------------------
+# pareto
+# ---------------------------------------------------------------------------
+
+def test_pareto_front_nondominated():
+    pts = [DesignPoint("s", 1, 1, lat, thr) for lat, thr in
+           [(1, 10), (2, 20), (0.5, 5), (2, 15), (3, 20.0), (0.5, 6)]]
+    front = pareto_front(pts)
+    for p in front:
+        for q in pts:
+            assert not (q.latency < p.latency and
+                        q.throughput_tops >= p.throughput_tops)
+            assert not (q.latency <= p.latency and
+                        q.throughput_tops > p.throughput_tops)
+
+
+if HAVE_HYP:
+    @given(st.integers(1, 4096), st.integers(1, 4096), st.integers(1, 4096))
+    @settings(max_examples=50, deadline=None)
+    def test_mxu_efficiency_in_unit_interval(m, k, n):
+        e = mxu_efficiency(m, k, n)
+        assert 0 < e <= 0.95
+
+    @given(st.lists(st.tuples(st.floats(0.01, 100), st.floats(0.01, 100)),
+                    min_size=1, max_size=30))
+    @settings(max_examples=50, deadline=None)
+    def test_pareto_property(pairs):
+        pts = [DesignPoint("x", 1, 1, l, t) for l, t in pairs]
+        front = pareto_front(pts)
+        assert front, "front never empty"
+        # front sorted by latency and throughput non-decreasing along it
+        lats = [p.latency for p in front]
+        assert lats == sorted(lats)
+        thr = [p.throughput_tops for p in front]
+        assert all(thr[i] <= thr[i + 1] + 1e-12 for i in range(len(thr) - 1))
+
+    @given(st.integers(2, 64), st.integers(1, 6), st.integers(1, 8))
+    @settings(max_examples=25, deadline=None)
+    def test_renumber_idempotent(n, k, seed):
+        import random
+        rng = random.Random(seed)
+        g = tuple(rng.randrange(k) for _ in range(n))
+        r = _renumber(g)
+        assert _renumber(r) == r
+        assert len(set(r)) == len(set(g))
+        assert max(r) == len(set(g)) - 1
