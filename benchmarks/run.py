@@ -10,9 +10,16 @@ Prints ``name,us_per_call,derived`` CSV.
   q1          — §6 cross-platform (Stratix 10 NX) modeling
   roofline    — §Roofline terms per (arch x shape) from the dry-run JSONs
   micro       — measured CPU microbenchmarks of the runnable substrate
+
+``--smoke`` instead runs the fast tier-1 test subset in < 60 s: the
+suite minus the ``slow``-marked 8-device subprocess tests AND minus the
+two compile-heavy sweep files (test_models.py, test_perf_paths.py) —
+the full gate remains ``pytest -q``.
 """
 from __future__ import annotations
 
+import os
+import subprocess
 import sys
 
 
@@ -47,7 +54,26 @@ def micro_rows():
     return rows
 
 
+def smoke() -> int:
+    """Fast tier-1 subset (< 60 s): the suite minus the ``slow``-marked
+    8-device subprocess tests and the two compile-heavy sweep files
+    (test_models ~2 min of jit compiles, test_perf_paths ~30 s).  The full
+    tier-1 gate stays ``pytest -q``."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "pytest", "-q", "-m", "not slow",
+           "-p", "no:cacheprovider",
+           "--ignore", os.path.join("tests", "test_models.py"),
+           "--ignore", os.path.join("tests", "test_perf_paths.py"),
+           "tests"]
+    return subprocess.run(cmd, cwd=repo, env=env).returncode
+
+
 def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        sys.exit(smoke())
     from benchmarks import paper_tables as P
     from benchmarks.roofline import roofline_rows
     from benchmarks.tpu_tradeoff import rows as tpu_rows

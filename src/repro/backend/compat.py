@@ -1,0 +1,202 @@
+"""jax version-portability layer (supported range: 0.4.37 — 0.7.x).
+
+Every jax API whose surface moved between 0.4.x and 0.7.x is shimmed HERE
+and nowhere else: the rest of the repo imports these helpers and never
+probes ``jax.__version__``, ``hasattr(jax, ...)``, or constructs
+``pltpu.*`` objects directly.  This is what lets the SSR latency-throughput
+explorer retarget backends (the paper's §6 portability argument): the
+execution layer is decoupled from any single jax vintage, so the same code
+is green on CPU-only jax 0.4.37 and lights up unchanged on TPU 0.7.x.
+
+Shimmed surfaces:
+  * ``pltpu.TPUCompilerParams`` (0.4.x)  vs  ``pltpu.CompilerParams`` (0.7)
+  * Pallas TPU memory spaces (``VMEM``/``SMEM``/``ANY`` scratch shapes)
+  * ``jax.sharding.AxisType`` + ``jax.make_mesh(..., axis_types=...)``
+    (absent on 0.4.x — plain ``jax.make_mesh``/``mesh_utils`` fallback)
+  * ``jax.set_mesh`` / ``jax.sharding.use_mesh``  vs  ``with mesh:``
+  * ``AbstractMesh(sizes, names)``  vs  ``AbstractMesh(((name, size), ...))``
+  * ``jax.shard_map(..., axis_names=...)`` (partial-manual)  vs
+    ``jax.experimental.shard_map.shard_map`` (full-manual fallback: 0.4.x
+    partial-auto is NotImplemented eagerly and miscompiles under SPMD)
+  * ``lax.pcast(..., to="varying")`` (no-op before the varying-axes rework)
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec
+
+SUPPORTED_RANGE = ("0.4.37", "0.7")
+
+
+def jax_version() -> Tuple[int, ...]:
+    """Parsed jax version, numeric components only (e.g. (0, 4, 37)).
+    A pre-release/dev suffix contributes its leading digits then ends the
+    parse: "0.7.0rc1" -> (0, 7, 0), "0.4.38.dev2025" -> (0, 4, 38)."""
+    import re
+    parts = []
+    for p in jax.__version__.split("."):
+        m = re.match(r"\d+", p)
+        if not m:
+            break
+        parts.append(int(m.group()))
+        if m.end() != len(p):
+            break
+    return tuple(parts)
+
+
+# ---------------------------------------------------------------------------
+# backend identity
+# ---------------------------------------------------------------------------
+
+def backend() -> str:
+    """The default jax backend platform name ("cpu" / "tpu" / "gpu")."""
+    return jax.default_backend()
+
+
+def on_tpu() -> bool:
+    return backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Pallas TPU symbols
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _pltpu():
+    from jax.experimental.pallas import tpu as pltpu_mod
+    return pltpu_mod
+
+
+def tpu_compiler_params(*, dimension_semantics=None, **kwargs):
+    """``pltpu.CompilerParams`` (jax>=0.7) or ``pltpu.TPUCompilerParams``
+    (jax 0.4.x–0.6.x) — whichever the installed jax provides."""
+    mod = _pltpu()
+    cls = getattr(mod, "CompilerParams", None) or mod.TPUCompilerParams
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = tuple(dimension_semantics)
+    return cls(**kwargs)
+
+
+def vmem_scratch(shape, dtype):
+    """VMEM scratch allocation for ``pallas_call(scratch_shapes=...)``."""
+    return _pltpu().VMEM(tuple(shape), dtype)
+
+
+def smem_scratch(shape, dtype):
+    """SMEM scratch allocation for ``pallas_call(scratch_shapes=...)``."""
+    return _pltpu().SMEM(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# meshes
+# ---------------------------------------------------------------------------
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """Device mesh with explicit-Auto axis types where the API exists
+    (jax>=0.7 GSPMD propagation + constraints), plain mesh elsewhere."""
+    shape = tuple(shape)
+    axes = tuple(axes)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None and hasattr(jax, "make_mesh"):
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:  # make_mesh without axis_types kwarg
+            pass
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils  # pragma: no cover (jax<0.4.35)
+    devices = mesh_utils.create_device_mesh(shape)
+    return Mesh(devices, axes)
+
+
+def use_mesh(mesh):
+    """Context manager placing ``mesh`` in ambient context.
+
+    jax>=0.7: ``jax.set_mesh``; 0.5.x–0.6.x: ``jax.sharding.use_mesh``;
+    0.4.x: the classic ``with mesh:`` context (Mesh is its own manager)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+
+    @contextlib.contextmanager
+    def _ctx():
+        with mesh:
+            yield mesh
+    return _ctx()
+
+
+def make_abstract_mesh(shape: Sequence[int], names: Sequence[str]):
+    """``jax.sharding.AbstractMesh`` across the constructor split:
+    jax>=0.5 takes ``(sizes, names)``; 0.4.x takes a single
+    ``((name, size), ...)`` shape tuple."""
+    from jax.sharding import AbstractMesh
+    shape = tuple(shape)
+    names = tuple(names)
+    try:
+        return AbstractMesh(shape, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, shape)))
+
+
+def mesh_axis_size(mesh, name) -> int:
+    """Product of the sizes of ``name`` (str or sequence of str) on any
+    mesh flavour (Mesh / AbstractMesh) — 1 for absent axes."""
+    names = (name,) if isinstance(name, str) else tuple(name)
+    sizes = [mesh.shape[n] for n in names if n in mesh.shape]
+    return int(np.prod(sizes)) if sizes else 1
+
+
+# ---------------------------------------------------------------------------
+# shard_map / varying-axes
+# ---------------------------------------------------------------------------
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              manual_axes: Optional[frozenset] = None):
+    """Portable shard_map with a subset of axes manual.
+
+    jax>=0.7 exposes ``jax.shard_map(..., axis_names=manual_axes)`` and the
+    non-manual axes stay auto (GSPMD).  On 0.4.x partial-auto shard_map is
+    NotImplemented eagerly and miscompiles under SPMD partitioning, so the
+    fallback runs FULL-manual with ``check_rep=False``: replicated in_specs
+    become redundant per-device compute over the would-be-auto axes —
+    numerically identical, and correct on single-host CPU meshes."""
+    if manual_axes is None:
+        manual_axes = frozenset(mesh.axis_names)
+    new_sm = getattr(jax, "shard_map", None)
+    if new_sm is not None:
+        try:
+            return new_sm(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs,
+                          axis_names=frozenset(manual_axes))
+        except TypeError:  # pragma: no cover (axis_names kwarg renamed)
+            pass
+    from jax.experimental.shard_map import shard_map as old_sm
+    return old_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
+def pcast_varying(x, axes):
+    """``lax.pcast(x, axes, to="varying")`` where the varying-axes system
+    exists; identity on older jax (full-manual shard_map has no replication
+    tracking to inform)."""
+    from jax import lax
+    if hasattr(lax, "pcast"):
+        return lax.pcast(x, tuple(axes), to="varying")
+    if hasattr(lax, "pvary"):
+        return lax.pvary(x, tuple(axes))
+    return x
+
+
+__all__ = [
+    "SUPPORTED_RANGE", "jax_version", "backend", "on_tpu",
+    "tpu_compiler_params", "vmem_scratch", "smem_scratch",
+    "make_mesh", "use_mesh", "make_abstract_mesh", "mesh_axis_size",
+    "shard_map", "pcast_varying", "PartitionSpec",
+]

@@ -1,0 +1,129 @@
+"""Kernel-dispatch front door: one routing decision for every hot kernel.
+
+Each ``dispatch_*`` picks the execution path for its kernel:
+
+  * ``pallas``    — compiled Pallas-TPU (the fused production path);
+  * ``interpret`` — the same Pallas kernel under the interpreter (CPU
+                    correctness testing of the real kernel body);
+  * ``ref``       — the pure-jnp oracle in ``repro.kernels.ref`` (XLA-fused
+                    on any backend; the CPU serving/training path).
+
+Selection: ``REPRO_KERNELS`` env var forces a path ("pallas" /
+"interpret" / "ref"); the default "auto" resolves to ``pallas`` on TPU and
+``ref`` elsewhere.  Models, the serving engine, and the pipeline executor
+all call through here, so one flag flips the whole system between the
+fused kernels and the oracle — and the kernel sweep tests compare the two.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.backend import compat
+
+_PATHS = ("pallas", "interpret", "ref")
+
+
+def kernel_path() -> str:
+    """The active kernel path ("pallas" | "interpret" | "ref")."""
+    mode = os.environ.get("REPRO_KERNELS", "auto")
+    if mode == "auto":
+        return "pallas" if compat.on_tpu() else "ref"
+    return mode if mode in _PATHS else "ref"
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def use_flash(cfg, q, k) -> bool:
+    """Whether the model's attention should route to the fused kernel:
+    only when shapes tile cleanly to the MXU and we're not on the oracle
+    path.  (The jnp fallback is itself XLA-fused on CPU.)"""
+    if kernel_path() == "ref":
+        return False
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    return (s % 8 == 0 and t % 128 == 0 and d % 128 == 0)
+
+
+def dispatch_flash_attention(q, k, v, *, q_pos, k_pos, k_valid=None,
+                             causal=True, window=0, softcap=0.0):
+    """Layout adapter: (B,S,H,D) model layout -> (B,H,S,D) kernel layout;
+    returns (B, S, H*D)."""
+    from repro.kernels import ref as R
+    qk = jnp.swapaxes(q, 1, 2)
+    kk = jnp.swapaxes(k, 1, 2)
+    vk = jnp.swapaxes(v, 1, 2)
+    if k_valid is None:
+        k_valid = jnp.ones((kk.shape[2],), jnp.int32)
+    path = kernel_path()
+    if path == "ref":
+        out = R.flash_attention_ref(qk, kk, vk, q_pos, k_pos, k_valid,
+                                    causal=causal, window=window,
+                                    softcap=softcap)
+    else:
+        from repro.kernels.flash_attention import flash_attention_bhsd
+        out = flash_attention_bhsd(qk, kk, vk, q_pos, k_pos, k_valid,
+                                   causal=causal, window=window,
+                                   softcap=softcap,
+                                   interpret=(path == "interpret"))
+    return jnp.swapaxes(out, 1, 2).reshape(q.shape[0], q.shape[1], -1)
+
+
+# ---------------------------------------------------------------------------
+# fused matmul
+# ---------------------------------------------------------------------------
+
+def dispatch_matmul(x, w, bias=None, *, activation="none", out_dtype=None):
+    from repro.kernels import ref as R
+    path = kernel_path()
+    if path == "ref":
+        return R.matmul_fused_ref(x, w, bias, activation=activation,
+                                  out_dtype=out_dtype)
+    from repro.kernels.fused_matmul import matmul_fused
+    return matmul_fused(x, w, bias, activation=activation,
+                        out_dtype=out_dtype,
+                        interpret=(path == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# one-pass norm
+# ---------------------------------------------------------------------------
+
+def dispatch_layernorm(x, scale, bias=None, *, kind="rmsnorm", eps=1e-6):
+    from repro.kernels import ref as R
+    path = kernel_path()
+    if path == "ref":
+        return R.norm_onepass_ref(x, scale, bias, kind=kind, eps=eps)
+    from repro.kernels.layernorm import norm_onepass
+    return norm_onepass(x, scale, bias, kind=kind, eps=eps,
+                        interpret=(path == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# linear recurrence scan
+# ---------------------------------------------------------------------------
+
+def use_scan_kernel() -> bool:
+    """Whether recurrent models should flatten into the Pallas linear-scan
+    kernel (vs the model-side chunked associative scan on the ref path)."""
+    return kernel_path() != "ref"
+
+
+def dispatch_linear_scan(a, b, h0=None):
+    """a, b: (N, S, F).  Returns all states (N, S, F)."""
+    from repro.kernels import ref as R
+    path = kernel_path()
+    if path == "ref":
+        return R.linear_scan_ref(a, b, h0)
+    from repro.kernels.linear_scan import linear_scan
+    return linear_scan(a, b, h0, interpret=(path == "interpret"))
+
+
+__all__ = [
+    "kernel_path", "use_flash", "use_scan_kernel",
+    "dispatch_flash_attention", "dispatch_matmul", "dispatch_layernorm",
+    "dispatch_linear_scan",
+]

@@ -22,7 +22,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.backend import compat
 
 NEG_INF = -1e30
 
@@ -121,11 +122,11 @@ def flash_attention_bhsd(q, k, v, q_pos, k_pos, k_valid, *, causal=True,
         out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bq, d), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
+            compat.vmem_scratch((bq, d), jnp.float32),
+            compat.vmem_scratch((bq, 1), jnp.float32),
+            compat.vmem_scratch((bq, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

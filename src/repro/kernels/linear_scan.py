@@ -14,7 +14,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.backend import compat
 
 
 def _scan_kernel(a_ref, b_ref, h0_ref, o_ref, h_ref, *, block_s):
@@ -64,8 +65,8 @@ def linear_scan(a, b, h0=None, *, block_s=256, block_f=512, interpret=False):
         ],
         out_specs=pl.BlockSpec((1, bs, bf), lambda i, fb, sb: (i, sb, fb)),
         out_shape=jax.ShapeDtypeStruct((n, s, f), a.dtype),
-        scratch_shapes=[pltpu.VMEM((1, bf), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.vmem_scratch((1, bf), jnp.float32)],
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, h0)

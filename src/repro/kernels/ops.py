@@ -1,104 +1,21 @@
-"""jit'd public wrappers for the Pallas kernels with backend dispatch.
+"""Public kernel wrappers — thin aliases over the dispatch front door.
 
-Dispatch policy (``REPRO_KERNELS`` env var):
-  * "auto" (default): compiled Pallas on TPU, jnp reference elsewhere;
-  * "interpret":      Pallas in interpret mode (CPU correctness testing);
-  * "ref":            always the jnp reference.
-
-Models call these wrappers, so the same model code runs the fused kernels on
-TPU and the oracle path on CPU — and the kernel sweep tests compare the two.
+The routing decision (Pallas-TPU / Pallas-interpret / jnp reference, with
+the ``REPRO_KERNELS`` override) lives in ``repro.backend.dispatch``; this
+module keeps the historical ``repro.kernels.ops`` names as a stable
+back-compat API for external callers and notebooks (in-repo code imports
+``repro.backend.dispatch`` directly).
 """
 from __future__ import annotations
 
-import os
+from repro.backend.dispatch import (dispatch_flash_attention,
+                                    dispatch_layernorm, dispatch_linear_scan,
+                                    dispatch_matmul, kernel_path, use_flash)
 
-import jax
-import jax.numpy as jnp
+flash_attention = dispatch_flash_attention
+matmul_fused = dispatch_matmul
+norm_onepass = dispatch_layernorm
+linear_scan = dispatch_linear_scan
 
-from repro.kernels import ref as R
-from repro.kernels.flash_attention import flash_attention_bhsd
-from repro.kernels.fused_matmul import matmul_fused as _matmul_pallas
-from repro.kernels.layernorm import norm_onepass as _norm_pallas
-from repro.kernels.linear_scan import linear_scan as _scan_pallas
-
-
-def _mode() -> str:
-    m = os.environ.get("REPRO_KERNELS", "auto")
-    if m == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "ref"
-    return {"interpret": "interpret", "ref": "ref",
-            "pallas": "pallas"}.get(m, "ref")
-
-
-# ---------------------------------------------------------------------------
-# flash attention
-# ---------------------------------------------------------------------------
-
-def use_flash(cfg, q, k) -> bool:
-    """Whether the model's attention should route to the fused kernel:
-    only when shapes tile cleanly to the MXU and we're not on the oracle
-    path.  (The jnp fallback is itself XLA-fused on CPU.)"""
-    if _mode() == "ref":
-        return False
-    b, s, h, d = q.shape
-    t = k.shape[1]
-    return (s % 8 == 0 and t % 128 == 0 and d % 128 == 0)
-
-
-def flash_attention(q, k, v, *, q_pos, k_pos, k_valid=None, causal=True,
-                    window=0, softcap=0.0):
-    """Layout adapter: (B,S,H,D) model layout -> (B,H,S,D) kernel layout."""
-    qk = jnp.swapaxes(q, 1, 2)
-    kk = jnp.swapaxes(k, 1, 2)
-    vk = jnp.swapaxes(v, 1, 2)
-    if k_valid is None:
-        k_valid = jnp.ones((kk.shape[2],), jnp.int32)
-    mode = _mode()
-    if mode == "ref":
-        out = R.flash_attention_ref(qk, kk, vk, q_pos, k_pos, k_valid,
-                                    causal=causal, window=window,
-                                    softcap=softcap)
-    else:
-        out = flash_attention_bhsd(qk, kk, vk, q_pos, k_pos, k_valid,
-                                   causal=causal, window=window,
-                                   softcap=softcap,
-                                   interpret=(mode == "interpret"))
-    return jnp.swapaxes(out, 1, 2).reshape(q.shape[0], q.shape[1], -1)
-
-
-# ---------------------------------------------------------------------------
-# fused matmul
-# ---------------------------------------------------------------------------
-
-def matmul_fused(x, w, bias=None, *, activation="none", out_dtype=None):
-    mode = _mode()
-    if mode == "ref":
-        return R.matmul_fused_ref(x, w, bias, activation=activation,
-                                  out_dtype=out_dtype)
-    return _matmul_pallas(x, w, bias, activation=activation,
-                          out_dtype=out_dtype,
-                          interpret=(mode == "interpret"))
-
-
-# ---------------------------------------------------------------------------
-# one-pass norm
-# ---------------------------------------------------------------------------
-
-def norm_onepass(x, scale, bias=None, *, kind="rmsnorm", eps=1e-6):
-    mode = _mode()
-    if mode == "ref":
-        return R.norm_onepass_ref(x, scale, bias, kind=kind, eps=eps)
-    return _norm_pallas(x, scale, bias, kind=kind, eps=eps,
-                        interpret=(mode == "interpret"))
-
-
-# ---------------------------------------------------------------------------
-# linear recurrence scan
-# ---------------------------------------------------------------------------
-
-def linear_scan(a, b, h0=None):
-    """a, b: (N, S, F).  Returns all states (N, S, F)."""
-    mode = _mode()
-    if mode == "ref":
-        return R.linear_scan_ref(a, b, h0)
-    return _scan_pallas(a, b, h0, interpret=(mode == "interpret"))
+__all__ = ["flash_attention", "matmul_fused", "norm_onepass", "linear_scan",
+           "use_flash", "kernel_path"]

@@ -146,11 +146,13 @@ def dot_flops(hlo: str) -> float:
             for d in res_dims:
                 res_n *= d
             # contracting dim sizes come from the lhs operand's shape:
-            # inline if present, else via the computation's symbol table.
+            # inline if present (pre-0.5 HLO text: "dot(f32[8,8]{1,0} %x,
+            # ...)" — NB the shape itself contains commas), else via the
+            # computation's symbol table (post-opt HLO drops operand types).
             inside = ln.split("dot(", 1)[1]
-            shapes = _SHAPE_RE.findall(inside.split(",")[0])
-            if shapes:
-                lhs_dims = [int(d) for d in shapes[0][1].split(",")
+            m_inline = re.match(r"\s*([a-z0-9]+)\[([0-9,]*)\]", inside)
+            if m_inline and m_inline.group(1) in _DTYPE_BYTES:
+                lhs_dims = [int(d) for d in m_inline.group(2).split(",")
                             if d.strip()]
             else:
                 if syms is None:

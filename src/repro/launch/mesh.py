@@ -10,26 +10,22 @@ the spatial/hybrid executor.
 These are FUNCTIONS (never module-level constants) so importing this module
 never touches jax device state — required because the dry-run must set
 XLA_FLAGS before first jax init while tests/benches see 1 device.
+
+All mesh construction and ambient-mesh context handling routes through
+``repro.backend.compat`` — the jax 0.4.x/0.7.x API split lives there.
 """
 from __future__ import annotations
 
-import contextlib
-
 import jax
+
+from repro.backend import compat
+from repro.backend.compat import use_mesh  # re-export (public API)
 
 
 def _make_mesh(shape, axes):
-    # Auto axis types: we rely on GSPMD propagation + constraints.
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
-
-
-def use_mesh(mesh):
-    """Context manager putting `mesh` in ambient context (jax>=0.7:
-    jax.set_mesh; older: jax.sharding.use_mesh)."""
-    if hasattr(jax, "set_mesh"):
-        return jax.set_mesh(mesh)
-    return jax.sharding.use_mesh(mesh)  # pragma: no cover
+    # Auto axis types (where the installed jax has them): we rely on GSPMD
+    # propagation + constraints.
+    return compat.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -8,8 +8,9 @@ Conventions:
     does — see ``repro.kernels``).
 
 The SSR "fine-grained pipeline" for nonlinear ops appears here as the
-*dispatch point*: ``attention``/``rmsnorm`` route to the fused Pallas kernels
-on TPU (``repro.kernels.ops``) and to the jnp reference elsewhere.
+*dispatch point*: ``attention``/``rmsnorm`` route through the kernel
+dispatch front door (``repro.backend.dispatch``) to the fused Pallas
+kernels on TPU and to the jnp reference elsewhere.
 """
 from __future__ import annotations
 
@@ -168,19 +169,20 @@ def _attend(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, k_valid, causal,
 
     q: (B,S,H,D); k,v: (B,T,Hkv,D); q_pos: (S,) absolute query positions;
     k_pos: (T,) absolute key positions; k_valid: (T,) bool or None.
-    Dispatches to the fused flash kernel on TPU (repro.kernels.ops);
-    long-prefill falls back to q-chunked attention so the (S,T) score
-    matrix never materializes at full size (flash-attention structure,
-    visible to XLA on every backend — §Perf jamba iteration 2)."""
+    Dispatches to the fused flash kernel on TPU via the dispatch front door
+    (repro.backend.dispatch); long-prefill falls back to q-chunked attention
+    so the (S,T) score matrix never materializes at full size
+    (flash-attention structure, visible to XLA on every backend — §Perf
+    jamba iteration 2)."""
     import os
 
-    from repro.kernels import ops as kops
+    from repro.backend import dispatch as kops
     b, s, h, hd = q.shape
     hk = k.shape[2]
     groups = h // hk
 
     if kops.use_flash(cfg, q, k):
-        return kops.flash_attention(
+        return kops.dispatch_flash_attention(
             q, k, v, q_pos=q_pos, k_pos=k_pos, k_valid=k_valid,
             causal=causal, window=window,
             softcap=cfg.attn_logit_softcap).astype(dt)

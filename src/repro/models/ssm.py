@@ -6,8 +6,9 @@ Each mixer exposes:
 where ``state`` is the O(1) recurrent state used for decode; ``state=None``
 runs the full-sequence (chunked-parallel where possible) form.
 
-The inner recurrences route through ``repro.kernels.ops.linear_scan`` (Pallas
-on TPU, chunked ``jax.lax`` elsewhere) — this is the TPU analogue of the
+The inner recurrences route through the kernel dispatch front door
+(``repro.backend.dispatch.dispatch_linear_scan`` — Pallas on TPU, chunked
+``jax.lax`` elsewhere) — this is the TPU analogue of the
 paper's line-buffer fine-grained pipeline: a single streaming pass that
 carries running state instead of a second full read of the sequence.
 """
@@ -97,19 +98,18 @@ def linear_scan_chunked(a, b, h0=None, chunk: int = 128):
 
 def _scan_dispatch(a, b, h0=None):
     """Route the (B,S,di,n) recurrence through the Pallas linear-scan kernel
-    on TPU, chunked associative scan elsewhere.  Returns (h_all, h_last)."""
-    import os
-    mode = os.environ.get("REPRO_KERNELS", "auto")
-    on_tpu = jax.default_backend() == "tpu"
-    if (mode == "auto" and on_tpu) or mode in ("pallas", "interpret"):
-        from repro.kernels import ops as kops
+    on TPU, chunked associative scan elsewhere.  Returns (h_all, h_last).
+    The path choice lives in the dispatch front door."""
+    from repro.backend import dispatch
+    if dispatch.use_scan_kernel():
         B, S = a.shape[:2]
         feat = a.shape[2:]
         f = 1
         for d in feat:
             f *= d
         h0f = None if h0 is None else h0.reshape(B, f)
-        h_all = kops.linear_scan(a.reshape(B, S, f), b.reshape(B, S, f), h0f)
+        h_all = dispatch.dispatch_linear_scan(
+            a.reshape(B, S, f), b.reshape(B, S, f), h0f)
         h_all = h_all.reshape((B, S) + feat)
         return h_all, h_all[:, -1].astype(jnp.float32)
     return linear_scan_chunked(a, b, h0)

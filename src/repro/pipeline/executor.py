@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.backend import compat
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 
@@ -65,8 +66,8 @@ def make_pipeline_runner(cfg: ModelConfig, mesh: Mesh, n_stages: int,
         state = jnp.zeros_like(x_all[0])
         outputs = jnp.zeros_like(x_all)
         # carries become stage-varying inside the loop: mark them up front
-        state = lax.pcast(state, ("stage",), to="varying")
-        outputs = lax.pcast(outputs, ("stage",), to="varying")
+        state = compat.pcast_varying(state, ("stage",))
+        outputs = compat.pcast_varying(outputs, ("stage",))
 
         def tick(t, carry):
             state, outputs = carry
@@ -91,13 +92,15 @@ def make_pipeline_runner(cfg: ModelConfig, mesh: Mesh, n_stages: int,
         return outputs
 
     # Only the manual 'stage' axis appears in specs; data/model sharding of
-    # activations is handled by GSPMD (auto axes) outside the shard_map.
+    # activations is handled by GSPMD (auto axes) outside the shard_map
+    # where the installed jax supports partial-manual (compat falls back to
+    # full-manual with replicated data/model on 0.4.x).
     batch_in = P(None, None, None, None)
-    pipelined = jax.shard_map(
+    pipelined = compat.shard_map(
         inner, mesh=mesh,
         in_specs=(P("stage"), batch_in),
         out_specs=batch_in,
-        axis_names=frozenset({"stage"}),
+        manual_axes=frozenset({"stage"}),
     )
     return pipelined
 

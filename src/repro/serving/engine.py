@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backend import dispatch
 from repro.models.model import Model
 
 
@@ -60,6 +61,10 @@ class ServingEngine:
 
     def __post_init__(self):
         self.cfg = self.model.cfg
+        # the engine's prefill/decode steps execute their hot kernels via
+        # the dispatch front door (repro.backend.dispatch) inside the model;
+        # record the resolved path so serving stats name what actually ran.
+        self.kernel_path = dispatch.kernel_path()
         self.serve_step = jax.jit(make_serve_step(self.model))
         self._decode_one = jax.jit(
             lambda p, b: self.model.prefill(p, b, self.max_seq))

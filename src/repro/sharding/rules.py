@@ -21,23 +21,9 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.backend.compat import mesh_axis_size  # noqa: F401  (public API)
+
 BATCH_AXES = ("pod", "data")
-
-
-def _axes_in(mesh) -> set:
-    return set(mesh.axis_names)
-
-
-def _size(mesh, name: str) -> int:
-    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1) \
-        if hasattr(mesh, "devices") else mesh.shape.get(name, 1)
-
-
-def mesh_axis_size(mesh, name: str) -> int:
-    try:
-        return int(np.prod([mesh.shape[n] for n in ([name] if isinstance(name, str) else name) if n in mesh.shape]))
-    except Exception:
-        return 1
 
 
 def batch_axes_for(mesh, batch: int) -> Optional[Tuple[str, ...]]:

@@ -8,6 +8,9 @@ import textwrap
 
 import pytest
 
+# Each test compiles a model in a fresh 8-device subprocess: multi-second.
+pytestmark = pytest.mark.slow
+
 ENV = {**os.environ,
        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
        "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")}

@@ -4,8 +4,9 @@ import numpy as np
 import pytest
 
 import jax
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.backend.compat import make_abstract_mesh
 from repro.configs import ARCHS, SHAPES, reduced
 from repro.models import build_model
 from repro.sharding import batch_axes_for, input_specs_tree, param_specs
@@ -13,7 +14,7 @@ from repro.sharding.rules import _fsdp_extend
 
 
 def abstract_mesh(shape=(16, 16), axes=("data", "model")):
-    return AbstractMesh(shape, axes)
+    return make_abstract_mesh(shape, axes)
 
 
 def _check_divisible(specs, tree, mesh, label):

@@ -77,8 +77,10 @@ def test_remat_matches_no_remat():
 
 
 def test_zero1_specs_add_data_axis():
-    from jax.sharding import AbstractMesh, PartitionSpec as P
-    mesh = AbstractMesh((4, 2), ("data", "model"))
+    from jax.sharding import PartitionSpec as P
+
+    from repro.backend.compat import make_abstract_mesh
+    mesh = make_abstract_mesh((4, 2), ("data", "model"))
     params = {"w": jax.ShapeDtypeStruct((8, 16), np.float32)}
     specs = {"w": P(None, "model")}
     z = zero1_specs(specs, params, mesh)
