@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV.
   q1          — §6 cross-platform (Stratix 10 NX) modeling
   roofline    — §Roofline terms per (arch x shape) from the dry-run JSONs
   micro       — measured CPU microbenchmarks of the runnable substrate
+  serving     — measured latency/throughput under Poisson arrivals per
+                slot count (continuous-batching engine)
 
 ``--smoke`` instead runs the fast tier-1 test subset in < 60 s: the
 suite minus the ``slow``-marked 8-device subprocess tests AND minus the
@@ -76,6 +78,7 @@ def main() -> None:
         sys.exit(smoke())
     from benchmarks import paper_tables as P
     from benchmarks.roofline import roofline_rows
+    from benchmarks.serving import rows as serving_rows
     from benchmarks.tpu_tradeoff import rows as tpu_rows
 
     sections = {
@@ -89,6 +92,7 @@ def main() -> None:
         "tpu_tradeoff": tpu_rows,
         "roofline": roofline_rows,
         "micro": micro_rows,
+        "serving": serving_rows,
     }
     only = sys.argv[1:] or list(sections)
     print("name,us_per_call,derived")

@@ -1,0 +1,111 @@
+"""Serving benchmark: measured latency-throughput tradeoff under Poisson
+arrivals, at several slot counts, on the per-slot continuous-batching
+engine.
+
+Each slot count is one *serving design point*: more slots = fuller decode
+batches = higher throughput, but deeper queues = higher per-request
+latency — the serving-side analogue of the paper's batch sweeps.
+``serving_design_points`` returns the sweep as ``core.pareto.DesignPoint``
+rows (strategy ``serving-<n>slots``) so measured serving points sit on the
+same Pareto axes as the analytical design points from ``core/pareto.py``
+(latency in seconds, throughput field carrying generated tok/s).
+
+    PYTHONPATH=src python benchmarks/run.py serving
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def _drive_poisson(eng, cfg, requests: int, new_tokens: int,
+                   rate_rps: float, seed: int):
+    """Submit `requests` Poisson arrivals (exponential gaps at rate_rps)
+    against the wall clock while ticking the engine."""
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_rps, size=requests)
+    arrivals = np.cumsum(gaps)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(3, 12))).astype(np.int32)
+               for _ in range(requests)]
+    t0 = time.perf_counter()
+    nxt = 0
+    busy = True
+    while busy or nxt < requests:
+        now = time.perf_counter() - t0
+        while nxt < requests and arrivals[nxt] <= now:
+            eng.submit(Request(nxt, prompts[nxt], new_tokens))
+            nxt += 1
+        busy = eng.tick()
+        if not busy and nxt < requests:
+            wait = arrivals[nxt] - (time.perf_counter() - t0)
+            time.sleep(min(max(wait, 0.0), 0.01))
+    return time.perf_counter() - t0
+
+
+def serving_sweep(arch: str = "yi-6b", *,
+                  slot_counts: Sequence[int] = (1, 2, 4),
+                  requests: int = 10, new_tokens: int = 8,
+                  rate_rps: float = 20.0, max_seq: int = 64,
+                  seed: int = 0) -> List[dict]:
+    """One engine per slot count over the same Poisson trace; returns a
+    stats dict (engine stats + measured wall/percentiles) per point."""
+    import jax
+
+    from repro.configs import REGISTRY, reduced
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = reduced(REGISTRY[arch], layers=1)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    out = []
+    for slots in slot_counts:
+        eng = ServingEngine(model, params, slots=slots, max_seq=max_seq)
+        # warmup: compile prefill/decode outside the measured window
+        eng.submit(Request(-1, np.arange(1, 6, dtype=np.int32), 2))
+        eng.run()
+        eng.reset_stats()
+        wall = _drive_poisson(eng, cfg, requests, new_tokens, rate_rps, seed)
+        st = eng.stats()
+        st.update(slots=slots, wall_s=wall, arch=arch,
+                  lat_p50_s=float(np.percentile(st["latency_s"], 50)),
+                  lat_p95_s=float(np.percentile(st["latency_s"], 95)),
+                  ttft_p50_s=float(np.percentile(st["ttft_s"], 50)))
+        out.append(st)
+    return out
+
+
+def serving_design_points(stats: Sequence[dict]):
+    """Map measured serving points onto the analytical Pareto axes."""
+    from repro.core.pareto import DesignPoint
+
+    return [DesignPoint(strategy=f"serving-{s['slots']}slots", n_acc=1,
+                        n_batches=s["slots"], latency=s["lat_p50_s"],
+                        throughput_tops=s["throughput_tok_s"],
+                        detail=f"occ={s['slot_occupancy']:.2f}")
+            for s in stats]
+
+
+def rows() -> List[Tuple[str, float, str]]:
+    """benchmarks/run.py section: ``name,us_per_call,derived`` rows."""
+    stats = serving_sweep()
+    from repro.core.pareto import pareto_front
+
+    front = {p.strategy for p in pareto_front(serving_design_points(stats))}
+    out = []
+    for s in stats:
+        name = f"serving/poisson/{s['arch']}/slots{s['slots']}"
+        on_front = f"serving-{s['slots']}slots" in front
+        out.append((name, s["lat_p50_s"] * 1e6,
+                    f"tok_s={s['throughput_tok_s']:.1f} "
+                    f"lat_p95_ms={s['lat_p95_s']*1e3:.1f} "
+                    f"ttft_p50_ms={s['ttft_p50_s']*1e3:.1f} "
+                    f"occupancy={s['slot_occupancy']:.2f} "
+                    f"pareto={'Y' if on_front else 'n'}"))
+    return out

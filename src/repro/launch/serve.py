@@ -1,7 +1,11 @@
-"""Serving launcher: batched inference through the continuous-batching
-engine (the paper's application kind).
+"""Serving launcher: batched inference through the per-slot
+continuous-batching engine (the paper's application kind).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 8
+
+Requests are admitted into slots of a persistent slot-indexed cache
+(admission cost O(prompt), never O(active batch)); the printed stats are
+the serving-side half of the SSR latency-throughput story.
 """
 from __future__ import annotations
 
@@ -23,6 +27,8 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--eos", type=int, default=-1,
+                    help="retire a slot on this token id (-1: disabled)")
     args = ap.parse_args(argv)
 
     cfg = reduced(REGISTRY[args.arch])
@@ -30,16 +36,19 @@ def main(argv=None):
     params = model.init(jax.random.key(0))
     eng = ServingEngine(model, params, slots=args.slots,
                         max_seq=args.max_seq)
+    eos = None if args.eos < 0 else args.eos
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for uid in range(args.requests):
         prompt = rng.integers(1, cfg.vocab_size, size=5).astype(np.int32)
-        eng.submit(Request(uid, prompt, args.new_tokens))
+        eng.submit(Request(uid, prompt, args.new_tokens, eos_token=eos))
     done = eng.run()
     wall = time.perf_counter() - t0
-    tok = sum(len(r.out_tokens) for r in done)
-    print(f"[serve] {len(done)} requests, {tok} tokens, "
-          f"{tok/wall:.1f} tok/s")
+    st = eng.stats()
+    print(f"[serve] {len(done)} requests, {st['gen_tokens']} tokens, "
+          f"{st['gen_tokens']/wall:.1f} tok/s, "
+          f"occupancy={st['slot_occupancy']:.2f}, "
+          f"kernels={st['kernel_path']}")
 
 
 if __name__ == "__main__":

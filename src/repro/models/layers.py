@@ -140,23 +140,30 @@ CHUNKED_ATTN_THRESHOLD = 8192   # chunk prefill queries beyond this length
 
 
 def _attend_block(qg, k, v, cfg, q_pos, k_pos, k_valid, causal, window, dt):
-    """One (q-block) x (full kv) attention.  qg: (B,cq,Hk,G,D)."""
+    """One (q-block) x (full kv) attention.  qg: (B,cq,Hk,G,D).
+
+    q_pos/k_pos/k_valid may be shared across the batch — q_pos (S,),
+    k_pos (T,), k_valid (T,) — or per-batch-element — (B,S)/(B,T)/(B,T) —
+    for per-slot continuous batching where every slot sits at its own
+    decode position.  The mask math broadcasts over either layout."""
     b, cq = qg.shape[:2]
     hd = qg.shape[-1]
-    rel = q_pos[:, None] - k_pos[None, :]
+    rel = q_pos[..., :, None] - k_pos[..., None, :]   # (S,T) or (B,S,T)
     ok = jnp.ones(rel.shape, bool)
     if causal:
         ok &= rel >= 0
     if window and window > 0:
         ok &= rel < window
     if k_valid is not None:
-        ok &= k_valid[None, :]
+        ok &= k_valid[..., None, :]
     bias = jnp.where(ok, 0.0, -1e30)
     scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) / math.sqrt(hd)
     if cfg.attn_logit_softcap > 0:
         c = cfg.attn_logit_softcap
         scores = c * jnp.tanh(scores / c)
+    if bias.ndim == 3:                 # per-batch mask -> (B,1,1,S,T)
+        bias = bias[:, None, None]
     scores = scores + bias
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(dt), v.astype(dt))
@@ -180,8 +187,9 @@ def _attend(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, k_valid, causal,
     b, s, h, hd = q.shape
     hk = k.shape[2]
     groups = h // hk
+    batched_pos = q_pos.ndim > 1 or k_pos.ndim > 1
 
-    if kops.use_flash(cfg, q, k):
+    if not batched_pos and kops.use_flash(cfg, q, k):
         return kops.dispatch_flash_attention(
             q, k, v, q_pos=q_pos, k_pos=k_pos, k_valid=k_valid,
             causal=causal, window=window,
@@ -190,7 +198,8 @@ def _attend(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, k_valid, causal,
     qg = q.reshape(b, s, hk, groups, hd)
     thresh = int(os.environ.get("REPRO_CHUNKED_ATTN",
                                 CHUNKED_ATTN_THRESHOLD))
-    if thresh and s > thresh and s % (cq := thresh // 4) == 0:
+    if not batched_pos and thresh and s > thresh \
+            and s % (cq := thresh // 4) == 0:
         nc = s // cq
         qc = jnp.moveaxis(qg.reshape(b, nc, cq, hk, groups, hd), 1, 0)
         pc = q_pos.reshape(nc, cq)
@@ -205,6 +214,17 @@ def _attend(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, k_valid, causal,
 
     return _attend_block(qg, k, v, cfg, q_pos, k_pos, k_valid, causal,
                          window, dt)
+
+
+def ring_k_positions(last, W: int):
+    """Absolute position of every row of a ring cache whose newest token
+    sits at position ``last`` — a scalar, or (B, 1) for per-slot decode.
+    Returns (k_pos, k_valid): rows not yet written get negative positions
+    and are masked.  This is THE ring invariant; both the lock-step and
+    the per-slot decode paths must read the cache through it."""
+    i = jnp.arange(W)
+    k_pos = last - ((last - i) % W)
+    return k_pos, k_pos >= 0
 
 
 def cross_kv(p, enc_out, cfg: ModelConfig):
@@ -236,7 +256,10 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
 
     kv_cache: {"k": (B, W, Hkv, D), "v": ...} where W is max_seq for global
     attention or the window size (ring buffer) for local attention.
-    cache_index: scalar int — tokens already in the cache.
+    cache_index: tokens already in the cache — a scalar int when the whole
+    batch decodes in lock-step, or a (B,) vector for per-slot continuous
+    batching (each slot writes its own cache row, attends under its own
+    length mask, and rotates RoPE at its own position).
     Returns (out, new_kv_cache_or_None).
     """
     b, s, _ = x.shape
@@ -263,16 +286,23 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
         k = apply_norm(p["k_norm"], k, cfg)
 
     offset = 0 if cache_index is None else cache_index
+    per_slot = cache_index is not None \
+        and getattr(cache_index, "ndim", 0) == 1       # (B,) slot positions
+    if per_slot:
+        pos_bs = offset[:, None] + jnp.arange(s)[None, :]         # (B,S)
     if positions is None:
-        base = offset + jnp.arange(s)[None, :]
-        positions = jnp.broadcast_to(base, (b, s))
+        if per_slot:
+            positions = pos_bs
+        else:
+            base = offset + jnp.arange(s)[None, :]
+            positions = jnp.broadcast_to(base, (b, s))
     if use_rope and cfg.rope_theta > 0:
         q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
         if kv_source is None:
             k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
 
     causal = causal and kv_source is None
-    q_pos = jnp.arange(s) + offset
+    q_pos = pos_bs if per_slot else jnp.arange(s) + offset
 
     if kv_cache is None:
         out = _attend(q, k, v, cfg, q_pos=q_pos, k_pos=jnp.arange(k.shape[1]),
@@ -282,6 +312,10 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
         W = kv_cache["k"].shape[1]
         cdt = kv_cache["k"].dtype
         if s > 1:
+            if per_slot:
+                raise NotImplementedError(
+                    "per-slot prefill goes through batch-1 prefill + "
+                    "scatter_cache_slot, not a vector cache_index")
             # ---- prefill: attend over the fresh full-length k/v ----
             out = _attend(q, k, v, cfg, q_pos=q_pos,
                           k_pos=jnp.arange(k.shape[1]), k_valid=None,
@@ -295,16 +329,27 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
             new_k = kv_cache["k"].at[:, slots].set(k_tail)
             new_v = kv_cache["v"].at[:, slots].set(v_tail)
             new_cache = {"k": new_k, "v": new_v}
+        elif per_slot:
+            # ---- per-slot decode: each batch row writes its own cache
+            # row and attends under its own length mask (slots sit at
+            # different positions under continuous batching) ----
+            rows = pos_bs % W                                       # (B,S)
+            bidx = jnp.arange(b)[:, None]
+            new_k = kv_cache["k"].at[bidx, rows].set(k.astype(cdt))
+            new_v = kv_cache["v"].at[bidx, rows].set(v.astype(cdt))
+            new_cache = {"k": new_k, "v": new_v}
+            k_pos, k_valid = ring_k_positions(
+                (offset + s - 1)[:, None], W)        # (B,W) per-slot mask
+            out = _attend(q, new_k, new_v, cfg, q_pos=q_pos, k_pos=k_pos,
+                          k_valid=k_valid, causal=causal, window=window,
+                          dt=dt)
         else:
             # ---- decode: ring write then attend over the cache ----
-            t_new = offset + s                       # total tokens after step
             slots = (offset + jnp.arange(s)) % W
             new_k = kv_cache["k"].at[:, slots].set(k.astype(cdt))
             new_v = kv_cache["v"].at[:, slots].set(v.astype(cdt))
             new_cache = {"k": new_k, "v": new_v}
-            i = jnp.arange(W)
-            k_pos = (t_new - 1) - ((t_new - 1 - i) % W)
-            k_valid = k_pos >= 0
+            k_pos, k_valid = ring_k_positions(offset + s - 1, W)
             out = _attend(q, new_k, new_v, cfg, q_pos=q_pos, k_pos=k_pos,
                           k_valid=k_valid, causal=causal, window=window,
                           dt=dt)
@@ -383,6 +428,13 @@ def apply_moe(p, x, cfg: ModelConfig):
     # so a round routes n slots over e experts (not n*k — that would k²-
     # inflate the expert matmul FLOPs).
     cap = max(1, int(math.ceil(n * moe.capacity_factor / e)))
+    if s == 1:
+        # decode: drop-free capacity.  Capacity drops couple batch rows
+        # (tokens compete for expert rows via the routing cumsum), which
+        # would make one serving slot's next token depend on what the
+        # OTHER slots decoded — breaking the continuous-batching parity
+        # guarantee.  n is tiny at decode, so the extra rows are free.
+        cap = n
     dt = x.dtype
     xf = x.reshape(n, d)
 

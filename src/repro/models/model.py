@@ -229,9 +229,44 @@ class Model:
             cache_index=jnp.int32(0), collect_state=True)
         return logits[:, -1:], cache
 
+    def prefill_into_slot(self, params, full_cache, tokens, slot, length,
+                          max_seq: int):
+        """Per-slot prefill for continuous batching (LM families only).
+
+        Runs a batch-1 prefill over ``tokens`` (1, P) — right-padded to P;
+        ``length`` (traced scalar) is the true prompt length — against a
+        fresh cache, then scatters that cache into batch row ``slot`` of
+        the persistent ``full_cache`` without touching any other slot.
+        Padding is exact under causal attention (pad tokens sit *after*
+        every valid token, and their cache rows are overwritten by decode
+        before any length mask admits them).
+
+        Returns (logits at the last valid prompt position (1, 1, V),
+        new_full_cache).  Admission cost is O(prompt), independent of how
+        many other slots are mid-decode."""
+        cfg = self.cfg
+        if cfg.family in ("audio", "vision", "vlm") or cfg.mrope_sections:
+            raise NotImplementedError(
+                "prefill_into_slot serves token-LM families "
+                "(dense/moe/hybrid/ssm)")
+        x = L.embed(params["embed"], tokens, cfg).astype(cfg.dtype)
+        cache = self.init_cache(x.shape[0], max_seq)
+        hidden, cache, _ = self._lm_hidden(
+            params, x, cache=cache, cache_index=jnp.int32(0),
+            collect_state=True)
+        last = lax.dynamic_slice_in_dim(hidden, length - 1, 1, axis=1)
+        logits = L.logits_head(params.get("embed"), params.get("head"),
+                               last, cfg)
+        return logits, T.scatter_cache_slot(full_cache, cache, slot)
+
     def decode_step(self, params, cache, tokens, cache_index,
                     positions=None):
-        """One decode step.  tokens: (B, 1).  Returns (logits, new_cache)."""
+        """One decode step.  tokens: (B, 1).  Returns (logits, new_cache).
+
+        ``cache_index`` is a scalar when all rows decode in lock-step, or a
+        (B,) vector of per-slot positions for continuous batching (each
+        slot then writes its own cache row and attends under its own
+        length mask — see ``layers.multi_head_attention``)."""
         cfg = self.cfg
         x = L.embed(params["embed"], tokens, cfg).astype(cfg.dtype)
         if cfg.family == "audio":

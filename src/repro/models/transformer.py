@@ -229,6 +229,22 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
     return make_cache(cfg, batch, max_seq, enc_len=enc_len, dtype=dtype)
 
 
+def scatter_cache_slot(full_cache, part_cache, slot):
+    """Write a small-batch cache into batch rows [slot, slot+b) of a
+    persistent slot-indexed cache, leaving every other slot untouched.
+
+    Cache leaves are (num_groups, batch, ...), so the batch axis is axis 1
+    and the write lowers to one ``dynamic_update_slice`` per leaf — the
+    admission primitive of per-slot continuous batching (KV rows AND
+    recurrent SSM/conv states both live on that axis, so one tree-map
+    covers attention, hybrid, and pure-SSM families alike).  ``slot`` may
+    be a traced scalar."""
+    def leaf(full, part):
+        return lax.dynamic_update_slice_in_dim(
+            full, part.astype(full.dtype), slot, axis=1)
+    return jax.tree.map(leaf, full_cache, part_cache)
+
+
 # ---------------------------------------------------------------------------
 # stacked-parameter init
 # ---------------------------------------------------------------------------

@@ -1,11 +1,23 @@
-"""Batched serving engine: prefill + decode with a slot-based continuous
-batching scheduler (vLLM-lite).
+"""Batched serving engine: true per-slot continuous batching (vLLM-style).
+
+The engine owns ONE slot-indexed KV/recurrent cache for its whole lifetime
+(batch axis = slots).  Admission prefills a single request (batch 1) and
+scatters its cache into the free slot via ``dynamic_update_slice`` — cost
+O(prompt), never O(active batch).  Decode is one batched step over all
+slots with a **per-slot position vector**: each slot writes its own cache
+row, rotates RoPE at its own position, and attends under its own length
+mask, so mixed-length requests decode at their correct positions.  A slot
+retiring (EOS / max tokens / cache full) never interrupts the other
+slots' decode — the freed slot is simply re-prefilled from the queue.
+
+Guarantee (tested by ``tests/test_serving_parity.py``): the token stream
+of every request is exactly equal to an isolated one-shot greedy decode
+of that request, regardless of arrival order, prompt-length mix, or slot
+count.
 
 ``serve_step`` — the function the decode-shape dry-runs lower — is one
-batched decode step over a fixed slot set.  The ``ServingEngine`` drives it:
-requests occupy slots, finished slots are refilled from the queue, so the
-batch stays full (the serving-side utilization knob the paper's throughput
-story depends on).
+batched decode step over a fixed slot set and keeps accepting a scalar
+``cache_index`` for lock-step decode.
 """
 from __future__ import annotations
 
@@ -23,7 +35,8 @@ from repro.models.model import Model
 
 def make_serve_step(model: Model):
     """serve_step(params, cache, tokens, cache_index) ->
-    (next_tokens, logits, new_cache) — one greedy decode step."""
+    (next_tokens, logits, new_cache) — one greedy decode step.
+    ``cache_index``: scalar (lock-step) or (B,) per-slot positions."""
 
     def serve_step(params, cache, tokens, cache_index, positions=None):
         logits, cache = model.decode_step(params, cache, tokens, cache_index,
@@ -40,24 +53,48 @@ def make_prefill_step(model: Model, max_seq: int):
     return prefill_step
 
 
+def make_prefill_slot_step(model: Model, max_seq: int):
+    """prefill_slot_step(params, full_cache, tokens, slot, length) ->
+    (next_token, new_full_cache) — admit ONE request into ONE slot."""
+
+    def prefill_slot_step(params, full_cache, tokens, slot, length):
+        logits, new_cache = model.prefill_into_slot(
+            params, full_cache, tokens, slot, length, max_seq)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, new_cache
+
+    return prefill_slot_step
+
+
 @dataclass
 class Request:
     uid: int
     prompt: np.ndarray               # (prompt_len,)
     max_new_tokens: int
+    eos_token: Optional[int] = None  # retire the slot on this token
     out_tokens: List[int] = field(default_factory=list)
     t_submit: float = 0.0
-    t_first: float = 0.0
+    t_first: float = 0.0             # wall time of the first output token
     t_done: float = 0.0
+    slot: int = -1
 
 
 @dataclass
 class ServingEngine:
-    """Fixed-slot continuous batching over a single shared max_seq cache."""
+    """Continuous batching over a persistent slot-indexed cache.
+
+    prefill_bucket: admitted prompts are right-padded to the next multiple
+    of this, bounding jit specializations to O(max_seq / bucket) distinct
+    prefill shapes.  Padding is only exact for attention mixers (causal
+    masking); patterns with recurrent blocks (mamba/mlstm/slstm) fold the
+    pad tokens into the state, so the engine auto-disables bucketing for
+    them and prefills at the exact prompt length.
+    """
     model: Model
     params: Any
     slots: int
     max_seq: int
+    prefill_bucket: int = 16
 
     def __post_init__(self):
         self.cfg = self.model.cfg
@@ -66,71 +103,156 @@ class ServingEngine:
         # record the resolved path so serving stats name what actually ran.
         self.kernel_path = dispatch.kernel_path()
         self.serve_step = jax.jit(make_serve_step(self.model))
-        self._decode_one = jax.jit(
-            lambda p, b: self.model.prefill(p, b, self.max_seq))
+        self._prefill_slot = jax.jit(
+            make_prefill_slot_step(self.model, self.max_seq))
+        if any(not b.mixer.startswith("attn") or b.ffn == "moe"
+               for b in self.cfg.block_pattern):
+            # pad tokens are only exactly neutral under causal attention +
+            # dense FFN: recurrent mixers fold them into the state, and MoE
+            # routing lets them compete for expert capacity.  Prefill those
+            # families at the exact prompt length instead.
+            self.prefill_bucket = 1
+        # smallest sliding-window ring among the mixers: a padded prompt
+        # may never spill past it (the ring's tail write would keep pad
+        # k/v and evict real tokens the gold decode still attends).
+        self._ring_min = min(
+            (min(self.max_seq, self.cfg.window_size)
+             for b in self.cfg.block_pattern if b.mixer == "attn_local"),
+            default=0)
+        # engine-lifetime state -------------------------------------------
+        self._cache = self.model.init_cache(self.slots, self.max_seq)
+        self._pos = np.zeros((self.slots,), np.int32)    # tokens in cache
+        self._cur = np.zeros((self.slots, 1), np.int32)  # next input token
+        self._slot_req: List[Optional[Request]] = [None] * self.slots
         self.queue: List[Request] = []
         self.done: List[Request] = []
+        # stats ------------------------------------------------------------
+        self.decode_steps = 0
+        self._occupied_step_sum = 0       # sum over steps of occupied slots
+        self.prefill_batch_sizes: List[int] = []  # always 1 per admission
+        self.prefill_token_counts: List[int] = []
 
+    # -- public API --------------------------------------------------------
     def submit(self, req: Request):
+        if len(req.prompt) >= self.max_seq:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens cannot fit a "
+                f"max_seq={self.max_seq} slot cache")
         req.t_submit = time.perf_counter()
         self.queue.append(req)
 
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self._slot_req)
+
+    def tick(self) -> bool:
+        """Admit whatever fits, then run one batched decode step.
+        Returns True while there is (or may be) work in flight."""
+        self._admit()
+        if self.active:
+            self._decode_once()
+        return bool(self.active or self.queue)
+
     def run(self, max_steps: int = 10_000):
-        """Simple loop: (re)fill slots via per-slot prefill, then batched
-        decode steps until all requests finish."""
-        while self.queue or getattr(self, "_active", None):
-            self._fill_slots()
-            if not self._active:
-                break
-            self._decode_burst(max_steps)
+        """Drive ticks until every submitted request retires."""
+        steps = 0
+        while self.tick() and steps < max_steps:
+            steps += 1
         return self.done
 
-    # -- internals --------------------------------------------------------
-    def _fill_slots(self):
-        self._active: List[Request] = getattr(self, "_active", [])
-        while self.queue and len(self._active) < self.slots:
-            req = self.queue.pop(0)
-            self._active.append(req)
-        if not self._active:
-            return
-        # batch prefill (pad to same prompt len)
-        plen = max(len(r.prompt) for r in self._active)
-        B = len(self._active)
-        toks = np.zeros((B, plen), np.int32)
-        for i, r in enumerate(self._active):
-            toks[i, plen - len(r.prompt):] = r.prompt
-        logits, cache = self._decode_one(self.params, {"tokens": jnp.asarray(toks)})
-        self._cache = cache
-        self._pos = plen
-        nxt = np.asarray(jnp.argmax(logits[:, -1], -1)).astype(np.int32)
-        now = time.perf_counter()
-        for i, r in enumerate(self._active):
-            r.out_tokens.append(int(nxt[i]))
-            r.t_first = now
-        self._cur = nxt[:, None]
+    def reset_stats(self):
+        """Zero the counters (e.g. after a compile-warmup run) so stats()
+        reports only the measured window.  Active slots are untouched."""
+        self.done = []
+        self.decode_steps = 0
+        self._occupied_step_sum = 0
+        self.prefill_batch_sizes = []
+        self.prefill_token_counts = []
 
-    def _decode_burst(self, max_steps: int):
-        steps = 0
-        while self._active and steps < max_steps:
-            nxt, _, self._cache = self.serve_step(
-                self.params, self._cache, jnp.asarray(self._cur),
-                jnp.int32(self._pos))
-            self._pos += 1
-            steps += 1
-            arr = np.asarray(nxt)
-            still = []
-            now = time.perf_counter()
-            for i, r in enumerate(self._active):
-                r.out_tokens.append(int(arr[i, 0]))
-                if len(r.out_tokens) >= r.max_new_tokens \
-                        or self._pos >= self.max_seq - 1:
-                    r.t_done = now
-                    self.done.append(r)
-                else:
-                    still.append(r)
-            if len(still) != len(self._active):
-                # slots freed: return to fill (simplified: finish burst)
-                self._active = still
-                break
-            self._active = still
-            self._cur = arr
+    def stats(self) -> Dict[str, Any]:
+        """Serving-side latency/throughput numbers for the SSR story."""
+        reqs = self.done
+        gen = sum(len(r.out_tokens) for r in reqs)
+        if reqs:
+            wall = max(r.t_done for r in reqs) - min(r.t_submit for r in reqs)
+        else:
+            wall = 0.0
+        cap = max(self.decode_steps * self.slots, 1)
+        return {
+            "kernel_path": self.kernel_path,
+            "requests": len(reqs),
+            "gen_tokens": gen,
+            "decode_steps": self.decode_steps,
+            "slot_occupancy": self._occupied_step_sum / cap,
+            "throughput_tok_s": gen / wall if wall > 0 else 0.0,
+            "ttft_s": [r.t_first - r.t_submit for r in reqs],
+            "latency_s": [r.t_done - r.t_submit for r in reqs],
+        }
+
+    # -- internals ---------------------------------------------------------
+    def _padded_len(self, n: int) -> int:
+        b = max(self.prefill_bucket, 1)
+        pp = min(-(-n // b) * b, self.max_seq - 1)
+        if self._ring_min:
+            # never pad past a sliding window; a prompt longer than the
+            # window prefills at its exact length (its own tail legally
+            # wraps the ring, exactly as the gold one-shot prefill does).
+            pp = n if n > self._ring_min else min(pp, self._ring_min)
+        return pp
+
+    def _admit(self):
+        while self.queue and self.active < self.slots:
+            self._admit_one(self.queue.pop(0),
+                            self._slot_req.index(None))
+
+    def _admit_one(self, req: Request, slot: int):
+        """Prefill ONE request into ONE free slot: O(prompt) compute, no
+        other slot's cache row or position is touched."""
+        plen = len(req.prompt)
+        toks = np.zeros((1, self._padded_len(plen)), np.int32)
+        toks[0, :plen] = req.prompt
+        nxt, self._cache = self._prefill_slot(
+            self.params, self._cache, jnp.asarray(toks),
+            jnp.int32(slot), jnp.int32(plen))
+        tok = int(np.asarray(nxt)[0])     # host sync: prefill has run
+        self.prefill_batch_sizes.append(1)
+        self.prefill_token_counts.append(toks.shape[1])
+        req.slot = slot
+        req.t_first = time.perf_counter()
+        req.out_tokens.append(tok)
+        self._slot_req[slot] = req
+        self._pos[slot] = plen
+        self._cur[slot, 0] = req.out_tokens[-1]
+        self._maybe_retire(slot, req.t_first)
+
+    def _decode_once(self):
+        """One batched decode step at per-slot positions.  Idle slots ride
+        along at fixed shape (their rows are garbage until the admission
+        scatter replaces the whole slot)."""
+        nxt, _, self._cache = self.serve_step(
+            self.params, self._cache, jnp.asarray(self._cur),
+            jnp.asarray(self._pos))
+        arr = np.asarray(nxt)
+        now = time.perf_counter()
+        self.decode_steps += 1
+        self._occupied_step_sum += self.active
+        for slot, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            self._pos[slot] += 1
+            tok = int(arr[slot, 0])
+            req.out_tokens.append(tok)
+            self._cur[slot, 0] = tok
+            self._maybe_retire(slot, now)
+
+    def _maybe_retire(self, slot: int, now: float):
+        """Slot-level retirement: EOS, token budget, or a full slot cache.
+        Only this slot frees — every other slot keeps decoding."""
+        req = self._slot_req[slot]
+        if (len(req.out_tokens) >= req.max_new_tokens
+                or (req.eos_token is not None
+                    and req.out_tokens[-1] == req.eos_token)
+                or self._pos[slot] >= self.max_seq - 1):
+            req.t_done = now
+            self.done.append(req)
+            self._slot_req[slot] = None

@@ -1,0 +1,115 @@
+"""Property tests for core/pareto.py on seeded-random point clouds
+(including duplicates), and for the Table-6 query helper."""
+import random
+
+import pytest
+
+from repro.core.pareto import DesignPoint, best_under_latency, pareto_front
+
+STRATS = ("sequential", "spatial", "hybrid")
+
+
+def cloud(seed, n=40, with_dups=True):
+    rng = random.Random(seed)
+    pts = [DesignPoint(strategy=rng.choice(STRATS),
+                       n_acc=rng.randint(1, 8),
+                       n_batches=rng.randint(1, 8),
+                       latency=round(rng.uniform(1.0, 100.0), 1),
+                       throughput_tops=round(rng.uniform(1.0, 100.0), 1))
+           for _ in range(n)]
+    if with_dups:  # exact duplicates and ties on one axis
+        pts += [pts[i] for i in range(0, len(pts), 7)]
+        p = pts[0]
+        pts.append(DesignPoint("spatial", 2, 2, p.latency,
+                               p.throughput_tops))
+    return pts
+
+
+def dominates(q, p):
+    return ((q.latency <= p.latency
+             and q.throughput_tops > p.throughput_tops)
+            or (q.latency < p.latency
+                and q.throughput_tops >= p.throughput_tops))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_pareto_front_is_nondominated_and_latency_sorted(seed):
+    pts = cloud(seed)
+    front = pareto_front(pts)
+    assert front, "a finite non-empty cloud always has a frontier"
+    lats = [p.latency for p in front]
+    assert lats == sorted(lats)
+    for p in front:
+        assert not any(dominates(q, p) for q in pts)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_pareto_front_is_complete(seed):
+    """Every point NOT on the front is dominated by some point of the
+    front (so the front loses no achievable tradeoff)."""
+    pts = cloud(seed)
+    front = pareto_front(pts)
+    front_ids = {id(p) for p in front}
+    key = lambda p: (p.latency, p.throughput_tops)
+    front_keys = {key(p) for p in front}
+    for p in pts:
+        if id(p) in front_ids or key(p) in front_keys:  # duplicate survivor
+            continue
+        assert any(dominates(q, p) for q in front), p
+
+
+def test_pareto_front_keeps_duplicate_optima():
+    """Two identical non-dominated points: neither dominates the other,
+    both stay on the front (duplicates must not knock each other out)."""
+    a = DesignPoint("sequential", 1, 1, 10.0, 50.0)
+    b = DesignPoint("spatial", 4, 1, 10.0, 50.0)
+    c = DesignPoint("hybrid", 2, 2, 20.0, 10.0)   # dominated
+    front = pareto_front([a, b, c])
+    assert a in front and b in front and c not in front
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_best_under_latency_respects_constraint(seed):
+    rng = random.Random(seed + 100)
+    pts = cloud(seed)
+    for _ in range(10):
+        cons = rng.uniform(0.0, 110.0)
+        got = best_under_latency(pts, cons)
+        feas = [p for p in pts if p.latency <= cons]
+        if not feas:
+            assert got is None
+        else:
+            assert got.latency <= cons
+            assert got.throughput_tops == max(
+                p.throughput_tops for p in feas)
+
+
+@pytest.mark.parametrize("strategy", ["sequential", "spatial"])
+def test_best_under_latency_strategy_filter(strategy):
+    pts = cloud(3)
+    cons = 60.0
+    got = best_under_latency(pts, cons, strategy=strategy)
+    feas = [p for p in pts
+            if p.latency <= cons and p.strategy == strategy]
+    if not feas:
+        assert got is None
+    else:
+        assert got.strategy == strategy
+        assert got.throughput_tops == max(p.throughput_tops for p in feas)
+
+
+def test_best_under_latency_hybrid_includes_endpoint_designs():
+    """Per the Table-6 note, the hybrid space includes the sequential and
+    spatial endpoints: the hybrid query considers every strategy."""
+    pts = cloud(4)
+    cons = 60.0
+    got = best_under_latency(pts, cons, strategy="hybrid")
+    feas = [p for p in pts if p.latency <= cons]
+    assert (got is None) == (not feas)
+    if feas:
+        assert got.throughput_tops == max(p.throughput_tops for p in feas)
+
+
+def test_best_under_latency_infeasible_returns_none():
+    pts = cloud(5)
+    assert best_under_latency(pts, 0.0) is None

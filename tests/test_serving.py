@@ -51,3 +51,52 @@ def test_serve_step_greedy_matches_argmax():
                               jnp.int32(T))
     np.testing.assert_array_equal(
         np.asarray(nxt[:, 0]), np.asarray(jnp.argmax(logits[:, -1], -1)))
+
+
+def test_engine_stats_ordering_and_occupancy():
+    """t_submit <= t_first <= t_done per request; slot occupancy is a
+    fraction of `slots` (never above 1); stats name the kernel path."""
+    cfg, model, params = setup()
+    eng = ServingEngine(model, params, slots=2, max_seq=48)
+    for uid in range(5):
+        eng.submit(Request(uid, np.arange(1, 4 + uid, dtype=np.int32), 4))
+    eng.run()
+    st = eng.stats()
+    assert st["requests"] == 5
+    assert st["gen_tokens"] == sum(len(r.out_tokens) for r in eng.done) == 20
+    assert 0.0 < st["slot_occupancy"] <= 1.0
+    assert st["throughput_tok_s"] > 0
+    assert st["kernel_path"] == eng.kernel_path
+    for r in eng.done:
+        assert r.t_submit <= r.t_first <= r.t_done
+        assert 0 <= r.slot < eng.slots
+    assert len(st["ttft_s"]) == len(st["latency_s"]) == 5
+    assert all(t >= 0 for t in st["ttft_s"])
+
+
+def test_admission_does_not_change_active_slots_next_token():
+    """Admitting a request mid-stream must not perturb the token stream of
+    already-active slots (no full-batch re-prefill, no position reset)."""
+    cfg, model, params = setup()
+    p0 = np.array([5, 6, 7], np.int32)
+    p1 = np.arange(1, 9, dtype=np.int32)
+
+    solo = ServingEngine(model, params, slots=2, max_seq=64)
+    solo.submit(Request(0, p0, 8))
+    solo_tokens = list(solo.run()[0].out_tokens)
+
+    eng = ServingEngine(model, params, slots=2, max_seq=64)
+    eng.submit(Request(0, p0, 8))
+    for _ in range(3):
+        eng.tick()
+    before = list(eng._slot_req[0].out_tokens)
+    eng.submit(Request(1, p1, 6))
+    eng.tick()                       # tick that performs the admission
+    after = list(eng._slot_req[0].out_tokens)
+    assert after[:len(before)] == before
+    assert after[len(before)] == solo_tokens[len(before)]  # next token kept
+    while eng.tick():
+        pass
+    done = {r.uid: r.out_tokens for r in eng.done}
+    assert done[0] == solo_tokens
+    assert eng.prefill_batch_sizes == [1, 1]
