@@ -75,7 +75,7 @@ def table5() -> List[Tuple[str, float, str]]:
     return rows
 
 
-def table6() -> List[Tuple[str, float, str]]:
+def table6(seed: int = 0) -> List[Tuple[str, float, str]]:
     """Throughput under latency constraints: sequential vs spatial vs
     hybrid — the Pareto-dominance claim."""
     rows = []
@@ -83,7 +83,7 @@ def table6() -> List[Tuple[str, float, str]]:
     t0 = time.perf_counter()
     pts = strategy_points(g6, BOARD_UNITS, hw=VCK190_UNIT,
                           batches=(1, 2, 3, 4, 6),
-                          hybrid_accs=(2, 3, 4), ea_iters=4)
+                          hybrid_accs=(2, 3, 4), ea_iters=4, seed=seed)
     build_us = (time.perf_counter() - t0) * 1e6
     for lat_ms, (p_seq, p_spa, p_hyb) in PAPER_T6.items():
         cons = lat_ms * 1e-3
@@ -126,13 +126,13 @@ def table7() -> List[Tuple[str, float, str]]:
     return rows
 
 
-def fig2() -> List[Tuple[str, float, str]]:
+def fig2(seed: int = 0) -> List[Tuple[str, float, str]]:
     """Latency-throughput Pareto front: hybrid must dominate."""
     g = build_graph(DEIT_T, vit_shape(6), granularity="op")
     t0 = time.perf_counter()
     pts = strategy_points(g, BOARD_UNITS, hw=VCK190_UNIT,
                           batches=(1, 2, 4, 6), hybrid_accs=(2, 4),
-                          ea_iters=3)
+                          ea_iters=3, seed=seed)
     us = (time.perf_counter() - t0) * 1e6
     front = pareto_front(pts)
     n_hybrid = sum(1 for p in front if p.strategy == "hybrid")
@@ -144,12 +144,12 @@ def fig2() -> List[Tuple[str, float, str]]:
     return rows
 
 
-def fig10() -> List[Tuple[str, float, str]]:
+def fig10(seed: int = 0) -> List[Tuple[str, float, str]]:
     """Search efficiency: EA + inter-acc-aware pruning vs exhaustive."""
     g = build_graph(DEIT_T, vit_shape(6), granularity="op")
     t0 = time.perf_counter()
     ea = evolutionary_search(g, BOARD_UNITS, n_acc=4, n_batches=6,
-                             n_pop=10, n_child=10, n_iter=6, seed=0,
+                             n_pop=10, n_child=10, n_iter=6, seed=seed,
                              hw=VCK190_UNIT)
     ea_s = time.perf_counter() - t0
     t0 = time.perf_counter()

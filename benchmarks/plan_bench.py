@@ -1,0 +1,82 @@
+"""Plan lowering benchmark: measured vs analytic design points.
+
+Searches hybrid Layer→Acc assignments (the EA) on a reduced-size arch,
+lowers each winner to an ``ExecutionPlan``, *executes* it stage-by-stage
+on the local backend (``repro.plan.validate``), and emits the measured
+points (``source="measured"``) next to the analytic ones
+(``source="analytic"``) on the shared Pareto axes — the search → plan →
+execute loop closed end-to-end.
+
+    PYTHONPATH=src python benchmarks/run.py plan [--seed N]
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+
+def plan_points(arch: str = "yi-6b", *, layers: int = 4, batch: int = 8,
+                seq: int = 32, chips: int = 8, seed: int = 0,
+                stage_counts=(1, 2, 3), repeat: int = 3):
+    """Returns (analytic_points, measured_points, plans) for the sweep."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import REGISTRY, ShapeConfig, reduced
+    from repro.core import build_graph, evolutionary_search, ssr_dse
+    from repro.core.assignment import contiguous_assignment
+    from repro.core.pareto import DesignPoint
+    from repro.models import build_model
+    from repro.plan import lower, measured_design_points, predict_plan
+
+    cfg = reduced(REGISTRY[arch], layers=layers)
+    shape = ShapeConfig("plan_bench", seq, batch, "prefill")
+    g = build_graph(cfg, shape)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(seed)
+    batch_in = {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, (batch, seq)), jnp.int32)}
+    # microbatch count must divide the batch: deepest divisor <= 4
+    mb = next(m for m in (4, 2, 1) if batch % m == 0)
+
+    # forced contiguous partitions per stage count (the strategy sweep) +
+    # the EA winner (which may legitimately collapse onto fewer accs)
+    genomes = [contiguous_assignment(g, n_acc, chips).acc_of
+               for n_acc in stage_counts]
+    genomes.append(evolutionary_search(
+        g, chips, n_acc=max(stage_counts), n_batches=2, n_pop=6,
+        n_child=6, n_iter=3, seed=seed).assignment.acc_of)
+
+    analytic, plans = [], []
+    for acc_of in genomes:
+        _, _, assign = ssr_dse(g, acc_of, chips, n_batches=2)
+        plan = lower(assign, g, mesh_devices=chips, n_microbatches=mb)
+        plans.append(plan)
+        pred = predict_plan(plan, g)
+        analytic.append(DesignPoint(
+            strategy="hybrid" if plan.n_stages > 1 else "sequential",
+            n_acc=plan.n_stages, n_batches=plan.total_microbatches,
+            latency=pred["makespan_s"],
+            throughput_tops=pred["throughput_tops"],
+            detail=f"waste={pred['padding_waste']:.2f}"))
+    measured = measured_design_points(model, params, batch_in, g, plans,
+                                      repeat=repeat)
+    return analytic, measured, plans
+
+
+def rows(seed: int = 0) -> List[Tuple[str, float, str]]:
+    """benchmarks/run.py section: analytic + measured rows per plan."""
+    analytic, measured, plans = plan_points(seed=seed)
+    out = []
+    labels = [f"{p.n_stages}stages" for p in plans[:-1]] + \
+        [f"ea_{plans[-1].n_stages}stages"]
+    for a, m, p, name in zip(analytic, measured, plans,
+                             (f"plan/{l}" for l in labels)):
+        out.append((f"{name}/analytic", a.latency * 1e6,
+                    f"source={a.source} tops={a.throughput_tops:.2f} "
+                    f"mb={p.total_microbatches} {a.detail}"))
+        out.append((f"{name}/measured", m.latency * 1e6,
+                    f"source={m.source} tops={m.throughput_tops:.4f} "
+                    f"mb={p.total_microbatches} {m.detail}"))
+    return out

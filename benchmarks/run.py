@@ -12,20 +12,37 @@ Prints ``name,us_per_call,derived`` CSV.
   micro       — measured CPU microbenchmarks of the runnable substrate
   serving     — measured latency/throughput under Poisson arrivals per
                 slot count (continuous-batching engine)
+  plan        — EA-searched assignments lowered to ExecutionPlans and
+                executed: measured points next to analytic ones
+
+``--seed N`` threads a seed through every stochastic section (serving
+Poisson trace, EA searches) so sweeps are reproducible run-to-run.
 
 ``--smoke`` instead runs the fast tier-1 test subset in < 60 s: the
 suite minus the ``slow``-marked 8-device subprocess tests AND minus the
 two compile-heavy sweep files (test_models.py, test_perf_paths.py) —
-the full gate remains ``pytest -q``.
+the full gate remains ``pytest -q``.  ``--smoke-json PATH`` additionally
+writes a machine-readable summary (and the plan measured-vs-analytic
+rows) so CI can archive the perf trajectory per commit.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import subprocess
 import sys
+import time
+
+# self-sufficient invocation (`python benchmarks/run.py ...` from anywhere):
+# the repo root (for `benchmarks.*`) and src (for `repro.*`) on sys.path.
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
-def micro_rows():
+def micro_rows(seed: int = 0):
     """Measured wall-time microbenchmarks (CPU, reduced configs): the
     runnable-path sanity numbers."""
     import jax
@@ -41,7 +58,7 @@ def micro_rows():
     for arch in ("yi-6b", "qwen2-moe-a2.7b", "xlstm-125m"):
         cfg = reduced(REGISTRY[arch])
         model = build_model(cfg)
-        params = model.init(jax.random.key(0))
+        params = model.init(jax.random.key(seed))
         data = SyntheticLM(cfg, ShapeConfig("b", 64, 4, "train"))
         batch = jax.tree.map(jnp.asarray, data.batch_at(0))
         opt = AdamW(warmup_steps=1, total_steps=100)
@@ -56,11 +73,15 @@ def micro_rows():
     return rows
 
 
-def smoke() -> int:
+def smoke(json_path: str = "", seed: int = 0) -> int:
     """Fast tier-1 subset (< 60 s): the suite minus the ``slow``-marked
     8-device subprocess tests and the two compile-heavy sweep files
     (test_models ~2 min of jit compiles, test_perf_paths ~30 s).  The full
-    tier-1 gate stays ``pytest -q``."""
+    tier-1 gate stays ``pytest -q``.
+
+    json_path: optional output file recording the run (returncode, wall
+    seconds, plus the measured-vs-analytic plan rows) — uploaded as a CI
+    artifact so the perf trajectory is tracked per commit."""
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(repo, "src") + (
@@ -70,38 +91,75 @@ def smoke() -> int:
            "--ignore", os.path.join("tests", "test_models.py"),
            "--ignore", os.path.join("tests", "test_perf_paths.py"),
            "tests"]
-    return subprocess.run(cmd, cwd=repo, env=env).returncode
+    t0 = time.perf_counter()
+    rc = subprocess.run(cmd, cwd=repo, env=env).returncode
+    wall = time.perf_counter() - t0
+    if json_path:
+        summary = {"suite": "smoke", "returncode": rc,
+                   "wall_s": round(wall, 2), "seed": seed}
+        try:
+            from repro.backend import compat
+            summary["jax"] = ".".join(map(str, compat.jax_version()))
+            from benchmarks.plan_bench import rows as plan_rows
+            summary["plan_rows"] = [
+                {"name": n, "us_per_call": round(us, 1), "derived": d}
+                for n, us, d in plan_rows(seed=seed)]
+        except Exception as e:  # keep the artifact even if the bench dies
+            summary["plan_error"] = f"{type(e).__name__}: {e}"
+        os.makedirs(os.path.dirname(os.path.abspath(json_path)),
+                    exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"[smoke] wrote {json_path}")
+    return rc
 
 
 def main() -> None:
-    if "--smoke" in sys.argv[1:]:
-        sys.exit(smoke())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("sections", nargs="*", help="sections to run (default all)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for stochastic sections (serving, EA, plan)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the fast tier-1 test subset instead")
+    ap.add_argument("--smoke-json", default="",
+                    help="with --smoke: write a JSON summary here")
+    args = ap.parse_args()
+
+    if args.smoke:
+        sys.exit(smoke(json_path=args.smoke_json, seed=args.seed))
+
     from benchmarks import paper_tables as P
+    from benchmarks.plan_bench import rows as plan_rows
     from benchmarks.roofline import roofline_rows
     from benchmarks.serving import rows as serving_rows
     from benchmarks.tpu_tradeoff import rows as tpu_rows
 
+    # insertion order is the run order; the bool marks seed-taking sections
     sections = {
-        "table5": P.table5,
-        "table6": P.table6,
-        "table7": P.table7,
-        "fig2": P.fig2,
-        "fig10": P.fig10,
-        "ablation": P.step_by_step,
-        "q1": P.q1_cross_platform,
-        "tpu_tradeoff": tpu_rows,
-        "roofline": roofline_rows,
-        "micro": micro_rows,
-        "serving": serving_rows,
+        "table5": (P.table5, False),
+        "table6": (P.table6, True),
+        "table7": (P.table7, False),
+        "fig2": (P.fig2, True),
+        "fig10": (P.fig10, True),
+        "ablation": (P.step_by_step, False),
+        "q1": (P.q1_cross_platform, False),
+        "tpu_tradeoff": (tpu_rows, False),
+        "roofline": (roofline_rows, False),
+        "micro": (micro_rows, True),
+        "serving": (serving_rows, True),
+        "plan": (plan_rows, True),
     }
-    only = sys.argv[1:] or list(sections)
+    unknown = [k for k in args.sections if k not in sections]
+    if unknown:
+        sys.exit(f"unknown section(s) {unknown}; "
+                 f"choose from {list(sections)}")
+    only = args.sections or list(sections)
     print("name,us_per_call,derived")
     for key in only:
-        fn = sections.get(key)
-        if fn is None:
-            continue
+        fn, takes_seed = sections[key]
         try:
-            for name, us, derived in fn():
+            rows = fn(seed=args.seed) if takes_seed else fn()
+            for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}")
         except Exception as e:  # keep the harness running
             print(f"{key}/ERROR,0,{type(e).__name__}: {e}")

@@ -92,9 +92,10 @@ def serving_design_points(stats: Sequence[dict]):
             for s in stats]
 
 
-def rows() -> List[Tuple[str, float, str]]:
-    """benchmarks/run.py section: ``name,us_per_call,derived`` rows."""
-    stats = serving_sweep()
+def rows(seed: int = 0) -> List[Tuple[str, float, str]]:
+    """benchmarks/run.py section: ``name,us_per_call,derived`` rows.
+    ``seed`` fixes the Poisson arrival trace (reproducible sweeps)."""
+    stats = serving_sweep(seed=seed)
     from repro.core.pareto import pareto_front
 
     front = {p.strategy for p in pareto_front(serving_design_points(stats))}

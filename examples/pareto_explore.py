@@ -1,9 +1,11 @@
 """SSR design-space exploration — the paper's core workflow (§4):
 
 given an architecture and a target platform, run the Layer→Acc evolutionary
-search across accelerator counts and batch pipelining depths, and print the
+search across accelerator counts and batch pipelining depths, print the
 latency-throughput Pareto front with the winning strategy per point
-(paper Fig. 2 / Table 6).
+(paper Fig. 2 / Table 6), and lower the best hybrid design to a runnable
+``ExecutionPlan`` (block-granularity graphs) — the search → plan → execute
+spine.
 
     PYTHONPATH=src python examples/pareto_explore.py --arch deit-t --plat vck190
     PYTHONPATH=src python examples/pareto_explore.py --arch yi-6b \
@@ -14,6 +16,7 @@ import argparse
 from repro.configs import REGISTRY, SHAPES
 from repro.configs.deit import vit_shape
 from repro.core import build_graph, pareto_front, strategy_points
+from repro.core.ea import evolutionary_search
 from repro.core.hw import TPU_V5E
 
 
@@ -23,6 +26,7 @@ def main():
     ap.add_argument("--shape", default="")
     ap.add_argument("--plat", default="vck190", choices=["vck190", "tpu"])
     ap.add_argument("--batch", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = REGISTRY[args.arch]
@@ -41,7 +45,7 @@ def main():
     print(f"graph: {len(g.nodes)} nodes, "
           f"{g.total_mm_flops/1e12:.2f} TFLOP total on {hw.name} x{chips}")
     pts = strategy_points(g, chips, hw=hw, batches=(1, 2, 4, 6),
-                          hybrid_accs=(2, 4), ea_iters=4)
+                          hybrid_accs=(2, 4), ea_iters=4, seed=args.seed)
     front = pareto_front(pts)
 
     print(f"\n{'strategy':12s} {'accs':>4s} {'batches':>7s} "
@@ -53,6 +57,33 @@ def main():
               f"{p.latency*1e3:11.3f} {p.throughput_tops:8.2f}{mark}")
     print(f"\nPareto front: {len(front)} points "
           f"({sum(1 for p in front if p.strategy == 'hybrid')} hybrid)")
+
+    # ---- lower the best hybrid front point to a runnable ExecutionPlan ----
+    # (block-granularity graphs only: op-granularity nodes have no 1:1
+    # mapping onto the scanned layer stack)
+    hyb = [p for p in front if p.strategy == "hybrid"] or \
+        [p for p in pts if p.strategy == "hybrid"]
+    if gran != "block":
+        print("\n(plan lowering needs a block-granularity graph; "
+              "rerun with --plat tpu)")
+        return
+    if not hyb:
+        print("\n(no hybrid point to lower)")
+        return
+    from repro.plan import lower, predict_plan
+    best = max(hyb, key=lambda p: p.throughput_tops)
+    res = evolutionary_search(g, chips, n_acc=best.n_acc,
+                              n_batches=best.n_batches, n_pop=8, n_child=8,
+                              n_iter=4, seed=args.seed, hw=hw)
+    plan = lower(res.assignment, g, mesh_devices=chips,
+                 n_rounds=best.n_batches)
+    print(f"\nlowered best hybrid (accs={best.n_acc}, "
+          f"batches={best.n_batches}):")
+    print(plan.describe())
+    pred = predict_plan(plan, g, hw=hw)
+    print(f"realized prediction: makespan={pred['makespan_s']*1e3:.3f}ms "
+          f"tops={pred['throughput_tops']:.2f} "
+          f"(replicate-padding waste={pred['padding_waste']:.2f})")
 
 
 if __name__ == "__main__":

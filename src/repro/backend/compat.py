@@ -115,6 +115,21 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
     return Mesh(devices, axes)
 
 
+def make_mesh_on(devices, axes) -> Mesh:
+    """Mesh over an explicit device array (subset meshes — e.g. the
+    plan-mesh's ``S * width`` devices out of a larger pod), with the same
+    explicit-Auto axis types ``make_mesh`` applies where the API exists."""
+    arr = np.asarray(devices)
+    axes = tuple(axes)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return Mesh(arr, axes, axis_types=(axis_type.Auto,) * arr.ndim)
+        except TypeError:  # Mesh without axis_types kwarg
+            pass
+    return Mesh(arr, axes)
+
+
 def use_mesh(mesh):
     """Context manager placing ``mesh`` in ambient context.
 
@@ -197,6 +212,7 @@ def pcast_varying(x, axes):
 __all__ = [
     "SUPPORTED_RANGE", "jax_version", "backend", "on_tpu",
     "tpu_compiler_params", "vmem_scratch", "smem_scratch",
-    "make_mesh", "use_mesh", "make_abstract_mesh", "mesh_axis_size",
+    "make_mesh", "make_mesh_on", "use_mesh", "make_abstract_mesh",
+    "mesh_axis_size",
     "shard_map", "pcast_varying", "PartitionSpec",
 ]

@@ -23,12 +23,15 @@ from repro.core.hw import Chip, TPU_V5E
 
 @dataclass(frozen=True)
 class DesignPoint:
-    strategy: str           # sequential | spatial | hybrid
+    strategy: str           # sequential | spatial | hybrid | serving-*
     n_acc: int
     n_batches: int
     latency: float
     throughput_tops: float
     detail: str = ""
+    # provenance: "analytic" (cost-model simulate) vs "measured" (a lowered
+    # ExecutionPlan actually executed + timed — see repro.plan.validate)
+    source: str = "analytic"
 
 
 def strategy_points(graph: Graph, total_chips: int, *, hw: Chip = TPU_V5E,

@@ -1,6 +1,12 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST precede any jax import: jax locks the device count on first init.
+# MUST precede any jax import: jax locks the device count on first init.
+# Append to (never clobber) a user-set XLA_FLAGS; respect an explicit
+# device-count flag if the user already forced one.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=512").strip()
+del _flags
 
 """Multi-pod dry-run: prove the distribution config is coherent.
 
@@ -37,8 +43,8 @@ from repro.configs.base import LONG_500K, ModelConfig, ShapeConfig
 from repro.core.graph import build_graph, model_flops
 from repro.core.hw import TPU_V5E
 from repro.launch.collectives import collective_bytes, dot_flops
-from repro.launch.mesh import (make_pipeline_mesh, make_production_mesh,
-                               use_mesh)
+from repro.launch.mesh import (make_pipeline_mesh, make_plan_mesh,
+                               make_production_mesh, use_mesh)
 from repro.models import build_model
 from repro.sharding import input_shardings_tree, param_shardings
 from repro.training import AdamW, make_train_step
@@ -79,8 +85,11 @@ def _auto_grad_accum(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
 
 def step_fn_and_args(cfg: ModelConfig, shape: ShapeConfig, mesh,
                      strategy: str = "sequential", *, grad_accum: int = 0,
-                     zero1: bool = True, expert_parallel: bool = False):
-    """Build (fn, args, in_shardings) for the cell."""
+                     zero1: bool = True, expert_parallel: bool = False,
+                     plan=None):
+    """Build (fn, args, in_shardings) for the cell.  ``plan`` carries the
+    ExecutionPlan for pipeline/hybrid strategies (built in run_cell so the
+    mesh and the plan agree on stage count and widths)."""
     model = build_model(cfg)
     specs = model.input_specs(shape)
     params_sds = jax.eval_shape(model.init, jax.random.key(0))
@@ -109,14 +118,14 @@ def step_fn_and_args(cfg: ModelConfig, shape: ShapeConfig, mesh,
             mesh, jax.sharding.PartitionSpec()), m=msh,
             v=jax.tree.map(lambda s: s, msh))
         bshard = input_shardings_tree(specs, mesh)
-        if strategy.startswith("pipeline"):
-            n_stages = int(strategy.split(":")[1])
-            from repro.pipeline import pipeline_forward
+        if strategy.startswith(("pipeline", "hybrid")):
+            from repro.pipeline import plan_forward
+            assert plan is not None, strategy
 
             def fn(params, opt_state, batch):
-                # pipelined loss (SSR spatial/hybrid execution)
-                logits = pipeline_forward(model, params, batch, mesh,
-                                          n_stages, n_microbatches=n_stages)
+                # pipelined loss (SSR spatial/hybrid execution via the
+                # lowered ExecutionPlan)
+                logits = plan_forward(model, params, batch, mesh, plan)
                 labels = batch["labels"]
                 lp = jax.nn.log_softmax(logits, axis=-1)
                 nll = -jnp.take_along_axis(
@@ -168,9 +177,35 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 "reason": "pure full-attention arch: long_500k requires "
                           "sub-quadratic attention (DESIGN.md §skips)"}
 
+    plan = None
     if strategy.startswith("pipeline"):
+        # uniform plan on the legacy pipeline mesh (the shim contract)
         n_stages = int(strategy.split(":")[1])
+        from repro.plan import uniform_plan
+        plan = uniform_plan(cfg.num_groups, n_stages,
+                            n_microbatches=n_stages)
         mesh = make_pipeline_mesh(n_stages, multi_pod=multi_pod)
+    elif strategy.startswith("hybrid"):
+        # EA-searched heterogeneous plan lowered onto the pod
+        n_acc = int(strategy.split(":")[1])
+        total = 512 if multi_pod else 256
+        from repro.core import evolutionary_search, ssr_dse
+        from repro.core.assignment import contiguous_assignment
+        from repro.plan import lower
+        g = build_graph(cfg, shape)
+        res = evolutionary_search(g, total, n_acc=n_acc, n_batches=n_acc,
+                                  n_pop=6, n_child=6, n_iter=3, seed=0)
+        plan = lower(res.assignment, g, mesh_devices=total)
+        if plan.n_stages < n_acc:
+            # the EA legitimately collapses uniform dense stacks onto
+            # sequential; the dry-run's job is to exercise the N-stage
+            # executor, so fall back to the FLOPs-balanced contiguous
+            # N-way cut through the same DSE customization pass
+            _, _, assign = ssr_dse(
+                g, contiguous_assignment(g, n_acc, total).acc_of, total,
+                n_batches=n_acc)
+            plan = lower(assign, g, mesh_devices=total)
+        mesh = make_plan_mesh(plan, devices=jax.devices()[:total])
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.size
@@ -178,7 +213,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     t0 = time.perf_counter()
     fn, args, in_sh, out_sh = step_fn_and_args(
         cfg, shape, mesh, strategy, grad_accum=grad_accum,
-        expert_parallel=expert_parallel)
+        expert_parallel=expert_parallel, plan=plan)
     with use_mesh(mesh):
         if out_sh is not None:
             # train step: donate params+opt (buffer reuse — ZeRO-1 friendly)
@@ -254,6 +289,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "arch": arch, "shape": shape_name, "status": "ok",
         "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
         "strategy": strategy, "devices": n_dev,
+        "plan": plan.describe() if plan is not None else None,
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "cost_analysis": cost, "memory_analysis": mem,
         "argument_bytes_per_device": arg_bytes_dev,

@@ -46,6 +46,29 @@ def make_pipeline_mesh(n_stages: int, *, model: int = 16, total: int = 256,
     return _make_mesh((n_stages, data, model), ("stage", "data", "model"))
 
 
+def make_plan_mesh(plan, devices=None):
+    """Stage-major mesh for an ``ExecutionPlan``: ("stage", data, model)
+    with a *uniform* slot width per stage (a rectangular device mesh cannot
+    give stages different widths — the plan records the replicate-padding
+    waste of stages that asked for less, see ``StagePlan.replica_waste``).
+
+    The slot width is ``len(devices) // n_stages`` capped at the plan's own
+    ``stage_width``; leftover devices (budget not divisible by the stage
+    count) are simply left out of the mesh.  The (data, model) split is the
+    plan's common factorization (gcd of the stage tp's)."""
+    import numpy as np
+
+    devs = list(devices if devices is not None else jax.devices())
+    S = plan.n_stages
+    width = max(len(devs) // S, 1)
+    if plan.stage_width and plan.stage_width <= width:
+        width = plan.stage_width
+    assert S * width <= len(devs), (S, width, len(devs))
+    data, model = plan.mesh_factors(width)
+    arr = np.array(devs[:S * data * model]).reshape(S, data, model)
+    return compat.make_mesh_on(arr, ("stage", "data", "model"))
+
+
 def make_host_mesh(axes=("data", "model")):
     """Whatever devices exist locally, as a small mesh (tests/examples)."""
     n = len(jax.devices())

@@ -266,16 +266,27 @@ def init_stack(key, cfg: ModelConfig, cross: bool = False):
 
 def run_stack(stack_params, x, cfg: ModelConfig, *, positions=None,
               causal=True, cache=None, cache_index=None, enc_out=None,
-              remat: bool = False, collect_state: bool = False):
+              remat: bool = False, collect_state: bool = False,
+              group_mask=None):
     """Run the whole layer stack.  Returns (x, new_cache, aux_sum).
 
     collect_state: emit per-group state (KV cache / recurrent state) as scan
     outputs — used by prefill/decode; train leaves it off so SSM states are
-    not materialized across groups."""
+    not materialized across groups.
+
+    group_mask: optional (num_groups,) 0/1 vector scanned alongside the
+    params; groups with mask 0 pass activations (and aux) through unchanged.
+    This is how the ExecutionPlan executor runs *uneven* pipeline stages:
+    every stage's stack is padded to the max group count and the dead
+    entries are masked here.  Stateless forward only (no cache)."""
+    if group_mask is not None:
+        assert cache is None and not collect_state, (
+            "group_mask is for the stateless pipelined forward path")
 
     def body(carry, inp):
         x, aux = carry
-        gp, gc = inp
+        gp, gc, gm = inp
+        x_in, aux_in = x, aux
         new_gc = {}
         for j, blk in enumerate(cfg.block_pattern):
             st = gc[f"b{j}"] if gc is not None else None
@@ -285,6 +296,10 @@ def run_stack(stack_params, x, cfg: ModelConfig, *, positions=None,
             if nst is not None:
                 new_gc[f"b{j}"] = nst
             aux = aux + a
+        if gm is not None:
+            live = gm > 0
+            x = jnp.where(live, x, x_in)
+            aux = jnp.where(live, aux, aux_in)
         out = new_gc if (collect_state and new_gc) else None
         return (x, aux), out
 
@@ -293,5 +308,6 @@ def run_stack(stack_params, x, cfg: ModelConfig, *, positions=None,
             body, policy=jax.checkpoint_policies.nothing_saveable)
 
     aux0 = jnp.zeros((), jnp.float32)
-    (x, aux), new_cache = lax.scan(body, (x, aux0), (stack_params, cache))
+    (x, aux), new_cache = lax.scan(body, (x, aux0),
+                                   (stack_params, cache, group_mask))
     return x, new_cache, aux

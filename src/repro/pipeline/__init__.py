@@ -1,2 +1,3 @@
-from repro.pipeline.executor import (make_pipeline_runner, pipeline_forward,
-                                     stage_params_reshape)
+from repro.pipeline.executor import (make_pipeline_runner, make_plan_runner,
+                                     pipeline_forward, plan_forward,
+                                     plan_stage_params, stage_params_reshape)

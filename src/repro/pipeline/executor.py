@@ -1,17 +1,27 @@
-"""SSR spatial/hybrid runtime executor — GPipe-style microbatch pipeline.
+"""SSR spatial/hybrid runtime executor — plan-driven microbatch pipeline.
 
-This is the *execution* counterpart of the SSR scheduler: the chosen
-Layer→Acc map (contiguous stage partition at runtime) becomes a ``stage``
-mesh axis; each stage owns ``num_groups/S`` layer groups whose weights are
-sharded onto that stage's submesh; microbatches stream through via
-``collective_permute`` over the ICI — the on-chip-forwarding analogue (no
-host round trip).  Stage-internal sharding still uses the data/model axes
-(they are `auto` axes inside the shard_map), so each "SSR accelerator" is
-itself a DPxTP submesh — exactly the paper's Acc-Customization degree of
-freedom.
+This is the *execution* counterpart of the SSR scheduler.  The unit of
+work is an ``ExecutionPlan`` (``repro.plan``): ordered stage slices over
+the scanned layer stack — **not necessarily equal** — each on one slot of
+a ``("stage", "data", "model")`` mesh, with ``n_microbatches`` in flight
+per round (spatial) and ``n_rounds`` rounds streamed back-to-back
+(sequential).  Microbatches move between stages via ``collective_permute``
+over the ICI — the on-chip-forwarding analogue (no host round trip).
+Stage-internal sharding still uses the data/model axes (they are `auto`
+axes inside the shard_map), so each "SSR accelerator" is itself a DPxTP
+submesh — exactly the paper's Acc-Customization degree of freedom.
+
+Uneven stages: every stage's parameter stack is padded to
+``plan.max_groups`` entries by a clamped gather (repeating the stage's
+last real group, so padded compute stays finite) and the dead entries are
+masked inside ``run_stack`` — a dead group passes activations through
+unchanged.
 
 Bubble accounting matches the paper's Fig. 1(b): M microbatches through S
 stages take (M + S - 1) stage-times.
+
+The legacy ``(n_stages, n_microbatches)`` scalar API survives as thin
+shims that lower a uniform plan.
 """
 from __future__ import annotations
 
@@ -26,15 +36,25 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.backend import compat
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.plan.ir import ExecutionPlan, uniform_plan
 
 
 def stage_params_reshape(stack_params, n_stages: int):
-    """(num_groups, ...) stacked params -> (n_stages, groups_per_stage, ...)."""
+    """(num_groups, ...) stacked params -> (n_stages, groups_per_stage, ...).
+    Uniform-split legacy helper; uneven plans use ``plan_stage_params``."""
     def f(x):
         g = x.shape[0]
         assert g % n_stages == 0, (g, n_stages)
         return x.reshape((n_stages, g // n_stages) + x.shape[1:])
     return jax.tree.map(f, stack_params)
+
+
+def plan_stage_params(stack_params, plan: ExecutionPlan):
+    """(num_groups, ...) stacked params -> (S, max_groups, ...) per the
+    plan's stage slices: a clamped gather pads short stages by repeating
+    their last real group (masked out at runtime)."""
+    idx = jnp.asarray(plan.group_index_matrix())
+    return jax.tree.map(lambda x: jnp.asarray(x)[idx], stack_params)
 
 
 def pipeline_spec(stack_params_staged, mesh: Mesh):
@@ -44,24 +64,28 @@ def pipeline_spec(stack_params_staged, mesh: Mesh):
     return jax.tree.map(f, stack_params_staged)
 
 
-def make_pipeline_runner(cfg: ModelConfig, mesh: Mesh, n_stages: int,
-                         n_microbatches: int) -> Callable:
-    """Returns pipelined(params_staged, x_mb) -> y_mb.
+def make_plan_runner(cfg: ModelConfig, mesh: Mesh, plan: ExecutionPlan
+                     ) -> Callable:
+    """Returns pipelined(params_staged, group_mask, x_mb) -> y_mb.
 
-    params_staged: stack params reshaped to (S, G/S, ...), stage-sharded.
-    x_mb: (M, mb, seq, d_model) microbatched embedded activations.
-    y_mb: (M, mb, seq, d_model) final hidden states.
+    params_staged: stack params gathered to (S, max_groups, ...) via
+      ``plan_stage_params``, stage-sharded.
+    group_mask: (S, max_groups) 0/1 — live vs padded groups per stage.
+    x_mb: (M_total, mb, seq, d_model) microbatched embedded activations,
+      M_total = plan.n_microbatches * plan.n_rounds.
+    y_mb: (M_total, mb, seq, d_model) final hidden states.
     """
-    S = n_stages
-    M = n_microbatches
+    S = plan.n_stages
+    M = plan.total_microbatches
 
-    def stage_apply(p_local, x):
-        y, _, _ = T.run_stack(p_local, x, cfg)
+    def stage_apply(p_local, m_local, x):
+        y, _, _ = T.run_stack(p_local, x, cfg, group_mask=m_local)
         return y
 
-    def inner(p_local, x_all):
-        # p_local leaves: (1, G/S, ...) — this stage's groups.
+    def inner(p_local, m_local, x_all):
+        # p_local leaves: (1, max_groups, ...) — this stage's padded groups.
         p_local = jax.tree.map(lambda a: a[0], p_local)
+        m_local = m_local[0]
         stage_id = lax.axis_index("stage")
         state = jnp.zeros_like(x_all[0])
         outputs = jnp.zeros_like(x_all)
@@ -74,7 +98,7 @@ def make_pipeline_runner(cfg: ModelConfig, mesh: Mesh, n_stages: int,
             inp = lax.dynamic_index_in_dim(
                 x_all, jnp.clip(t, 0, M - 1), 0, keepdims=False)
             cur = jnp.where(stage_id == 0, inp, state)
-            out = stage_apply(p_local, cur)
+            out = stage_apply(p_local, m_local, cur)
             # last stage banks its finished microbatch t-(S-1)
             oidx = jnp.clip(t - (S - 1), 0, M - 1)
             prev = lax.dynamic_index_in_dim(outputs, oidx, 0, keepdims=False)
@@ -98,31 +122,57 @@ def make_pipeline_runner(cfg: ModelConfig, mesh: Mesh, n_stages: int,
     batch_in = P(None, None, None, None)
     pipelined = compat.shard_map(
         inner, mesh=mesh,
-        in_specs=(P("stage"), batch_in),
+        in_specs=(P("stage"), P("stage"), batch_in),
         out_specs=batch_in,
         manual_axes=frozenset({"stage"}),
     )
     return pipelined
 
 
-def pipeline_forward(model, params, batch, mesh: Mesh, n_stages: int,
-                     n_microbatches: int):
-    """End-to-end SSR-hybrid forward: embed (data-parallel) -> pipelined
-    stages -> head.  batch: {'tokens' | 'embeds': ...}."""
+def plan_forward(model, params, batch, mesh: Mesh, plan: ExecutionPlan):
+    """End-to-end plan execution: embed (data-parallel) -> pipelined
+    uneven stages -> head.  batch: {'tokens' | 'embeds': ...}."""
     from repro.models import layers as L
     cfg = model.cfg
+    assert plan.num_groups == cfg.num_groups, (plan.num_groups,
+                                               cfg.num_groups)
     if "embeds" in batch:
         x = batch["embeds"].astype(cfg.dtype)
     else:
         x = L.embed(params["embed"], batch["tokens"], cfg).astype(cfg.dtype)
     B, seq, d = x.shape
-    M = n_microbatches
+    M = plan.total_microbatches
     assert B % M == 0, (B, M)
     x_mb = x.reshape(M, B // M, seq, d)
 
-    staged = stage_params_reshape(params["stack"], n_stages)
-    runner = make_pipeline_runner(cfg, mesh, n_stages, n_microbatches)
-    y_mb = runner(staged, x_mb)
+    staged = plan_stage_params(params["stack"], plan)
+    mask = jnp.asarray(plan.group_mask_matrix())
+    runner = make_plan_runner(cfg, mesh, plan)
+    y_mb = runner(staged, mask, x_mb)
     y = y_mb.reshape(B, seq, d)
     y = L.apply_norm(params["final_norm"], y, cfg)
     return L.logits_head(params.get("embed"), params.get("head"), y, cfg)
+
+
+# ---------------------------------------------------------------------------
+# legacy scalar API — thin shims over a uniform plan
+# ---------------------------------------------------------------------------
+
+def make_pipeline_runner(cfg: ModelConfig, mesh: Mesh, n_stages: int,
+                         n_microbatches: int) -> Callable:
+    """Legacy runner: pipelined(params_staged, x_mb) -> y_mb with equal
+    (S, G/S, ...) stage slices — a uniform plan under the hood."""
+    plan = uniform_plan(cfg.num_groups, n_stages, n_microbatches)
+    runner = make_plan_runner(cfg, mesh, plan)
+    mask = jnp.asarray(plan.group_mask_matrix())
+
+    def pipelined(params_staged, x_mb):
+        return runner(params_staged, mask, x_mb)
+    return pipelined
+
+
+def pipeline_forward(model, params, batch, mesh: Mesh, n_stages: int,
+                     n_microbatches: int):
+    """Legacy end-to-end forward: lowers to a uniform plan."""
+    plan = uniform_plan(model.cfg.num_groups, n_stages, n_microbatches)
+    return plan_forward(model, params, batch, mesh, plan)

@@ -1,0 +1,15 @@
+"""ExecutionPlan subsystem: lower searched SSR assignments to runnable
+heterogeneous spatial-sequential pipelines (search -> plan -> execute)."""
+from repro.plan.ir import (ExecutionPlan, StagePlan, fit_dp_tp,
+                           uniform_plan)
+from repro.plan.lower import group_acc_map, lower, realized_assignment
+from repro.plan.validate import (check_roundtrip, measure_plan,
+                                 measured_design_points, predict_plan,
+                                 stage_forward)
+
+__all__ = [
+    "ExecutionPlan", "StagePlan", "uniform_plan", "fit_dp_tp",
+    "lower", "group_acc_map", "realized_assignment",
+    "check_roundtrip", "measure_plan", "measured_design_points",
+    "predict_plan", "stage_forward",
+]

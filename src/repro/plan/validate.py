@@ -1,0 +1,202 @@
+"""Measured-vs-predicted validation of ``ExecutionPlan``s.
+
+The analytic side of the repo prices a design point with the SSR cost
+model (``core/costmodel.py`` + ``core/assignment.simulate``); this module
+closes the loop by *executing* the plan on whatever backend is available
+(CPU / Pallas-interpret / TPU — every kernel routes through
+``repro.backend.dispatch``) and timing the real per-stage work:
+
+  * ``stage_forward``    — one stage's group slice as a standalone jittable
+                           function (exactly the computation a stage's
+                           submesh runs per microbatch tick);
+  * ``check_roundtrip``  — chain the stage slices and compare against the
+                           non-pipelined reference forward (lowering must
+                           be numerically lossless);
+  * ``measure_plan``     — time each stage on a microbatch, compose the
+                           measured stage times through the pipeline
+                           schedule (M microbatches through S stages take
+                           sum(t_s) + (M-1)*max(t_s)), and report measured
+                           latency/throughput next to the analytic
+                           prediction;
+  * ``predict_plan``     — the analytic prediction for the *realized* plan
+                           (uniform slot widths, re-fit dp/tp), i.e. what
+                           the cost model says after being charged the
+                           replicate-padding waste;
+  * ``measured_design_points`` — the measured points as
+                           ``core.pareto.DesignPoint``s tagged
+                           ``source="measured"`` so they sit on the same
+                           Pareto axes as the analytic sweep.
+
+Per-stage timing runs the slices sequentially on the local device(s), so
+it works on a 1-device CPU host; the full multi-device shard_map execution
+path is ``pipeline.plan_forward`` (exercised by the distributed tests).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.assignment import simulate
+from repro.core.costmodel import Features, stage_time
+from repro.core.graph import Graph
+from repro.core.hw import Chip, TPU_V5E
+from repro.core.pareto import DesignPoint
+from repro.plan.ir import ExecutionPlan
+from repro.plan.lower import realized_assignment
+
+
+def _backend_name() -> str:
+    from repro.backend import compat
+    return compat.backend()
+
+
+def _stage_slice(stack_params, plan: ExecutionPlan, s: int):
+    st = plan.stages[s]
+    return jax.tree.map(
+        lambda x: x[st.first_group:st.first_group + st.n_groups],
+        stack_params)
+
+
+def stage_forward(model, params, x, plan: ExecutionPlan, s: int):
+    """Apply stage ``s``'s (unpadded) group slice to hidden states ``x``."""
+    from repro.models import transformer as T
+    sl = _stage_slice(params["stack"], plan, s)
+    y, _, _ = T.run_stack(sl, x, model.cfg)
+    return y
+
+
+def _embed(model, params, batch):
+    from repro.models import layers as L
+    cfg = model.cfg
+    if "embeds" in batch:
+        return batch["embeds"].astype(cfg.dtype)
+    return L.embed(params["embed"], batch["tokens"], cfg).astype(cfg.dtype)
+
+
+def _finish(model, params, y):
+    from repro.models import layers as L
+    cfg = model.cfg
+    y = L.apply_norm(params["final_norm"], y, cfg)
+    return L.logits_head(params.get("embed"), params.get("head"), y, cfg)
+
+
+def check_roundtrip(model, params, batch, plan: ExecutionPlan) -> float:
+    """Max abs error between the chained stage slices and the reference
+    forward — the lowering-is-lossless invariant (device-count free)."""
+    x = _embed(model, params, batch)
+    y = x
+    for s in range(plan.n_stages):
+        y = stage_forward(model, params, y, plan, s)
+    got = _finish(model, params, y)
+    ref, _ = model.forward(params, batch)
+    return float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - ref.astype(jnp.float32))))
+
+
+def measure_plan(model, params, batch, plan: ExecutionPlan, *,
+                 repeat: int = 3, check: bool = True) -> Dict:
+    """Execute + time the plan's per-stage work on the local backend.
+
+    Each stage is jitted over one microbatch of hidden states and timed;
+    the embed rides stage 0 and the final-norm + head ride the last stage
+    (mirroring ``realized_assignment``, so measured and analytic price the
+    same graph).  The measured stage times are composed through the
+    pipeline schedule:
+
+      latency  (first microbatch) = sum(t_s)
+      makespan (M_total batches)  = sum(t_s) + (M_total - 1) * max(t_s)
+
+    Returns per-stage seconds, composed latency/makespan, and (optionally)
+    the round-trip error vs the reference forward."""
+    cfg = model.cfg
+    x = _embed(model, params, batch)
+    B, seq, d = x.shape
+    M = plan.total_microbatches
+    assert B % M == 0, (B, M)
+    mb = B // M
+    x_mb = x[:mb]
+
+    def _timeit(fn, arg):
+        jax.block_until_ready(fn(arg))            # compile outside the clock
+        t0 = time.perf_counter()
+        for _ in range(repeat):
+            out = jax.block_until_ready(fn(arg))
+        return (time.perf_counter() - t0) / repeat, out
+
+    per_stage = []
+    cur = x_mb
+    for s in range(plan.n_stages):
+        t, cur = _timeit(
+            jax.jit(lambda h, s=s: stage_forward(model, params, h, plan, s)),
+            cur)
+        per_stage.append(t)
+    mb_batch = jax.tree.map(lambda v: v[:mb], batch)
+    t_embed, _ = _timeit(jax.jit(lambda b: _embed(model, params, b)),
+                         mb_batch)
+    t_head, _ = _timeit(jax.jit(lambda y: _finish(model, params, y)), cur)
+    per_stage[0] += t_embed
+    per_stage[-1] += t_head
+
+    t_max = max(per_stage)
+    latency = sum(per_stage)
+    makespan = latency + (M - 1) * t_max
+    res = {
+        "per_stage_s": per_stage,
+        "latency_s": latency,
+        "makespan_s": makespan,
+        "n_stages": plan.n_stages,
+        "n_microbatches": M,
+        "tokens_per_s": B * seq / makespan if makespan > 0 else 0.0,
+        "backend": _backend_name(),
+    }
+    if check:
+        res["max_abs_err"] = check_roundtrip(model, params, batch, plan)
+    return res
+
+
+def predict_plan(plan: ExecutionPlan, graph: Graph, *, hw: Chip = TPU_V5E,
+                 feats: Features = Features()) -> Dict:
+    """Analytic prediction for the realized plan: the scheduler prices the
+    uniform-width stages (replicate-padding charged — a stage that wanted
+    fewer chips than the slot gains nothing; one that wanted more is
+    starved) over M_total pipelined microbatches."""
+    assign = realized_assignment(plan, graph)
+    M = plan.total_microbatches
+    r = simulate(graph, assign, M, hw=hw, feats=feats)
+    per_stage = [
+        stage_time([graph.nodes[i] for i in assign.nodes_of(s.index)],
+                   assign.accs[s.index], graph, hw,
+                   batch_frac=1.0 / M, feats=feats)
+        for s in plan.stages]
+    return {
+        "per_stage_s": per_stage,
+        "latency_s": r.latency,
+        "makespan_s": r.makespan,
+        "throughput_tops": r.throughput_tops(),
+        "padding_waste": plan.padding_waste,
+    }
+
+
+def measured_design_points(model, params, batch, graph: Graph,
+                           plans: Sequence[ExecutionPlan], *,
+                           repeat: int = 3) -> List[DesignPoint]:
+    """One measured ``DesignPoint`` per plan (source="measured"), on the
+    same axes as the analytic sweep: latency = composed makespan of the
+    submitted workload, throughput = graph MM-TFLOP/s over it."""
+    pts = []
+    for plan in plans:
+        m = measure_plan(model, params, batch, plan, repeat=repeat)
+        thr = graph.total_mm_flops / m["makespan_s"] / 1e12 \
+            if m["makespan_s"] > 0 else 0.0
+        pts.append(DesignPoint(
+            strategy="hybrid" if plan.n_stages > 1 else "sequential",
+            n_acc=plan.n_stages, n_batches=plan.total_microbatches,
+            latency=m["makespan_s"], throughput_tops=thr,
+            detail=(f"measured on {m['backend']}; "
+                    f"err={m.get('max_abs_err', float('nan')):.2e}"),
+            source="measured"))
+    return pts

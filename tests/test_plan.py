@@ -1,0 +1,230 @@
+"""ExecutionPlan subsystem: lowering invariants, uneven-stage round-trip
+(1-device stage-chaining; the multi-device shard_map path is covered by
+tests/test_distributed.py), and the measured-vs-predicted validate path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, ShapeConfig, reduced
+from repro.core import build_graph, evolutionary_search, ssr_dse
+from repro.core.assignment import Assignment, sequential_assignment
+from repro.core.costmodel import AccConfig
+from repro.models import build_model
+from repro.plan import (ExecutionPlan, StagePlan, check_roundtrip, fit_dp_tp,
+                        lower, measure_plan, measured_design_points,
+                        predict_plan, realized_assignment, uniform_plan)
+from repro.pipeline import plan_stage_params, stage_params_reshape
+
+
+def _setup(layers=4, batch=8, seq=16):
+    cfg = reduced(REGISTRY["yi-6b"], layers=layers)
+    shape = ShapeConfig("t", seq, batch, "prefill")
+    g = build_graph(cfg, shape)
+    return cfg, shape, g
+
+
+# ---------------------------------------------------------------------------
+# IR invariants
+# ---------------------------------------------------------------------------
+
+def test_plan_stages_must_tile_group_axis():
+    s0 = StagePlan(index=0, acc_id=0, first_group=0, n_groups=2)
+    s1 = StagePlan(index=1, acc_id=1, first_group=2, n_groups=1)
+    p = ExecutionPlan(stages=(s0, s1), num_groups=3, n_microbatches=2)
+    assert p.max_groups == 2 and not p.is_uniform
+    with pytest.raises(AssertionError):
+        ExecutionPlan(stages=(s0, s0), num_groups=4, n_microbatches=1)
+
+
+def test_group_matrices_clamped_and_masked():
+    p = ExecutionPlan(
+        stages=(StagePlan(0, 0, 0, 3), StagePlan(1, 1, 3, 1)),
+        num_groups=4, n_microbatches=2)
+    idx = p.group_index_matrix()
+    msk = p.group_mask_matrix()
+    assert idx.tolist() == [[0, 1, 2], [3, 3, 3]]
+    assert msk.tolist() == [[1, 1, 1], [1, 0, 0]]
+    # every real group appears exactly once under the mask
+    live = idx[msk > 0]
+    assert sorted(live.tolist()) == [0, 1, 2, 3]
+
+
+def test_uniform_plan_matches_legacy_reshape():
+    cfg, _, _ = _setup(layers=4)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    plan = uniform_plan(cfg.num_groups, 2, 2)
+    a = plan_stage_params(params["stack"], plan)
+    b = stage_params_reshape(params["stack"], 2)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert la.shape == lb.shape
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    assert float(plan.group_mask_matrix().min()) == 1.0
+
+
+def test_fit_dp_tp():
+    assert fit_dp_tp(4, 4, 1) == (4, 1)
+    assert fit_dp_tp(4, 1, 4) == (1, 4)
+    assert fit_dp_tp(4, 5, 1, max_dp=2) == (2, 2)
+    dp, tp = fit_dp_tp(6, 3, 2)
+    assert dp * tp == 6
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+def test_lower_uneven_cuts_and_widths():
+    cfg, _, g = _setup(layers=4)
+    # layers 0-2 -> acc0, layer 3 -> acc1 (uneven); heterogeneous chips
+    acc_of = (0, 0, 0, 0, 1, 1)
+    _, _, assign = ssr_dse(g, acc_of, 8, n_batches=2)
+    assert assign.accs[0].chips != assign.accs[1].chips
+    plan = lower(assign, g, mesh_devices=8, n_microbatches=4)
+    assert plan.n_stages == 2
+    assert [s.n_groups for s in plan.stages] == [3, 1]
+    assert all(s.width == 4 for s in plan.stages)       # uniform slot
+    # the narrow acc is replicate-padded: waste recorded
+    assert plan.stages[1].replica_waste > 0
+    assert plan.stages[0].replica_waste == 0.0
+    assert 0.0 < plan.padding_waste < 1.0
+
+
+def test_lower_snaps_scattered_assignment_to_group_runs():
+    cfg, _, g = _setup(layers=4)
+    # EA mutation can scatter: acc pattern 0,1,0,1 over layers -> 4 stages
+    acc_of = (0, 0, 1, 0, 1, 1)
+    plan = lower(Assignment(acc_of, (AccConfig(4, 2, 2),
+                                     AccConfig(4, 4, 1))), g, mesh_devices=8)
+    assert sum(s.n_groups for s in plan.stages) == cfg.num_groups
+    firsts = [s.first_group for s in plan.stages]
+    assert firsts == sorted(firsts)
+    assert plan.n_stages == 4        # two runs per acc
+
+
+def test_lower_rejects_op_granularity_graphs():
+    cfg = REGISTRY["yi-6b"]
+    g = build_graph(cfg, ShapeConfig("t", 16, 8, "prefill"),
+                    granularity="op")
+    a = sequential_assignment(g, 8)
+    with pytest.raises(ValueError):
+        lower(a, g, mesh_devices=8)
+
+
+def test_realized_assignment_covers_all_nodes():
+    cfg, _, g = _setup(layers=4)
+    _, _, assign = ssr_dse(g, (0, 0, 0, 0, 1, 1), 8, n_batches=2)
+    plan = lower(assign, g, mesh_devices=8)
+    ra = realized_assignment(plan, g)
+    assert len(ra.acc_of) == len(g.nodes)
+    assert ra.n_acc == plan.n_stages
+    for s in plan.stages:
+        assert s.width == ra.accs[s.index].chips
+
+
+# ---------------------------------------------------------------------------
+# round-trip: EA-searched plan executes identically to the reference
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_uneven_ea_plan_matches_reference():
+    cfg, _, g = _setup(layers=4)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, (8, 16)), jnp.int32)}
+    # EA-searched assignment...
+    res = evolutionary_search(g, 8, n_acc=3, n_batches=2, n_pop=6,
+                              n_child=6, n_iter=3, seed=1)
+    plan = lower(res.assignment, g, mesh_devices=8, n_microbatches=4)
+    assert check_roundtrip(m, params, batch, plan) < 1e-4
+    # ...and a guaranteed-uneven hybrid (EA may collapse to 1 stage)
+    _, _, assign = ssr_dse(g, (0, 0, 0, 0, 1, 1), 8, n_batches=2)
+    plan = lower(assign, g, mesh_devices=8, n_microbatches=4)
+    assert not plan.is_uniform
+    assert check_roundtrip(m, params, batch, plan) < 1e-4
+
+
+def test_masked_padded_stage_equals_plain_slice():
+    """The executor's padded+masked stage == the unpadded slice: dead
+    groups must pass activations through unchanged (run_stack group_mask)."""
+    from repro.models import transformer as T
+    cfg, _, g = _setup(layers=4)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    _, _, assign = ssr_dse(g, (0, 0, 0, 0, 1, 1), 8, n_batches=2)
+    plan = lower(assign, g, mesh_devices=8)
+    staged = plan_stage_params(params["stack"], plan)
+    mask = plan.group_mask_matrix()
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model),
+                          cfg.dtype)
+    for s in plan.stages:
+        padded, _, _ = T.run_stack(
+            jax.tree.map(lambda a, i=s.index: a[i], staged), x, cfg,
+            group_mask=jnp.asarray(mask[s.index]))
+        sl = jax.tree.map(
+            lambda a, st=s: a[st.first_group:st.first_group + st.n_groups],
+            params["stack"])
+        plain, _, _ = T.run_stack(sl, x, cfg)
+        err = float(jnp.max(jnp.abs(padded - plain)))
+        assert err < 1e-5, (s.index, err)
+
+
+def test_group_mask_requires_stateless_path():
+    cfg, _, _ = _setup(layers=2)
+    from repro.models import transformer as T
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    x = jnp.zeros((1, 4, cfg.d_model), cfg.dtype)
+    cache = m.init_cache(1, 8)
+    with pytest.raises(AssertionError):
+        T.run_stack(params["stack"], x, cfg, cache=cache,
+                    cache_index=jnp.int32(0), collect_state=True,
+                    group_mask=jnp.ones((cfg.num_groups,)))
+
+
+# ---------------------------------------------------------------------------
+# validate: measured vs predicted
+# ---------------------------------------------------------------------------
+
+def test_measure_and_predict_plan():
+    cfg, _, g = _setup(layers=4)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    batch = {"tokens": jnp.ones((8, 16), jnp.int32)}
+    _, _, assign = ssr_dse(g, (0, 0, 0, 0, 1, 1), 8, n_batches=2)
+    plan = lower(assign, g, mesh_devices=8, n_microbatches=2)
+    meas = measure_plan(m, params, batch, plan, repeat=1)
+    assert meas["max_abs_err"] < 1e-4
+    assert len(meas["per_stage_s"]) == 2
+    assert all(t > 0 for t in meas["per_stage_s"])
+    assert meas["makespan_s"] >= meas["latency_s"] > 0
+    pred = predict_plan(plan, g)
+    assert pred["makespan_s"] >= pred["latency_s"] > 0
+    assert pred["throughput_tops"] > 0
+    assert pred["padding_waste"] == plan.padding_waste
+
+
+def test_measured_design_points_tagged():
+    cfg, _, g = _setup(layers=4)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    batch = {"tokens": jnp.ones((8, 16), jnp.int32)}
+    _, _, assign = ssr_dse(g, (0, 0, 0, 0, 1, 1), 8, n_batches=2)
+    plans = [lower(assign, g, mesh_devices=8, n_microbatches=2)]
+    pts = measured_design_points(m, params, batch, g, plans, repeat=1)
+    assert len(pts) == 1
+    assert pts[0].source == "measured"
+    assert pts[0].latency > 0 and pts[0].throughput_tops > 0
+    # analytic points keep the default tag
+    from repro.core.pareto import DesignPoint
+    assert DesignPoint("s", 1, 1, 1.0, 1.0).source == "analytic"
+
+
+def test_plan_mesh_factors():
+    _, _, g = _setup(layers=4)
+    _, _, assign = ssr_dse(g, (0, 0, 0, 0, 1, 1), 8, n_batches=2)
+    plan = lower(assign, g, mesh_devices=8)
+    data, model = plan.mesh_factors()
+    assert data * model == plan.stage_width

@@ -123,6 +123,41 @@ def test_dependencies_respected():
     assert r.latency >= crit * 0.999
 
 
+def test_simulate_matches_costmodel_sequential():
+    """Cost-model/scheduler consistency: a single-acc sequential
+    assignment has no pipelining and no inter-acc transfers, so
+    ``simulate``'s timings must equal the plain sum of ``node_time``
+    totals — ``core/assignment.py`` and ``core/costmodel.py`` cannot
+    drift apart silently."""
+    from repro.core.costmodel import node_time as nt
+    g = graph_of()
+    a = sequential_assignment(g, 256)
+    for nb in (1, 4):
+        for feats in (Features(), Features(fine_grained_pipeline=False)):
+            r = simulate(g, a, nb, feats=feats)
+            frac = 1.0 / nb
+            per_batch = sum(
+                nt(n, a.accs[0], batch_frac=frac, train=g.train,
+                   feats=feats)["total"] for n in g.nodes)
+            assert r.latency == pytest.approx(per_batch, rel=1e-9)
+            assert r.makespan == pytest.approx(nb * per_batch, rel=1e-9)
+            assert r.per_acc_busy[0] == pytest.approx(nb * per_batch,
+                                                      rel=1e-9)
+
+
+def test_simulate_matches_costmodel_fixed_config_platform():
+    """Same consistency on a fixed-config (frozen array) platform: the
+    scheduler must use the acc's frozen ref dims, i.e. agree with
+    ``stage_time`` (which prices exactly one acc's node list)."""
+    from benchmarks.common import BOARD_UNITS, VCK190_UNIT
+    from repro.core.costmodel import stage_time
+    g = graph_of("yi-6b", "prefill_32k")
+    a = sequential_assignment(g, BOARD_UNITS)
+    r = simulate(g, a, 1, hw=VCK190_UNIT)
+    expected = stage_time(list(g.nodes), a.accs[0], g, VCK190_UNIT)
+    assert r.latency == pytest.approx(expected, rel=1e-9)
+
+
 def test_onchip_forwarding_ablation():
     """Paper §5.2.6 feature (1): disabling forwarding inflates latency."""
     g = graph_of()
