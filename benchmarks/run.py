@@ -24,6 +24,11 @@ two compile-heavy sweep files (test_models.py, test_perf_paths.py) —
 the full gate remains ``pytest -q``.  ``--smoke-json PATH`` additionally
 writes a machine-readable summary (and the plan measured-vs-analytic
 rows) so CI can archive the perf trajectory per commit.
+
+``<section> --smoke`` (e.g. ``serving --smoke``) instead runs a smoke-
+sized variant of that section — for ``serving``, the plan-driven strategy
+sweep (sequential / spatial / small hybrid ServingPlan) on CPU jax — so
+plan-serving throughput lands in the per-commit perf artifact too.
 """
 from __future__ import annotations
 
@@ -114,6 +119,41 @@ def smoke(json_path: str = "", seed: int = 0) -> int:
     return rc
 
 
+def smoke_sections(sections, json_path: str = "", seed: int = 0) -> int:
+    """Smoke-sized section runs (``run.py <section> --smoke``): print the
+    rows and optionally archive them as JSON (CI perf artifact)."""
+    from benchmarks.serving import smoke_rows as serving_smoke
+
+    known = {"serving": serving_smoke}
+    unknown = [s for s in sections if s not in known]
+    if unknown:
+        print(f"no smoke variant for section(s) {unknown}; "
+              f"choose from {list(known)}")
+        return 2
+    rc = 0
+    summary = {"suite": "smoke-sections", "seed": seed, "sections": {}}
+    print("name,us_per_call,derived")
+    for key in sections:
+        try:
+            rows = known[key](seed=seed)
+            for name, us, derived in rows:
+                print(f"{name},{us:.1f},{derived}")
+            summary["sections"][key] = [
+                {"name": n, "us_per_call": round(us, 1), "derived": d}
+                for n, us, d in rows]
+        except Exception as e:      # pragma: no cover - keep harness alive
+            print(f"{key}/ERROR,0,{type(e).__name__}: {e}")
+            summary["sections"][key] = {"error": f"{type(e).__name__}: {e}"}
+            rc = 1
+    if json_path:
+        os.makedirs(os.path.dirname(os.path.abspath(json_path)),
+                    exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"[smoke] wrote {json_path}")
+    return rc
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("sections", nargs="*", help="sections to run (default all)")
@@ -126,6 +166,10 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.smoke:
+        if args.sections:
+            sys.exit(smoke_sections(args.sections,
+                                    json_path=args.smoke_json,
+                                    seed=args.seed))
         sys.exit(smoke(json_path=args.smoke_json, seed=args.seed))
 
     from benchmarks import paper_tables as P

@@ -1,6 +1,6 @@
 """Serving benchmark: measured latency-throughput tradeoff under Poisson
 arrivals, at several slot counts, on the per-slot continuous-batching
-engine.
+engine — and across *ServingPlans* (plan-driven engines).
 
 Each slot count is one *serving design point*: more slots = fuller decode
 batches = higher throughput, but deeper queues = higher per-request
@@ -10,7 +10,15 @@ rows (strategy ``serving-<n>slots``) so measured serving points sit on the
 same Pareto axes as the analytical design points from ``core/pareto.py``
 (latency in seconds, throughput field carrying generated tok/s).
 
+``plan_serving_sweep`` runs the SAME Poisson trace through plan-driven
+engines — sequential (one stage, one decode replica), spatial (one stage
+per group, max decode replicas), and an uneven DSE-searched hybrid plan —
+and ``served_design_points`` tags them ``source="served"``: the paper's
+strategy tradeoff measured under live request traffic rather than
+synthetic pipelined forwards.
+
     PYTHONPATH=src python benchmarks/run.py serving
+    python benchmarks/run.py serving --smoke   # small hybrid plan, CPU jax
 """
 from __future__ import annotations
 
@@ -92,6 +100,101 @@ def serving_design_points(stats: Sequence[dict]):
             for s in stats]
 
 
+def _serving_plans(cfg, slots: int, chunk: int, seq: int, batch: int):
+    """The strategy triple as ServingPlans: sequential (1 stage, 1 decode
+    replica), spatial (one stage per group, max replicas = all slots), and
+    an uneven DSE-searched hybrid plan."""
+    from repro.configs import ShapeConfig
+    from repro.core import build_graph, ssr_dse
+    from repro.plan import lower, lower_serving, uniform_plan
+
+    G = cfg.num_groups
+    plans = [
+        ("sequential", uniform_plan(G, 1, n_microbatches=1)),
+        ("spatial", uniform_plan(G, G, n_microbatches=slots)),
+    ]
+    # hybrid: an uneven 2-acc layer cut through the DSE customization pass
+    g = build_graph(cfg, ShapeConfig("serving_bench", seq, batch, "prefill"))
+    blocks = [n.idx for n in g.nodes if n.kind == "block"]
+    cut = max((len(blocks) * 3) // 4, 1)         # uneven: ~3/4 vs 1/4
+    acc_of = []
+    for n in g.nodes:
+        if n.kind == "block":
+            acc_of.append(0 if blocks.index(n.idx) < cut else 1)
+        else:
+            acc_of.append(0 if n.kind == "embed" else 1)
+    _, _, assign = ssr_dse(g, tuple(acc_of), 8, n_batches=2)
+    hybrid = lower(assign, g, mesh_devices=8,
+                   n_microbatches=min(2, slots))
+    plans.append(("hybrid", hybrid))
+    return [(name, lower_serving(p, slots=slots, chunk=chunk))
+            for name, p in plans]
+
+
+def plan_serving_sweep(arch: str = "yi-6b", *, layers: int = 4,
+                       slots: int = 4, chunk: int = 4, requests: int = 8,
+                       new_tokens: int = 6, rate_rps: float = 20.0,
+                       max_seq: int = 64, seed: int = 0) -> List[dict]:
+    """Run the same Poisson trace through plan-driven engines (sequential /
+    spatial / hybrid ServingPlans); one stats dict per strategy."""
+    import jax
+
+    from repro.configs import REGISTRY, reduced
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = reduced(REGISTRY[arch], layers=layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    out = []
+    for name, splan in _serving_plans(cfg, slots, chunk, max_seq, 8):
+        eng = ServingEngine(model, params, slots=slots, max_seq=max_seq,
+                            plan=splan)
+        # warmup: compile the stage/decode walks outside the measured window
+        eng.submit(Request(-1, np.arange(1, 6, dtype=np.int32), 2))
+        eng.run()
+        eng.reset_stats()
+        wall = _drive_poisson(eng, cfg, requests, new_tokens, rate_rps, seed)
+        st = eng.stats()
+        st.update(strategy=name, slots=slots, wall_s=wall, arch=arch,
+                  n_stages=splan.n_stages, replicas=splan.n_replicas,
+                  lat_p50_s=float(np.percentile(st["latency_s"], 50)),
+                  lat_p95_s=float(np.percentile(st["latency_s"], 95)),
+                  ttft_p50_s=float(np.percentile(st["ttft_s"], 50)))
+        out.append(st)
+    return out
+
+
+def served_design_points(stats: Sequence[dict]):
+    """Plan-driven serving measurements on the shared Pareto axes, tagged
+    ``source="served"`` (vs "analytic" sweeps and "measured" synthetic
+    plan executions)."""
+    from repro.core.pareto import DesignPoint
+
+    return [DesignPoint(strategy=s["strategy"], n_acc=s["n_stages"],
+                        n_batches=s["replicas"], latency=s["lat_p50_s"],
+                        throughput_tops=s["throughput_tok_s"],
+                        detail=(f"slots={s['slots']} "
+                                f"occ={s['slot_occupancy']:.2f}"),
+                        source="served")
+            for s in stats]
+
+
+def _plan_rows(pstats: Sequence[dict]) -> List[Tuple[str, float, str]]:
+    out = []
+    for s, p in zip(pstats, served_design_points(pstats)):
+        name = (f"serving/plan/{s['arch']}/{s['strategy']}"
+                f"-{s['n_stages']}stages-{s['replicas']}rep")
+        out.append((name, s["lat_p50_s"] * 1e6,
+                    f"source={p.source} "
+                    f"tok_s={s['throughput_tok_s']:.1f} "
+                    f"ttft_p50_ms={s['ttft_p50_s']*1e3:.1f} "
+                    f"chunk={s['prefill_chunk']} "
+                    f"occupancy={s['slot_occupancy']:.2f}"))
+    return out
+
+
 def rows(seed: int = 0) -> List[Tuple[str, float, str]]:
     """benchmarks/run.py section: ``name,us_per_call,derived`` rows.
     ``seed`` fixes the Poisson arrival trace (reproducible sweeps)."""
@@ -109,4 +212,13 @@ def rows(seed: int = 0) -> List[Tuple[str, float, str]]:
                     f"ttft_p50_ms={s['ttft_p50_s']*1e3:.1f} "
                     f"occupancy={s['slot_occupancy']:.2f} "
                     f"pareto={'Y' if on_front else 'n'}"))
+    out += _plan_rows(plan_serving_sweep(seed=seed))
     return out
+
+
+def smoke_rows(seed: int = 0) -> List[Tuple[str, float, str]]:
+    """`benchmarks/run.py serving --smoke`: the plan-driven strategy sweep
+    at smoke size (small hybrid plan, CPU jax) — the per-commit perf
+    artifact's plan-serving throughput rows."""
+    return _plan_rows(plan_serving_sweep(
+        requests=6, new_tokens=4, slots=2, chunk=4, seed=seed))

@@ -29,8 +29,10 @@ class DesignPoint:
     latency: float
     throughput_tops: float
     detail: str = ""
-    # provenance: "analytic" (cost-model simulate) vs "measured" (a lowered
-    # ExecutionPlan actually executed + timed — see repro.plan.validate)
+    # provenance: "analytic" (cost-model simulate), "measured" (a lowered
+    # ExecutionPlan executed + timed synthetically — repro.plan.validate),
+    # or "served" (a ServingPlan driven by live Poisson request traffic
+    # through the continuous-batching engine — benchmarks/serving.py)
     source: str = "analytic"
 
 

@@ -41,8 +41,12 @@ def make_pipeline_mesh(n_stages: int, *, model: int = 16, total: int = 256,
     if multi_pod:
         total = 512
     data = total // (n_stages * model)
-    assert data >= 1 and n_stages * data * model == total, \
-        (n_stages, data, model, total)
+    if data < 1 or n_stages * data * model != total:
+        raise ValueError(
+            f"make_pipeline_mesh: n_stages={n_stages} x model={model} does "
+            f"not evenly divide the {total}-device budget (would silently "
+            f"mis-factor the mesh); pick n_stages from the divisors of "
+            f"{total // model}")
     return _make_mesh((n_stages, data, model), ("stage", "data", "model"))
 
 
@@ -60,6 +64,11 @@ def make_plan_mesh(plan, devices=None):
 
     devs = list(devices if devices is not None else jax.devices())
     S = plan.n_stages
+    if len(devs) < S:
+        raise ValueError(
+            f"make_plan_mesh: the plan has {S} stages but only "
+            f"{len(devs)} device(s) are available — every stage needs its "
+            f"own mesh slot")
     width = max(len(devs) // S, 1)
     if plan.stage_width and plan.stage_width <= width:
         width = plan.stage_width

@@ -6,6 +6,16 @@ continuous-batching engine (the paper's application kind).
 Requests are admitted into slots of a persistent slot-indexed cache
 (admission cost O(prompt), never O(active batch)); the printed stats are
 the serving-side half of the SSR latency-throughput story.
+
+Plan-driven serving (``--strategy pipeline:S`` / ``--strategy hybrid:N``)
+runs the engine on a lowered ``ServingPlan``: chunked prefill streams
+through the plan's stage slices (``--chunk``) interleaved with decode,
+and the plan's spatial width (``--replicas``) becomes independent
+slot-partitioned decode replicas:
+
+    python -m repro.launch.serve --arch yi-6b --strategy pipeline:2 \
+        --replicas 2 --chunk 8
+    python -m repro.launch.serve --arch yi-6b --strategy hybrid:2
 """
 from __future__ import annotations
 
@@ -15,9 +25,47 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import REGISTRY, reduced
+from repro.configs import REGISTRY, ShapeConfig, reduced
 from repro.models import build_model
 from repro.serving import Request, ServingEngine
+
+
+def _parse_strategy(strategy: str):
+    """'pipeline:S' / 'hybrid:N' -> (kind, n); clear usage error otherwise."""
+    kind, _, n = strategy.partition(":")
+    if kind in ("pipeline", "hybrid") and n.isdigit() and int(n) >= 1:
+        return kind, int(n)
+    raise SystemExit(f"bad --strategy {strategy!r} "
+                     f"(mono | pipeline:S | hybrid:N)")
+
+
+def _build_serving_plan(cfg, strategy: str, slots: int, replicas: int,
+                        chunk: int, max_seq: int):
+    """Lower the requested strategy to a ServingPlan (None = monolithic)."""
+    from repro.plan import lower, lower_serving, uniform_plan
+
+    if strategy in ("mono", "sequential"):
+        return None
+    reps = replicas or min(2, slots)
+    kind, n = _parse_strategy(strategy)
+    if kind == "pipeline":
+        plan = uniform_plan(cfg.num_groups, n, n_microbatches=reps)
+    else:
+        from repro.core import build_graph, evolutionary_search, ssr_dse
+        from repro.core.assignment import contiguous_assignment
+        n_acc = n
+        g = build_graph(cfg, ShapeConfig("serve", max_seq, 8, "prefill"))
+        res = evolutionary_search(g, 8, n_acc=n_acc, n_batches=2, n_pop=6,
+                                  n_child=6, n_iter=3, seed=0)
+        plan = lower(res.assignment, g, mesh_devices=8, n_microbatches=reps)
+        if plan.n_stages < n_acc:
+            # the EA legitimately collapses uniform stacks onto sequential;
+            # serve the N-stage cut through the same customization pass
+            _, _, assign = ssr_dse(
+                g, contiguous_assignment(g, n_acc, 8).acc_of, 8,
+                n_batches=n_acc)
+            plan = lower(assign, g, mesh_devices=8, n_microbatches=reps)
+    return lower_serving(plan, slots=slots, chunk=chunk)
 
 
 def main(argv=None):
@@ -29,13 +77,24 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--eos", type=int, default=-1,
                     help="retire a slot on this token id (-1: disabled)")
+    ap.add_argument("--strategy", default="mono",
+                    help="mono | pipeline:S | hybrid:N (plan-driven)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="spatial decode replicas for plan-driven serving "
+                         "(0: min(2, slots))")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="prefill chunk length for plan-driven serving")
     args = ap.parse_args(argv)
 
     cfg = reduced(REGISTRY[args.arch])
+    splan = _build_serving_plan(cfg, args.strategy, args.slots,
+                                args.replicas, args.chunk, args.max_seq)
+    if splan is not None:
+        print(splan.describe())
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
     eng = ServingEngine(model, params, slots=args.slots,
-                        max_seq=args.max_seq)
+                        max_seq=args.max_seq, plan=splan)
     eos = None if args.eos < 0 else args.eos
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -45,10 +104,15 @@ def main(argv=None):
     done = eng.run()
     wall = time.perf_counter() - t0
     st = eng.stats()
+    extra = ""
+    if splan is not None:
+        extra = (f", {st['plan_stages']} stages x "
+                 f"{st['decode_replicas']} replicas (chunk "
+                 f"{st['prefill_chunk']})")
     print(f"[serve] {len(done)} requests, {st['gen_tokens']} tokens, "
           f"{st['gen_tokens']/wall:.1f} tok/s, "
           f"occupancy={st['slot_occupancy']:.2f}, "
-          f"kernels={st['kernel_path']}")
+          f"kernels={st['kernel_path']}{extra}")
 
 
 if __name__ == "__main__":

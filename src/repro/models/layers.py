@@ -243,7 +243,7 @@ def cross_kv(p, enc_out, cfg: ModelConfig):
 def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
                          causal=True, window=0, kv_cache=None,
                          cache_index=None, kv_source=None, use_rope=True,
-                         precomputed_kv=None):
+                         precomputed_kv=None, attend_cache=False):
     """General attention supporting GQA, RoPE/M-RoPE, logit softcap, sliding
     window (ring-buffer cache), cross-attention (``kv_source``), and KV-cache
     prefill/decode.
@@ -252,6 +252,11 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
       * train:   kv_cache is None — full attention over x itself.
       * prefill: kv_cache given, x length > 1 — attend over fresh k/v and
                  write the (window-)tail into the cache.
+      * chunked prefill continuation: kv_cache given, x length > 1 AND
+                 ``attend_cache=True`` — the fresh tokens additionally
+                 attend the tokens already sitting in the cache (scalar
+                 ``cache_index`` = their count), so a prompt can stream
+                 through the stack as consecutive chunks.
       * decode:  kv_cache given, x length small — read/modify/write cache.
 
     kv_cache: {"k": (B, W, Hkv, D), "v": ...} where W is max_seq for global
@@ -316,10 +321,28 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
                 raise NotImplementedError(
                     "per-slot prefill goes through batch-1 prefill + "
                     "scatter_cache_slot, not a vector cache_index")
-            # ---- prefill: attend over the fresh full-length k/v ----
-            out = _attend(q, k, v, cfg, q_pos=q_pos,
-                          k_pos=jnp.arange(k.shape[1]), k_valid=None,
-                          causal=causal, window=window, dt=dt)
+            if attend_cache:
+                # ---- chunked-prefill continuation: the chunk's queries
+                # attend the cached tokens (ring rows at their absolute
+                # positions, unwritten rows masked) AND the fresh k/v.
+                # For a global cache the ring is position-ordered, so the
+                # valid keys appear in exactly the order the one-shot
+                # prefill sums them — chunking is numerically lossless.
+                k_pos_old, k_valid_old = ring_k_positions(offset - 1, W)
+                k_all = jnp.concatenate([kv_cache["k"].astype(dt), k], axis=1)
+                v_all = jnp.concatenate([kv_cache["v"].astype(dt), v], axis=1)
+                k_pos_all = jnp.concatenate(
+                    [k_pos_old, offset + jnp.arange(s)])
+                k_valid_all = jnp.concatenate(
+                    [k_valid_old, jnp.ones((s,), bool)])
+                out = _attend(q, k_all, v_all, cfg, q_pos=q_pos,
+                              k_pos=k_pos_all, k_valid=k_valid_all,
+                              causal=causal, window=window, dt=dt)
+            else:
+                # ---- prefill: attend over the fresh full-length k/v ----
+                out = _attend(q, k, v, cfg, q_pos=q_pos,
+                              k_pos=jnp.arange(k.shape[1]), k_valid=None,
+                              causal=causal, window=window, dt=dt)
             # write the last min(s, W) tokens into (ring) cache slots.
             tail = min(s, W)
             k_tail = k[:, s - tail:].astype(cdt)

@@ -105,7 +105,7 @@ def init_block(key, cfg: ModelConfig, blk: BlockSpec, cross: bool = False):
 
 def apply_block(p, x, cfg: ModelConfig, blk: BlockSpec, *,
                 positions=None, causal=True, state=None, cache_index=None,
-                enc_out=None):
+                enc_out=None, attend_cache=False):
     """Returns (x, new_state, aux_loss)."""
     m = blk.mixer
     h = L.apply_norm(p["norm1"], x, cfg)
@@ -115,7 +115,8 @@ def apply_block(p, x, cfg: ModelConfig, blk: BlockSpec, *,
         attn_cache = state.get("kv") if state else None
         h, new_kv = L.multi_head_attention(
             p["mixer"], h, cfg, positions=positions, causal=causal,
-            window=window, kv_cache=attn_cache, cache_index=cache_index)
+            window=window, kv_cache=attn_cache, cache_index=cache_index,
+            attend_cache=attend_cache)
         new_state = {"kv": new_kv} if new_kv is not None else None
     elif m == "mamba":
         h, st = S.apply_mamba(p["mixer"], h, cfg,
@@ -229,6 +230,32 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
     return make_cache(cfg, batch, max_seq, enc_len=enc_len, dtype=dtype)
 
 
+def slice_cache_groups(cache, first_group: int, n_groups: int):
+    """A stage-local view of a decode cache: leaves are (num_groups, B, ...)
+    so a plan stage's slice is a static gather on axis 0 over its group
+    range [first_group, first_group + n_groups) — the serving-side analogue
+    of ``pipeline.plan_stage_params`` (but exact, never padded: caches are
+    stateful, so dead-group masking does not apply)."""
+    return jax.tree.map(lambda l: l[first_group:first_group + n_groups],
+                        cache)
+
+
+def merge_cache_groups(full_cache, part_cache, first_group: int):
+    """Write a stage's updated group slice back into the full cache
+    (static group range — the inverse of ``slice_cache_groups``)."""
+    def leaf(full, part):
+        return full.at[first_group:first_group + part.shape[0]].set(
+            part.astype(full.dtype))
+    return jax.tree.map(leaf, full_cache, part_cache)
+
+
+def concat_cache_groups(slices):
+    """Stitch ordered per-stage cache slices back into a full cache: the
+    plan's stages tile the group axis, so concatenation on axis 0 of every
+    leaf reassembles exactly ``num_groups`` entries."""
+    return jax.tree.map(lambda *ls: jnp.concatenate(ls, axis=0), *slices)
+
+
 def scatter_cache_slot(full_cache, part_cache, slot):
     """Write a small-batch cache into batch rows [slot, slot+b) of a
     persistent slot-indexed cache, leaving every other slot untouched.
@@ -267,7 +294,7 @@ def init_stack(key, cfg: ModelConfig, cross: bool = False):
 def run_stack(stack_params, x, cfg: ModelConfig, *, positions=None,
               causal=True, cache=None, cache_index=None, enc_out=None,
               remat: bool = False, collect_state: bool = False,
-              group_mask=None):
+              group_mask=None, attend_cache: bool = False):
     """Run the whole layer stack.  Returns (x, new_cache, aux_sum).
 
     collect_state: emit per-group state (KV cache / recurrent state) as scan
@@ -278,7 +305,12 @@ def run_stack(stack_params, x, cfg: ModelConfig, *, positions=None,
     params; groups with mask 0 pass activations (and aux) through unchanged.
     This is how the ExecutionPlan executor runs *uneven* pipeline stages:
     every stage's stack is padded to the max group count and the dead
-    entries are masked here.  Stateless forward only (no cache)."""
+    entries are masked here.  Stateless forward only (no cache).
+
+    attend_cache: chunked-prefill continuation — attention blocks attend
+    the tokens already in ``cache`` (scalar ``cache_index`` = their count)
+    in addition to the fresh chunk; recurrent blocks continue from the
+    cached state either way."""
     if group_mask is not None:
         assert cache is None and not collect_state, (
             "group_mask is for the stateless pipelined forward path")
@@ -292,7 +324,8 @@ def run_stack(stack_params, x, cfg: ModelConfig, *, positions=None,
             st = gc[f"b{j}"] if gc is not None else None
             x, nst, a = apply_block(
                 gp[f"b{j}"], x, cfg, blk, positions=positions, causal=causal,
-                state=st, cache_index=cache_index, enc_out=enc_out)
+                state=st, cache_index=cache_index, enc_out=enc_out,
+                attend_cache=attend_cache)
             if nst is not None:
                 new_gc[f"b{j}"] = nst
             aux = aux + a

@@ -1,3 +1,4 @@
 from repro.pipeline.executor import (make_pipeline_runner, make_plan_runner,
                                      pipeline_forward, plan_forward,
-                                     plan_stage_params, stage_params_reshape)
+                                     plan_stage_params, run_stage,
+                                     stage_params_reshape)

@@ -57,6 +57,29 @@ def plan_stage_params(stack_params, plan: ExecutionPlan):
     return jax.tree.map(lambda x: jnp.asarray(x)[idx], stack_params)
 
 
+def run_stage(cfg: ModelConfig, stage_params, x, *, cache=None,
+              cache_index=None, positions=None, collect_state: bool = False,
+              group_mask=None, attend_cache: bool = False):
+    """Execute ONE plan stage's (unpadded) group slice — the per-stage
+    entry the serving engine steps instead of the whole-plan
+    ``plan_forward``.  Returns (y, new_cache, aux).
+
+    stage_params: the stage's group slice of the stacked params (leading
+      axis = the stage's n_groups, exact — not padded to max_groups).
+    cache / cache_index: the stage's group-range cache slice and token
+      offset(s) for prefill / decode stepping (``collect_state=True``
+      returns the updated slice).  ``attend_cache=True`` is the
+      chunked-prefill continuation mode (fresh chunk attends the cached
+      tokens — see ``models.layers.multi_head_attention``).
+    group_mask: stateless padded-stage masking (the pipelined forward
+      path) — mutually exclusive with ``cache``.
+    """
+    return T.run_stack(stage_params, x, cfg, positions=positions,
+                       causal=True, cache=cache, cache_index=cache_index,
+                       collect_state=collect_state, group_mask=group_mask,
+                       attend_cache=attend_cache)
+
+
 def pipeline_spec(stack_params_staged, mesh: Mesh):
     """Shard the leading stage axis over 'stage'; leave the rest to auto."""
     def f(x):

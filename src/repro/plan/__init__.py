@@ -1,15 +1,19 @@
 """ExecutionPlan subsystem: lower searched SSR assignments to runnable
-heterogeneous spatial-sequential pipelines (search -> plan -> execute)."""
-from repro.plan.ir import (ExecutionPlan, StagePlan, fit_dp_tp,
+heterogeneous spatial-sequential pipelines (search -> plan -> execute),
+and lower plans for the serving engine (spatial decode replicas +
+chunked prefill as plan stages — see ``repro.plan.serving``)."""
+from repro.plan.ir import (ExecutionPlan, ServingPlan, StagePlan, fit_dp_tp,
                            uniform_plan)
-from repro.plan.lower import group_acc_map, lower, realized_assignment
-from repro.plan.validate import (check_roundtrip, measure_plan,
-                                 measured_design_points, predict_plan,
-                                 stage_forward)
+from repro.plan.lower import (group_acc_map, lower, lower_serving,
+                              realized_assignment)
+from repro.plan.validate import (auto_spatial_width, check_roundtrip,
+                                 measure_plan, measured_design_points,
+                                 predict_plan, stage_forward)
 
 __all__ = [
-    "ExecutionPlan", "StagePlan", "uniform_plan", "fit_dp_tp",
-    "lower", "group_acc_map", "realized_assignment",
-    "check_roundtrip", "measure_plan", "measured_design_points",
-    "predict_plan", "stage_forward",
+    "ExecutionPlan", "ServingPlan", "StagePlan", "uniform_plan",
+    "fit_dp_tp", "lower", "lower_serving", "group_acc_map",
+    "realized_assignment", "auto_spatial_width", "check_roundtrip",
+    "measure_plan", "measured_design_points", "predict_plan",
+    "stage_forward",
 ]

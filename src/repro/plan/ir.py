@@ -171,13 +171,77 @@ class ExecutionPlan:
         return "\n".join(lines)
 
 
+@dataclass(frozen=True)
+class ServingPlan:
+    """An ``ExecutionPlan`` lowered for the continuous-batching engine.
+
+    The plan's two pipeline dimensions map onto the two serving regimes
+    (the SSR latency-throughput tradeoff under live traffic):
+
+      * ``plan.stages``          — the *prefill pipeline*: admitted prompts
+                                   are sliced into ``chunk``-token chunks
+                                   that stream through the stage slices as
+                                   microbatches, one stage-step per engine
+                                   tick, interleaved with decode;
+      * ``plan.n_microbatches``  — the *spatial width* becomes the number
+                                   of independent decode replicas; the
+                                   engine's ``slots`` are partitioned over
+                                   them (``replica_slots``) and each
+                                   replica runs a batched per-slot decode
+                                   walk over the same stage slices.
+
+    Pure data (like ``ExecutionPlan``); the runtime lowering lives in
+    ``repro.plan.serving``.
+    """
+    plan: ExecutionPlan
+    slots: int                        # engine slots, total over replicas
+    chunk: int                        # prefill chunk length (tokens)
+    replica_slots: Tuple[int, ...]    # per-replica slot counts (sum = slots)
+
+    def __post_init__(self):
+        assert self.slots >= 1 and self.chunk >= 1, self
+        assert sum(self.replica_slots) == self.slots, self
+        assert all(n >= 1 for n in self.replica_slots), self
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replica_slots)
+
+    @property
+    def n_stages(self) -> int:
+        return self.plan.n_stages
+
+    def replica_of_slot(self, slot: int) -> Tuple[int, int]:
+        """Global slot id -> (replica index, slot index inside it)."""
+        start = 0
+        for r, n in enumerate(self.replica_slots):
+            if slot < start + n:
+                return r, slot - start
+            start += n
+        raise IndexError(slot)
+
+    def replica_range(self, r: int) -> Tuple[int, int]:
+        start = sum(self.replica_slots[:r])
+        return start, start + self.replica_slots[r]
+
+    def describe(self) -> str:
+        return (f"ServingPlan: {self.n_replicas} decode replicas over "
+                f"{self.slots} slots {list(self.replica_slots)}, "
+                f"chunked prefill (chunk={self.chunk}) through "
+                f"{self.n_stages} stages\n" + self.plan.describe())
+
+
 def uniform_plan(num_groups: int, n_stages: int, n_microbatches: int, *,
                  n_rounds: int = 1, dp: int = 1, tp: int = 1
                  ) -> ExecutionPlan:
     """The legacy executor's contract as a plan: equal contiguous stage
     slices, one shared (dp, tp).  Requires num_groups % n_stages == 0 —
     uneven splits come from ``plan.lower.lower``, not from here."""
-    assert num_groups % n_stages == 0, (num_groups, n_stages)
+    if n_stages < 1 or num_groups % n_stages:
+        raise ValueError(
+            f"uniform_plan: n_stages={n_stages} does not evenly divide "
+            f"num_groups={num_groups}; pick a divisor of the group count "
+            f"or lower an uneven Assignment via plan.lower.lower")
     per = num_groups // n_stages
     stages = tuple(
         StagePlan(index=i, acc_id=i, first_group=i * per, n_groups=per,

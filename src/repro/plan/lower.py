@@ -26,7 +26,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.assignment import Assignment
 from repro.core.costmodel import AccConfig
 from repro.core.graph import Graph
-from repro.plan.ir import ExecutionPlan, StagePlan, fit_dp_tp
+from repro.plan.ir import ExecutionPlan, ServingPlan, StagePlan, fit_dp_tp
 
 
 def _block_layers(graph: Graph) -> List[int]:
@@ -61,17 +61,34 @@ def group_acc_map(assign: Assignment, graph: Graph) -> List[int]:
             for g, v in enumerate(votes)]
 
 
+def _default_microbatches(graph: Graph, n_stages: int, n_rounds: int) -> int:
+    """Just fill the pipeline — but the executor splits the batch into
+    M * n_rounds microbatches, so M must satisfy B % (M * n_rounds) == 0:
+    smallest such divisor >= n_stages (falling back to the largest one
+    below it; 1 always qualifies when n_rounds divides B — else no M can
+    make the plan executable and we keep M minimal for analytic use)."""
+    B = max(graph.shape.global_batch, 1)
+    eff = B // n_rounds if B % n_rounds == 0 else B
+    divs = [d for d in range(1, eff + 1) if eff % d == 0]
+    ge = [d for d in divs if d >= n_stages]
+    return min(ge) if ge else max(d for d in divs if d <= n_stages)
+
+
 def lower(assign: Assignment, graph: Graph,
           mesh_devices: Optional[int] = None, *,
-          n_microbatches: Optional[int] = None,
-          n_rounds: int = 1) -> ExecutionPlan:
+          n_microbatches=None, n_rounds: int = 1,
+          measure_with=None) -> ExecutionPlan:
     """Lower a searched ``Assignment`` to a runnable ``ExecutionPlan``.
 
     mesh_devices: device budget the plan will run on (defaults to the sum
     of requested acc chips — i.e. the DSE's own target platform).  The
     uniform mesh slot width is ``mesh_devices // n_stages``; per-stage
     (dp, tp) are re-fit onto that width, capped by the per-microbatch
-    batch.  n_microbatches defaults to n_stages (just fills the pipeline).
+    batch.  n_microbatches defaults to n_stages (just fills the pipeline);
+    pass the string ``"auto"`` to pick the spatial width from per-stage
+    times instead (``plan.validate.auto_spatial_width``: *measured* stage
+    times when ``measure_with=(model, params, batch)`` is given, the
+    analytic cost model otherwise).
     """
     cfg = graph.cfg
     acc_of_group = group_acc_map(assign, graph)
@@ -85,40 +102,63 @@ def lower(assign: Assignment, graph: Graph,
         else:
             runs.append((a, g, 1))
     n_stages = len(runs)
-    M = n_microbatches
-    if M is None:
-        # just fill the pipeline — but the executor splits the batch into
-        # M * n_rounds microbatches, so M must satisfy
-        # B % (M * n_rounds) == 0: smallest such divisor >= n_stages
-        # (falling back to the largest one below it; 1 always qualifies
-        # when n_rounds divides B — else no M can make the plan
-        # executable and we keep M minimal for analytic use)
-        B = max(graph.shape.global_batch, 1)
-        eff = B // n_rounds if B % n_rounds == 0 else B
-        divs = [d for d in range(1, eff + 1) if eff % d == 0]
-        ge = [d for d in divs if d >= n_stages]
-        M = min(ge) if ge else max(d for d in divs if d <= n_stages)
     total_req = sum(a.chips for a in assign.accs) or 1
     devices = mesh_devices or total_req
     width = max(devices // n_stages, 1)
 
-    # dp cannot exceed the per-microbatch batch the executor will carry
-    mb = max(graph.shape.global_batch // max(M * n_rounds, 1), 1)
+    def build(M: int) -> ExecutionPlan:
+        # dp cannot exceed the per-microbatch batch the executor carries
+        mb = max(graph.shape.global_batch // max(M * n_rounds, 1), 1)
+        stages = []
+        for i, (acc_id, first, cnt) in enumerate(runs):
+            acc: AccConfig = assign.accs[acc_id]
+            dp, tp = fit_dp_tp(width, acc.dp, acc.tp, max_dp=mb)
+            # work-proportional ideal share of the device budget vs the
+            # uniform slot: the replicate-padding the mesh forces on us
+            ideal = devices * acc.chips / total_req
+            waste = max(0.0, (width - ideal) / width)
+            stages.append(StagePlan(
+                index=i, acc_id=acc_id, first_group=first, n_groups=cnt,
+                dp=dp, tp=tp, width=width, requested_chips=acc.chips,
+                replica_waste=waste))
+        return ExecutionPlan(stages=tuple(stages),
+                             num_groups=cfg.num_groups,
+                             n_microbatches=M, n_rounds=n_rounds)
 
-    stages = []
-    for i, (acc_id, first, cnt) in enumerate(runs):
-        acc: AccConfig = assign.accs[acc_id]
-        dp, tp = fit_dp_tp(width, acc.dp, acc.tp, max_dp=mb)
-        # work-proportional ideal share of the device budget vs the uniform
-        # slot: the replicate-padding the rectangular mesh forces on us
-        ideal = devices * acc.chips / total_req
-        waste = max(0.0, (width - ideal) / width)
-        stages.append(StagePlan(
-            index=i, acc_id=acc_id, first_group=first, n_groups=cnt,
-            dp=dp, tp=tp, width=width, requested_chips=acc.chips,
-            replica_waste=waste))
-    return ExecutionPlan(stages=tuple(stages), num_groups=cfg.num_groups,
-                         n_microbatches=M, n_rounds=n_rounds)
+    if n_microbatches == "auto":
+        from repro.plan.validate import auto_spatial_width
+        M = auto_spatial_width(build, graph, n_rounds=n_rounds,
+                               measure_with=measure_with)
+    else:
+        M = n_microbatches
+        if M is None:
+            M = _default_microbatches(graph, n_stages, n_rounds)
+    return build(M)
+
+
+def lower_serving(plan: ExecutionPlan, slots: int,
+                  chunk: int = 16) -> ServingPlan:
+    """Lower an ``ExecutionPlan`` for the continuous-batching engine.
+
+    The plan's spatial width (``n_microbatches``) becomes the number of
+    independent decode replicas; the engine's ``slots`` are partitioned
+    over them as evenly as possible.  ``chunk`` is the prefill chunk
+    length: admitted prompts stream through the plan's stages in
+    ``chunk``-token microbatches, one stage-step per engine tick.
+    """
+    R = plan.n_microbatches
+    if slots < R:
+        raise ValueError(
+            f"lower_serving: {slots} slots cannot feed {R} decode replicas "
+            f"(the plan's spatial width n_microbatches={R}); give the "
+            f"engine at least one slot per replica or lower a narrower "
+            f"plan")
+    if chunk < 1:
+        raise ValueError(f"lower_serving: chunk={chunk} must be >= 1")
+    base, rem = divmod(slots, R)
+    replica_slots = tuple(base + (1 if r < rem else 0) for r in range(R))
+    return ServingPlan(plan=plan, slots=slots, chunk=chunk,
+                       replica_slots=replica_slots)
 
 
 def realized_assignment(plan: ExecutionPlan, graph: Graph) -> Assignment:

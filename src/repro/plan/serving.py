@@ -1,0 +1,313 @@
+"""Runtime lowering of a ``ServingPlan`` for the continuous-batching engine.
+
+``ExecutionPlan``s (PR 3) run synthetic pipelined forwards; this module is
+what lets the *serving engine* consume them under live traffic, realizing
+the paper's two regimes from one searched artifact:
+
+  * **chunked prefill as plan stages** — an admitted prompt is sliced into
+    ``chunk``-token chunks that stream through the plan's (uneven) stage
+    slices as microbatches.  ``PrefillPipeline`` advances every in-flight
+    chunk by at most ONE stage per engine tick (classic pipeline occupancy:
+    one chunk per stage per tick, chunks of one prompt one stage apart), so
+    a long prompt never stalls decode — prefill wants spatial pipelining.
+  * **spatial decode replicas** — the plan's spatial width
+    (``n_microbatches``) becomes N independent slot-partitioned decode
+    engines; each runs ``make_plan_decode_step``, a per-slot batched decode
+    that walks the stage slices in order, threading hidden states between
+    stages and updating each stage's group-range of the replica's cache —
+    decode wants replicated low-latency engines.
+
+Numerical contract (enforced by ``tests/test_serving_parity.py``): token
+streams through any ServingPlan are identical to isolated one-shot decode.
+Three facts make that hold: (1) slicing the group scan into consecutive
+stage sub-scans executes the same per-group ops in the same order; (2) a
+chunk's first pass (``cont=False``) uses the exact one-shot prefill branch,
+and continuation chunks attend the position-ordered cache (zeros
+interspersed, valid keys in one-shot order — see
+``layers.multi_head_attention(attend_cache=True)``); (3) recurrent/SSM
+state threads between chunks exactly (a split scan is the same scan).
+Chunking auto-disables where exactness cannot hold: MoE FFNs (capacity is
+computed per call, so chunk-local routing would differ from one-shot) and
+sliding-window prompts longer than the ring (wrap order differs) fall back
+to a single whole-prompt chunk — still walked stage by stage.
+
+Multi-device sharing: ``place_params`` puts the stacked params on a
+``launch.mesh.make_plan_mesh`` so all replicas read the same stage-sharded
+copy; on a single host device it is a no-op passthrough.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.pipeline.executor import run_stage
+from repro.plan.ir import ExecutionPlan, ServingPlan
+# the embed / final-norm+head / stage-slice helpers are shared with the
+# measured-validation path so the numerical parity contract has exactly
+# one implementation per term
+from repro.plan.validate import _embed, _finish, _stage_slice
+
+
+# ---------------------------------------------------------------------------
+# jitted building blocks
+# ---------------------------------------------------------------------------
+
+def make_chunk_embed(model) -> Callable:
+    """embed(params, tokens (1, L)) -> hidden (1, L, d) — stage-0 input."""
+
+    def f(params, tokens):
+        return _embed(model, params, {"tokens": tokens})
+    return jax.jit(f)
+
+
+def make_stage_prefill(model, plan: ExecutionPlan, s: int,
+                       cont: bool) -> Callable:
+    """One prefill stage-step: run stage ``s``'s group slice over a chunk
+    of hidden states against the request's (batch-1) cache, updating only
+    that stage's group range.
+
+    cont=False is the chunk-0 pass (the exact one-shot prefill branch);
+    cont=True is a continuation chunk (fresh tokens additionally attend
+    the ``pos_base`` tokens already in the cache).
+    """
+    cfg = model.cfg
+    st = plan.stages[s]
+
+    def f(params, part_cache, hidden, pos_base):
+        stage_params = _stage_slice(params["stack"], plan, s)
+        cache_sl = T.slice_cache_groups(part_cache, st.first_group,
+                                        st.n_groups)
+        y, new_sl, _ = run_stage(
+            cfg, stage_params, hidden, cache=cache_sl, cache_index=pos_base,
+            collect_state=True, attend_cache=cont)
+        return y, T.merge_cache_groups(part_cache, new_sl, st.first_group)
+    return jax.jit(f)
+
+
+def make_prefill_finish(model) -> Callable:
+    """finish(params, hidden (1, L, d)) -> (first_token (1,), logits):
+    final norm + head at the chunk's last (exact-length) position."""
+
+    def f(params, hidden):
+        logits = _finish(model, params, hidden[:, -1:])
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, logits
+    return jax.jit(f)
+
+
+def make_plan_decode_step(model, plan: ExecutionPlan) -> Callable:
+    """decode(params, cache, tokens (B, 1), positions (B,)) ->
+    (next_tokens (B, 1), new_cache) — one batched greedy decode step for
+    ONE replica, walking the plan's stage slices in order: hidden states
+    thread between stages, each stage updates its own group range of the
+    replica's slot cache.  Numerically identical to the monolithic
+    ``serve_step`` (the group scan is merely sliced at stage boundaries).
+    """
+    cfg = model.cfg
+
+    def step(params, cache, tokens, positions):
+        x = _embed(model, params, {"tokens": tokens})
+        x = T.shard_act(x)
+        new_slices = []
+        for s, st in enumerate(plan.stages):
+            stage_params = _stage_slice(params["stack"], plan, s)
+            cache_sl = T.slice_cache_groups(cache, st.first_group,
+                                            st.n_groups)
+            x, new_sl, _ = run_stage(
+                cfg, stage_params, x, cache=cache_sl, cache_index=positions,
+                collect_state=True)
+            new_slices.append(new_sl)
+        new_cache = T.concat_cache_groups(new_slices)
+        logits = _finish(model, params, x)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt[:, None], new_cache
+    return step
+
+
+def place_params(params, plan: ExecutionPlan, devices=None):
+    """Share one stage-sharded copy of the params across all decode
+    replicas: the stacked (group-axis-leading) leaves go onto a
+    ``make_plan_mesh`` with the group axis split over 'stage' (uniform
+    plans whose groups divide the stage count evenly; anything else — and
+    single-device hosts — replicates).  Returns (params, mesh_or_None)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import make_plan_mesh
+
+    devs = list(devices if devices is not None else jax.devices())
+    if len(devs) < plan.n_stages or len(devs) == 1:
+        return params, None
+    mesh = make_plan_mesh(plan, devices=devs)
+    S = plan.n_stages
+    shard_groups = plan.is_uniform and plan.num_groups % S == 0
+
+    def put(path_is_stack, leaf):
+        if path_is_stack and shard_groups and leaf.shape[0] % S == 0:
+            return jax.device_put(
+                leaf, NamedSharding(mesh, P("stage")))
+        return jax.device_put(leaf, NamedSharding(mesh, P()))
+
+    out = dict(params)
+    out["stack"] = jax.tree.map(lambda l: put(True, l), params["stack"])
+    for k, v in params.items():
+        if k != "stack":
+            out[k] = jax.tree.map(lambda l: put(False, l), v)
+    return out, mesh
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill pipeline (host-side scheduling)
+# ---------------------------------------------------------------------------
+
+@dataclass(eq=False)
+class _Flight:
+    ci: int                 # chunk index within its request
+    si: int                 # next stage this chunk will execute
+    hidden: Any             # (1, L, d) activations entering stage si
+    pos_base: int           # tokens of this request already in the cache
+
+
+@dataclass(eq=False)
+class _PrefillItem:
+    req: Any                # serving.Request
+    slot: int               # global engine slot (reserved)
+    replica: int
+    local_slot: int
+    chunks: List[np.ndarray]        # (1, L) token chunks, exact lengths
+    part_cache: Any                 # batch-1 full-group cache being built
+    next_chunk: int = 0
+    flight: List[_Flight] = field(default_factory=list)
+    final_hidden: Any = None
+
+
+class PlanRuntime:
+    """Jitted callables + chunking policy for one (model, ServingPlan)."""
+
+    def __init__(self, model, splan: ServingPlan, max_seq: int):
+        cfg = model.cfg
+        if cfg.family in ("audio", "vision", "vlm") or cfg.mrope_sections:
+            raise NotImplementedError(
+                "plan-driven serving covers token-LM families "
+                "(dense/moe/hybrid/ssm)")
+        self.model = model
+        self.splan = splan
+        self.max_seq = max_seq
+        plan = splan.plan
+        assert plan.num_groups == cfg.num_groups, (plan.num_groups,
+                                                   cfg.num_groups)
+        self.embed = make_chunk_embed(model)
+        self.finish = make_prefill_finish(model)
+        self.stage_fns = {
+            (s, cont): make_stage_prefill(model, plan, s, cont)
+            for s in range(plan.n_stages) for cont in (False, True)}
+        self.decode_step = jax.jit(make_plan_decode_step(model, plan))
+        # chunking exactness gates (mirrors the engine's bucketing gates):
+        # MoE capacity is per-call, so chunk-local routing would diverge
+        # from the one-shot prefill; a prompt that wraps a sliding-window
+        # ring must wrap it in one shot exactly as the gold prefill does.
+        self._moe = any(b.ffn == "moe" for b in cfg.block_pattern)
+        self._ring_min = min(
+            (min(max_seq, cfg.window_size)
+             for b in cfg.block_pattern if b.mixer == "attn_local"),
+            default=0)
+
+    def split_chunks(self, prompt: np.ndarray) -> List[np.ndarray]:
+        plen = len(prompt)
+        c = self.splan.chunk
+        if self._moe or (self._ring_min and plen > self._ring_min) \
+                or plen <= c:
+            cuts = [plen]
+        else:
+            cuts = [c] * (plen // c)
+            if plen % c:
+                cuts.append(plen % c)
+        out, a = [], 0
+        for n in cuts:
+            out.append(np.asarray(prompt[a:a + n], np.int32)[None])
+            a += n
+        return out
+
+
+class PrefillPipeline:
+    """In-flight chunked prefills, advanced one stage-step per tick.
+
+    Occupancy rule: at most one chunk executes on each stage per tick
+    (stages are spatially distinct accelerators), and chunks of the same
+    request stay in order (a chunk never enters a stage before its
+    predecessor has left it — its stage-range cache writes must land
+    first).  ``step`` returns the items that finished this tick."""
+
+    def __init__(self, runtime: PlanRuntime, params):
+        self.rt = runtime
+        self.params = params
+        self.items: List[_PrefillItem] = []
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.items)
+
+    def admit(self, req, slot: int, replica: int, local_slot: int):
+        chunks = self.rt.split_chunks(req.prompt)
+        part_cache = self.rt.model.init_cache(1, self.rt.max_seq)
+        self.items.append(_PrefillItem(
+            req=req, slot=slot, replica=replica, local_slot=local_slot,
+            chunks=chunks, part_cache=part_cache))
+
+    def step(self) -> List[_PrefillItem]:
+        """Advance every in-flight chunk by at most one stage; inject the
+        next chunk of each item into stage 0 when it is free."""
+        S = self.rt.splan.n_stages
+        occupied = set()
+        finished: List[_PrefillItem] = []
+
+        # advance existing flights, deepest stage first (so a vacated
+        # stage is NOT re-entered in the same tick); ties (same stage)
+        # resolve to the earlier chunk / earlier item — FIFO fairness.
+        work = [(it, fl) for it in self.items for fl in it.flight]
+        work.sort(key=lambda w: (-w[1].si, w[1].ci))
+        for it, fl in work:
+            if fl.si in occupied:
+                continue
+            occupied.add(fl.si)
+            fn = self.rt.stage_fns[(fl.si, fl.ci > 0)]
+            fl.hidden, it.part_cache = fn(
+                self.params, it.part_cache, fl.hidden,
+                jnp.int32(fl.pos_base))
+            fl.si += 1
+            if fl.si == S:
+                it.flight.remove(fl)
+                if fl.ci == len(it.chunks) - 1:
+                    it.final_hidden = fl.hidden
+                    finished.append(it)
+
+        # inject next chunks at stage 0 when it is free this tick (a
+        # predecessor chunk has always left stage 0 already: injection
+        # executes stage 0 inline, so no flight ever sits at si == 0)
+        for it in self.items:
+            if it.next_chunk >= len(it.chunks) or 0 in occupied:
+                continue
+            occupied.add(0)
+            tokens = it.chunks[it.next_chunk]
+            pos_base = sum(c.shape[1] for c in it.chunks[:it.next_chunk])
+            hidden = self.rt.embed(self.params, jnp.asarray(tokens))
+            fn = self.rt.stage_fns[(0, it.next_chunk > 0)]
+            hidden, it.part_cache = fn(
+                self.params, it.part_cache, hidden, jnp.int32(pos_base))
+            fl = _Flight(ci=it.next_chunk, si=1, hidden=hidden,
+                         pos_base=pos_base)
+            it.next_chunk += 1
+            if fl.si == S:
+                if fl.ci == len(it.chunks) - 1:
+                    it.final_hidden = fl.hidden
+                    finished.append(it)
+            else:
+                it.flight.append(fl)
+
+        for it in finished:
+            self.items.remove(it)
+        return finished

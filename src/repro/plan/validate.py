@@ -181,6 +181,53 @@ def predict_plan(plan: ExecutionPlan, graph: Graph, *, hw: Chip = TPU_V5E,
     }
 
 
+def auto_spatial_width(build_plan, graph: Graph, *, n_rounds: int = 1,
+                       measure_with=None, max_candidates: int = 6,
+                       hw: Chip = TPU_V5E,
+                       feats: Features = Features()) -> int:
+    """Pick the plan's spatial width (``n_microbatches``) from per-stage
+    times instead of requiring the caller to pass it.
+
+    build_plan: callable M -> ExecutionPlan (the lowering parameterized by
+    the spatial width — ``plan.lower.lower`` passes its stage builder).
+
+    Candidates are the divisors of the effective batch (so the executor's
+    ``B % (M * n_rounds) == 0`` contract always holds), subsampled to
+    ``max_candidates``.  Each candidate is scored by the pipeline-composed
+    makespan of its per-stage times: *measured* on the local backend when
+    ``measure_with=(model, params, batch)`` is given, the analytic cost
+    model otherwise.  The tradeoff is real in both: more microbatches
+    shrink the bubble but re-pay the per-invocation cost (weight reads)
+    once per microbatch.
+    """
+    B = max(graph.shape.global_batch, 1)
+    if B % n_rounds:
+        raise ValueError(
+            f"auto_spatial_width: n_rounds={n_rounds} does not divide the "
+            f"global batch {B}, so no spatial width can satisfy the "
+            f"executor's B % (M * n_rounds) == 0 contract")
+    eff = B // n_rounds
+    cands = [d for d in range(1, eff + 1) if eff % d == 0]
+    if len(cands) > max_candidates:
+        # keep the extremes + an even spread between them
+        idx = np.unique(np.linspace(0, len(cands) - 1,
+                                    max_candidates).round().astype(int))
+        cands = [cands[i] for i in idx]
+
+    best_m, best_t = cands[0], float("inf")
+    for M in cands:
+        plan = build_plan(M)
+        if measure_with is not None:
+            model, params, batch = measure_with
+            t = measure_plan(model, params, batch, plan,
+                             repeat=1, check=False)["makespan_s"]
+        else:
+            t = predict_plan(plan, graph, hw=hw, feats=feats)["makespan_s"]
+        if t < best_t:
+            best_m, best_t = M, t
+    return best_m
+
+
 def measured_design_points(model, params, batch, graph: Graph,
                            plans: Sequence[ExecutionPlan], *,
                            repeat: int = 3) -> List[DesignPoint]:

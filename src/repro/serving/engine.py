@@ -1,6 +1,7 @@
-"""Batched serving engine: true per-slot continuous batching (vLLM-style).
+"""Batched serving engine: true per-slot continuous batching (vLLM-style),
+optionally plan-driven (a lowered ``ServingPlan``).
 
-The engine owns ONE slot-indexed KV/recurrent cache for its whole lifetime
+The engine owns slot-indexed KV/recurrent caches for its whole lifetime
 (batch axis = slots).  Admission prefills a single request (batch 1) and
 scatters its cache into the free slot via ``dynamic_update_slice`` — cost
 O(prompt), never O(active batch).  Decode is one batched step over all
@@ -10,10 +11,21 @@ mask, so mixed-length requests decode at their correct positions.  A slot
 retiring (EOS / max tokens / cache full) never interrupts the other
 slots' decode — the freed slot is simply re-prefilled from the queue.
 
+**Plan-driven mode** (``plan=lower_serving(execution_plan, slots, chunk)``)
+runs the same engine on a searched ``ExecutionPlan`` (see
+``repro.plan.serving``): admission becomes a *chunked prefill* — the
+prompt is sliced into ``chunk``-token microbatches that stream through the
+plan's stage slices, one stage-step per tick, interleaved with decode so a
+long prompt never stalls decode — and the plan's spatial width becomes N
+independent *decode replicas*, each owning a partition of the slots and
+walking the stage slices per decode step.  This realizes the paper's
+hybrid spatial-sequential tradeoff under live traffic: prefill is
+pipelined spatially, decode is replicated for latency.
+
 Guarantee (tested by ``tests/test_serving_parity.py``): the token stream
 of every request is exactly equal to an isolated one-shot greedy decode
-of that request, regardless of arrival order, prompt-length mix, or slot
-count.
+of that request, regardless of arrival order, prompt-length mix, slot
+count — or ServingPlan.
 
 ``serve_step`` — the function the decode-shape dry-runs lower — is one
 batched decode step over a fixed slot set and keeps accepting a scalar
@@ -81,7 +93,7 @@ class Request:
 
 @dataclass
 class ServingEngine:
-    """Continuous batching over a persistent slot-indexed cache.
+    """Continuous batching over persistent slot-indexed caches.
 
     prefill_bucket: admitted prompts are right-padded to the next multiple
     of this, bounding jit specializations to O(max_seq / bucket) distinct
@@ -89,12 +101,19 @@ class ServingEngine:
     masking); patterns with recurrent blocks (mamba/mlstm/slstm) fold the
     pad tokens into the state, so the engine auto-disables bucketing for
     them and prefills at the exact prompt length.
+
+    plan: optional ``repro.plan.ServingPlan`` — run plan-driven (chunked
+    prefill through the plan's stages + slot-partitioned spatial decode
+    replicas).  Plan mode prefills chunks at exact lengths (the chunk
+    size itself bounds jit specializations), so ``prefill_bucket`` is
+    ignored.
     """
     model: Model
     params: Any
     slots: int
     max_seq: int
     prefill_bucket: int = 16
+    plan: Optional[Any] = None       # repro.plan.ServingPlan
 
     def __post_init__(self):
         self.cfg = self.model.cfg
@@ -120,10 +139,28 @@ class ServingEngine:
              for b in self.cfg.block_pattern if b.mixer == "attn_local"),
             default=0)
         # engine-lifetime state -------------------------------------------
-        self._cache = self.model.init_cache(self.slots, self.max_seq)
+        self._pf = None
+        if self.plan is not None:
+            from repro.plan.serving import PlanRuntime, PrefillPipeline
+            if self.plan.slots != self.slots:
+                raise ValueError(
+                    f"ServingPlan was lowered for {self.plan.slots} slots "
+                    f"but the engine has {self.slots}; re-lower via "
+                    f"lower_serving(plan, slots={self.slots})")
+            self._rt = PlanRuntime(self.model, self.plan, self.max_seq)
+            self._pf = PrefillPipeline(self._rt, self.params)
+            # one engine-lifetime cache per decode replica (its slot
+            # partition is the batch axis)
+            self._caches = [self.model.init_cache(n, self.max_seq)
+                            for n in self.plan.replica_slots]
+            self._cache = None
+            self.prefill_bucket = 1       # chunks run at exact lengths
+        else:
+            self._cache = self.model.init_cache(self.slots, self.max_seq)
         self._pos = np.zeros((self.slots,), np.int32)    # tokens in cache
         self._cur = np.zeros((self.slots, 1), np.int32)  # next input token
         self._slot_req: List[Optional[Request]] = [None] * self.slots
+        self._reserved = set()           # slots mid-(chunked)-prefill
         self.queue: List[Request] = []
         self.done: List[Request] = []
         # stats ------------------------------------------------------------
@@ -131,6 +168,7 @@ class ServingEngine:
         self._occupied_step_sum = 0       # sum over steps of occupied slots
         self.prefill_batch_sizes: List[int] = []  # always 1 per admission
         self.prefill_token_counts: List[int] = []
+        self.prefill_chunk_counts: List[int] = []  # chunks per admission
 
     # -- public API --------------------------------------------------------
     def submit(self, req: Request):
@@ -146,12 +184,17 @@ class ServingEngine:
         return sum(r is not None for r in self._slot_req)
 
     def tick(self) -> bool:
-        """Admit whatever fits, then run one batched decode step.
+        """Admit whatever fits, advance any in-flight chunked prefills by
+        one stage-step, then run one batched decode step per replica.
         Returns True while there is (or may be) work in flight."""
         self._admit()
+        if self._pf is not None and self._pf.busy:
+            for item in self._pf.step():
+                self._finish_prefill(item)
         if self.active:
             self._decode_once()
-        return bool(self.active or self.queue)
+        return bool(self.active or self.queue
+                    or (self._pf is not None and self._pf.busy))
 
     def run(self, max_steps: int = 10_000):
         """Drive ticks until every submitted request retires."""
@@ -168,6 +211,7 @@ class ServingEngine:
         self._occupied_step_sum = 0
         self.prefill_batch_sizes = []
         self.prefill_token_counts = []
+        self.prefill_chunk_counts = []
 
     def stats(self) -> Dict[str, Any]:
         """Serving-side latency/throughput numbers for the SSR story."""
@@ -178,7 +222,7 @@ class ServingEngine:
         else:
             wall = 0.0
         cap = max(self.decode_steps * self.slots, 1)
-        return {
+        out = {
             "kernel_path": self.kernel_path,
             "requests": len(reqs),
             "gen_tokens": gen,
@@ -188,6 +232,11 @@ class ServingEngine:
             "ttft_s": [r.t_first - r.t_submit for r in reqs],
             "latency_s": [r.t_done - r.t_submit for r in reqs],
         }
+        if self.plan is not None:
+            out["plan_stages"] = self.plan.n_stages
+            out["decode_replicas"] = self.plan.n_replicas
+            out["prefill_chunk"] = self.plan.chunk
+        return out
 
     # -- internals ---------------------------------------------------------
     def _padded_len(self, n: int) -> int:
@@ -200,11 +249,24 @@ class ServingEngine:
             pp = n if n > self._ring_min else min(pp, self._ring_min)
         return pp
 
-    def _admit(self):
-        while self.queue and self.active < self.slots:
-            self._admit_one(self.queue.pop(0),
-                            self._slot_req.index(None))
+    def _free_slot(self) -> Optional[int]:
+        for s in range(self.slots):
+            if self._slot_req[s] is None and s not in self._reserved:
+                return s
+        return None
 
+    def _admit(self):
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            if self._pf is not None:
+                self._admit_one_plan(req, slot)
+            else:
+                self._admit_one(req, slot)
+
+    # ---- monolithic admission (no plan) ----------------------------------
     def _admit_one(self, req: Request, slot: int):
         """Prefill ONE request into ONE free slot: O(prompt) compute, no
         other slot's cache row or position is touched."""
@@ -217,30 +279,86 @@ class ServingEngine:
         tok = int(np.asarray(nxt)[0])     # host sync: prefill has run
         self.prefill_batch_sizes.append(1)
         self.prefill_token_counts.append(toks.shape[1])
+        self.prefill_chunk_counts.append(1)
+        self._activate(req, slot, tok)
+
+    # ---- plan-driven admission (chunked prefill as plan stages) ----------
+    def _admit_one_plan(self, req: Request, slot: int):
+        """Reserve the slot and enter the chunked-prefill pipeline: the
+        prompt streams through the plan's stage slices one stage-step per
+        tick (``PrefillPipeline``), so admission never stalls decode."""
+        replica, local = self.plan.replica_of_slot(slot)
+        self._reserved.add(slot)
+        self._pf.admit(req, slot, replica, local)
+        self.prefill_batch_sizes.append(1)
+        self.prefill_token_counts.append(len(req.prompt))
+        self.prefill_chunk_counts.append(
+            len(self._pf.items[-1].chunks))
+
+    def _finish_prefill(self, item):
+        """Last chunk left the last stage: bank the first token, scatter
+        the request's batch-1 cache into its replica's slot partition, and
+        start decoding."""
+        nxt, _ = self._rt.finish(self.params, item.final_hidden)
+        tok = int(np.asarray(nxt)[0])     # host sync: prefill has run
+        from repro.models import transformer as T
+        self._caches[item.replica] = T.scatter_cache_slot(
+            self._caches[item.replica], item.part_cache,
+            jnp.int32(item.local_slot))
+        self._reserved.discard(item.slot)
+        self._activate(item.req, item.slot, tok)
+
+    def _activate(self, req: Request, slot: int, first_token: int):
         req.slot = slot
         req.t_first = time.perf_counter()
-        req.out_tokens.append(tok)
+        req.out_tokens.append(first_token)
         self._slot_req[slot] = req
-        self._pos[slot] = plen
+        self._pos[slot] = len(req.prompt)
         self._cur[slot, 0] = req.out_tokens[-1]
         self._maybe_retire(slot, req.t_first)
 
+    # ---- decode ----------------------------------------------------------
     def _decode_once(self):
         """One batched decode step at per-slot positions.  Idle slots ride
         along at fixed shape (their rows are garbage until the admission
-        scatter replaces the whole slot)."""
-        nxt, _, self._cache = self.serve_step(
-            self.params, self._cache, jnp.asarray(self._cur),
-            jnp.asarray(self._pos))
-        arr = np.asarray(nxt)
-        now = time.perf_counter()
+        scatter replaces the whole slot).  Plan mode decodes each spatial
+        replica independently (its slot partition, its stage walk)."""
+        if self._pf is None:
+            nxt, _, self._cache = self.serve_step(
+                self.params, self._cache, jnp.asarray(self._cur),
+                jnp.asarray(self._pos))
+            arr = np.asarray(nxt)
+            now = time.perf_counter()
+            self._collect_decoded(arr, 0, self.slots, now)
+        else:
+            # dispatch every replica's step before syncing any result —
+            # the replicas are independent, so their device computations
+            # may overlap; only then round-trip the tokens to the host.
+            pending = []
+            for r in range(self.plan.n_replicas):
+                a, b = self.plan.replica_range(r)
+                if not any(self._slot_req[s] is not None
+                           for s in range(a, b)):
+                    continue
+                nxt, self._caches[r] = self._rt.decode_step(
+                    self.params, self._caches[r],
+                    jnp.asarray(self._cur[a:b]),
+                    jnp.asarray(self._pos[a:b]))
+                pending.append((nxt, a, b))
+            arrs = [(np.asarray(nxt), a, b) for nxt, a, b in pending]
+            now = time.perf_counter()
+            for arr, a, b in arrs:
+                self._collect_decoded(arr, a, b, now)
         self.decode_steps += 1
         self._occupied_step_sum += self.active
-        for slot, req in enumerate(self._slot_req):
+
+    def _collect_decoded(self, arr, a: int, b: int, now: float):
+        for slot in range(a, b):
+            req = self._slot_req[slot]
             if req is None:
                 continue
             self._pos[slot] += 1
-            tok = int(arr[slot, 0])
+            tok = int(arr[slot - a, 0])
             req.out_tokens.append(tok)
             self._cur[slot, 0] = tok
             self._maybe_retire(slot, now)

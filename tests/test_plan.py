@@ -228,3 +228,156 @@ def test_plan_mesh_factors():
     plan = lower(assign, g, mesh_devices=8)
     data, model = plan.mesh_factors()
     assert data * model == plan.stage_width
+
+
+# ---------------------------------------------------------------------------
+# lower() edge cases + shim error reporting
+# ---------------------------------------------------------------------------
+
+def test_lower_single_group_graph():
+    """A one-group model lowers to a single one-group stage regardless of
+    how many accs the assignment scatters layers over."""
+    cfg, _, g = _setup(layers=1)
+    assert cfg.num_groups == 1
+    _, _, assign = ssr_dse(g, (0,) * len(g.nodes), 4, n_batches=1)
+    plan = lower(assign, g, mesh_devices=4)
+    assert plan.n_stages == 1 and plan.num_groups == 1
+    assert plan.stages[0].n_groups == 1
+    assert plan.max_groups == 1 and plan.is_uniform
+
+
+def test_lower_all_nodes_one_acc_collapses_to_sequential():
+    cfg, _, g = _setup(layers=4)
+    _, _, assign = ssr_dse(g, (0,) * len(g.nodes), 8, n_batches=2)
+    plan = lower(assign, g, mesh_devices=8)
+    assert plan.n_stages == 1
+    assert plan.stages[0].n_groups == cfg.num_groups
+    assert plan.stages[0].width == 8
+    assert plan.padding_waste == 0.0
+
+
+def test_lower_rejects_zero_rounds():
+    cfg, _, g = _setup(layers=4)
+    _, _, assign = ssr_dse(g, (0, 0, 0, 0, 1, 1), 8, n_batches=2)
+    with pytest.raises(AssertionError):
+        lower(assign, g, mesh_devices=8, n_microbatches=2, n_rounds=0)
+
+
+def test_multi_round_plan_roundtrip_through_plan_forward():
+    """n_rounds > 1 (the sequential dimension) streams M*n_rounds
+    microbatches through plan_forward and still matches the reference
+    forward — on the 1-device host mesh (single-stage plan)."""
+    from repro.launch.mesh import make_plan_mesh
+    from repro.pipeline import plan_forward
+    cfg, _, g = _setup(layers=4)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, (8, 16)), jnp.int32)}
+    _, _, assign = ssr_dse(g, (0,) * len(g.nodes), 8, n_batches=2)
+    plan = lower(assign, g, mesh_devices=1, n_microbatches=2, n_rounds=2)
+    assert plan.n_stages == 1 and plan.total_microbatches == 4
+    mesh = make_plan_mesh(plan, devices=jax.devices()[:1])
+    got = plan_forward(m, params, batch, mesh, plan)
+    ref, _ = m.forward(params, batch)
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    assert err < 1e-4
+
+
+def test_uniform_plan_rejects_non_dividing_stages():
+    with pytest.raises(ValueError, match="does not evenly divide"):
+        uniform_plan(4, 3, 2)
+    with pytest.raises(ValueError, match="does not evenly divide"):
+        uniform_plan(4, 0, 2)
+
+
+def test_pipeline_mesh_rejects_non_dividing_stage_count():
+    from repro.launch.mesh import make_pipeline_mesh
+    with pytest.raises(ValueError, match="does not evenly divide"):
+        make_pipeline_mesh(3, model=16, total=256)   # 3*16 !| 256
+
+
+def test_plan_mesh_rejects_too_few_devices():
+    from repro.launch.mesh import make_plan_mesh
+    _, _, g = _setup(layers=4)
+    _, _, assign = ssr_dse(g, (0, 0, 0, 0, 1, 1), 8, n_batches=2)
+    plan = lower(assign, g, mesh_devices=8)
+    with pytest.raises(ValueError, match="every stage needs"):
+        make_plan_mesh(plan, devices=jax.devices()[:1])
+
+
+# ---------------------------------------------------------------------------
+# n_microbatches="auto" (plan-aware spatial-width tuning)
+# ---------------------------------------------------------------------------
+
+def test_lower_auto_microbatches_analytic():
+    cfg, shape, g = _setup(layers=4)
+    _, _, assign = ssr_dse(g, (0, 0, 0, 0, 1, 1), 8, n_batches=2)
+    plan = lower(assign, g, mesh_devices=8, n_microbatches="auto")
+    B = shape.global_batch
+    assert 1 <= plan.n_microbatches <= B
+    assert B % plan.n_microbatches == 0          # executor contract
+    # the chosen width is the analytic-makespan argmin over the candidates
+    from repro.plan import predict_plan
+    chosen = predict_plan(plan, g)["makespan_s"]
+    for m in (1, B):
+        other = lower(assign, g, mesh_devices=8, n_microbatches=m)
+        assert chosen <= predict_plan(other, g)["makespan_s"] + 1e-12
+
+
+def test_lower_auto_microbatches_measured():
+    cfg, shape, g = _setup(layers=4)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    batch = {"tokens": jnp.ones((8, 16), jnp.int32)}
+    _, _, assign = ssr_dse(g, (0, 0, 0, 0, 1, 1), 8, n_batches=2)
+    plan = lower(assign, g, mesh_devices=8, n_microbatches="auto",
+                 measure_with=(m, params, batch))
+    assert 1 <= plan.n_microbatches <= 8
+    assert 8 % plan.n_microbatches == 0
+    # auto must respect n_rounds in the divisibility contract too
+    plan2 = lower(assign, g, mesh_devices=8, n_microbatches="auto",
+                  n_rounds=2)
+    assert 8 % (plan2.n_microbatches * 2) == 0
+    # ...and reject rounds that make the contract unsatisfiable
+    with pytest.raises(ValueError, match="does not divide"):
+        lower(assign, g, mesh_devices=8, n_microbatches="auto", n_rounds=3)
+
+
+# ---------------------------------------------------------------------------
+# ServingPlan lowering
+# ---------------------------------------------------------------------------
+
+def test_lower_serving_partitions_slots():
+    from repro.plan import lower_serving
+    plan = uniform_plan(4, 2, n_microbatches=2)
+    sp = lower_serving(plan, slots=5, chunk=8)
+    assert sp.n_replicas == 2 and sp.replica_slots == (3, 2)
+    assert sp.replica_of_slot(0) == (0, 0)
+    assert sp.replica_of_slot(2) == (0, 2)
+    assert sp.replica_of_slot(3) == (1, 0)
+    assert sp.replica_range(1) == (3, 5)
+    assert "decode replicas" in sp.describe()
+
+
+def test_lower_serving_rejects_too_few_slots_and_bad_chunk():
+    from repro.plan import lower_serving
+    plan = uniform_plan(4, 2, n_microbatches=4)
+    with pytest.raises(ValueError, match="decode replicas"):
+        lower_serving(plan, slots=3, chunk=8)
+    with pytest.raises(ValueError, match="chunk"):
+        lower_serving(uniform_plan(4, 2, 1), slots=2, chunk=0)
+
+
+def test_place_params_single_device_passthrough():
+    """Replica param sharing degrades gracefully: with fewer devices than
+    stages (the 1-device CPU host) the params pass through unplaced."""
+    from repro.plan.serving import place_params
+    cfg, _, _ = _setup(layers=4)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    plan = uniform_plan(cfg.num_groups, 2, n_microbatches=2)
+    placed, mesh = place_params(params, plan)
+    assert mesh is None and placed is params
