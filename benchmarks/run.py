@@ -27,8 +27,10 @@ rows) so CI can archive the perf trajectory per commit.
 
 ``<section> --smoke`` (e.g. ``serving --smoke``) instead runs a smoke-
 sized variant of that section — for ``serving``, the plan-driven strategy
-sweep (sequential / spatial / small hybrid ServingPlan) on CPU jax — so
-plan-serving throughput lands in the per-commit perf artifact too.
+sweep (sequential / spatial / small hybrid ServingPlan) plus a
+paged-vs-dense cache-layout comparison (token parity asserted, block
+savings reported) on CPU jax — so plan-serving throughput and the paged
+block-pool figures land in the per-commit perf artifact too.
 """
 from __future__ import annotations
 

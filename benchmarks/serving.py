@@ -17,8 +17,14 @@ and ``served_design_points`` tags them ``source="served"``: the paper's
 strategy tradeoff measured under live request traffic rather than
 synthetic pipelined forwards.
 
+``paged_serving_sweep`` compares dense vs paged (block-pool) cache
+layouts over one request set with shared-prefix prompts: token parity is
+asserted between the layouts, and the rows report block-pool occupancy,
+prefix-reuse hit rate, copy-on-write counts, and the effective-slots
+gain (``paged_design_points``, also ``source="served"``).
+
     PYTHONPATH=src python benchmarks/run.py serving
-    python benchmarks/run.py serving --smoke   # small hybrid plan, CPU jax
+    python benchmarks/run.py serving --smoke   # small plan + paged-vs-dense
 """
 from __future__ import annotations
 
@@ -98,6 +104,119 @@ def serving_design_points(stats: Sequence[dict]):
                         throughput_tops=s["throughput_tok_s"],
                         detail=f"occ={s['slot_occupancy']:.2f}")
             for s in stats]
+
+
+def _shared_prefix_prompts(rng, cfg, requests: int, prefix_len: int = 8):
+    """Half the trace shares one prompt prefix (>= one block at the bench
+    page sizes) so the paged sweep exercises prefix reuse; the other half
+    is independent."""
+    prefix = rng.integers(1, cfg.vocab_size, size=prefix_len)
+    out = []
+    for i in range(requests):
+        tail = rng.integers(1, cfg.vocab_size, size=int(rng.integers(2, 6)))
+        if i % 2 == 0:
+            out.append(np.concatenate([prefix, tail]).astype(np.int32))
+        else:
+            out.append(rng.integers(1, cfg.vocab_size,
+                                    size=int(rng.integers(3, 12))
+                                    ).astype(np.int32))
+    return out
+
+
+def _drive_submissions(eng, prompts, new_tokens: int):
+    """Deterministic drive: submit everything, run to completion (the
+    paged-vs-dense comparison wants identical request sets, and the
+    parity guarantee makes arrival times irrelevant to the streams)."""
+    from repro.serving import Request
+
+    t0 = time.perf_counter()
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, new_tokens))
+    eng.run()
+    return time.perf_counter() - t0
+
+
+def paged_serving_sweep(arch: str = "yi-6b", *, slots: int = 4,
+                        requests: int = 10, new_tokens: int = 8,
+                        max_seq: int = 64, page_sizes: Sequence[int] = (4, 8),
+                        seed: int = 0) -> List[dict]:
+    """Dense vs paged engines over one request set with shared-prefix
+    prompts: asserts token parity between the layouts, measures the block
+    pool (occupancy, prefix-reuse hit rate, copy-on-write) and the
+    effective-slots gain of paging.  One stats dict per cache layout."""
+    import jax
+
+    from repro.configs import REGISTRY, reduced
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = reduced(REGISTRY[arch], layers=1)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(seed)
+    prompts = _shared_prefix_prompts(rng, cfg, requests)
+
+    out = []
+    gold_streams = None
+    variants = [("dense", {})] + [
+        (f"paged-p{p}", {"paged": True, "page_size": p}) for p in page_sizes]
+    for name, kw in variants:
+        eng = ServingEngine(model, params, slots=slots, max_seq=max_seq,
+                            **kw)
+        # warmup: compile prefill/decode outside the measured window
+        eng.submit(Request(-1, np.arange(1, 6, dtype=np.int32), 2))
+        eng.run()
+        eng.reset_stats()
+        wall = _drive_submissions(eng, prompts, new_tokens)
+        streams = {r.uid: list(r.out_tokens) for r in eng.done}
+        if gold_streams is None:
+            gold_streams = streams
+        else:
+            assert streams == gold_streams, (
+                f"paged engine {name} diverged from dense token streams")
+        st = eng.stats()
+        st.update(layout=name, slots=slots, wall_s=wall, arch=arch,
+                  lat_p50_s=float(np.percentile(st["latency_s"], 50)),
+                  lat_p95_s=float(np.percentile(st["latency_s"], 95)),
+                  ttft_p50_s=float(np.percentile(st["ttft_s"], 50)))
+        out.append(st)
+    return out
+
+
+def paged_design_points(stats: Sequence[dict]):
+    """Paged-vs-dense measurements on the shared Pareto axes, tagged
+    ``source="served"`` — the detail string carries the block-pool story
+    (occupancy, reuse-hit rate, effective-slots gain)."""
+    from repro.core.pareto import DesignPoint
+
+    pts = []
+    for s in stats:
+        c = s["cache"]
+        if c["layout"] == "paged":
+            detail = (f"blocks={c['peak_blocks_in_use']}/{c['num_blocks']} "
+                      f"reuse={c['reuse_hit_rate']:.2f} "
+                      f"cow={c['cow_copies']} "
+                      f"eff_slots_gain={c['effective_slots_gain']:.1f}x")
+        else:
+            detail = (f"reserved_tokens={c['reserved_tokens']} "
+                      f"util={c['utilization']:.2f}")
+        pts.append(DesignPoint(
+            strategy=f"{s['layout']}-{s['slots']}slots", n_acc=1,
+            n_batches=s["slots"], latency=s["lat_p50_s"],
+            throughput_tops=s["throughput_tok_s"], detail=detail,
+            source="served"))
+    return pts
+
+
+def _paged_rows(pstats: Sequence[dict]) -> List[Tuple[str, float, str]]:
+    out = []
+    for s, p in zip(pstats, paged_design_points(pstats)):
+        name = f"serving/paged/{s['arch']}/{s['layout']}-{s['slots']}slots"
+        out.append((name, s["lat_p50_s"] * 1e6,
+                    f"source={p.source} "
+                    f"tok_s={s['throughput_tok_s']:.1f} "
+                    f"parity=Y {p.detail}"))
+    return out
 
 
 def _serving_plans(cfg, slots: int, chunk: int, seq: int, batch: int):
@@ -213,12 +332,17 @@ def rows(seed: int = 0) -> List[Tuple[str, float, str]]:
                     f"occupancy={s['slot_occupancy']:.2f} "
                     f"pareto={'Y' if on_front else 'n'}"))
     out += _plan_rows(plan_serving_sweep(seed=seed))
+    out += _paged_rows(paged_serving_sweep(seed=seed))
     return out
 
 
 def smoke_rows(seed: int = 0) -> List[Tuple[str, float, str]]:
     """`benchmarks/run.py serving --smoke`: the plan-driven strategy sweep
-    at smoke size (small hybrid plan, CPU jax) — the per-commit perf
-    artifact's plan-serving throughput rows."""
-    return _plan_rows(plan_serving_sweep(
+    plus a paged-vs-dense comparison (token parity asserted, block savings
+    reported) at smoke size on CPU jax — the per-commit perf artifact's
+    serving rows (serving_smoke.json)."""
+    rows = _plan_rows(plan_serving_sweep(
         requests=6, new_tokens=4, slots=2, chunk=4, seed=seed))
+    rows += _paged_rows(paged_serving_sweep(
+        requests=6, new_tokens=4, slots=2, page_sizes=(4,), seed=seed))
+    return rows

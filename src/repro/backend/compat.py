@@ -92,6 +92,18 @@ def smem_scratch(shape, dtype):
     return _pltpu().SMEM(tuple(shape), dtype)
 
 
+def prefetch_grid_spec(*, num_scalar_prefetch, grid, in_specs, out_specs,
+                       scratch_shapes=()):
+    """``pltpu.PrefetchScalarGridSpec`` — scalar-prefetch grid spec whose
+    index maps can read int32 operands (e.g. block tables) before the
+    kernel body runs.  Stable across the supported jax range; shimmed here
+    so only ``repro.backend`` touches the pltpu namespace."""
+    return _pltpu().PrefetchScalarGridSpec(
+        num_scalar_prefetch=num_scalar_prefetch, grid=tuple(grid),
+        in_specs=list(in_specs), out_specs=out_specs,
+        scratch_shapes=list(scratch_shapes))
+
+
 # ---------------------------------------------------------------------------
 # meshes
 # ---------------------------------------------------------------------------
@@ -212,6 +224,7 @@ def pcast_varying(x, axes):
 __all__ = [
     "SUPPORTED_RANGE", "jax_version", "backend", "on_tpu",
     "tpu_compiler_params", "vmem_scratch", "smem_scratch",
+    "prefetch_grid_spec",
     "make_mesh", "make_mesh_on", "use_mesh", "make_abstract_mesh",
     "mesh_axis_size",
     "shard_map", "pcast_varying", "PartitionSpec",

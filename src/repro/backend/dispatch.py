@@ -26,11 +26,19 @@ _PATHS = ("pallas", "interpret", "ref")
 
 
 def kernel_path() -> str:
-    """The active kernel path ("pallas" | "interpret" | "ref")."""
+    """The active kernel path ("pallas" | "interpret" | "ref").
+
+    ``REPRO_KERNELS`` must be one of "auto" / "pallas" / "interpret" /
+    "ref"; anything else raises (a typo silently falling back to the jnp
+    oracle would fake a kernel benchmark)."""
     mode = os.environ.get("REPRO_KERNELS", "auto")
     if mode == "auto":
         return "pallas" if compat.on_tpu() else "ref"
-    return mode if mode in _PATHS else "ref"
+    if mode not in _PATHS:
+        raise ValueError(
+            f"REPRO_KERNELS={mode!r} is not a valid kernel path; choose "
+            f"one of {('auto',) + _PATHS}")
+    return mode
 
 
 # ---------------------------------------------------------------------------
@@ -70,6 +78,43 @@ def dispatch_flash_attention(q, k, v, *, q_pos, k_pos, k_valid=None,
                                    softcap=softcap,
                                    interpret=(path == "interpret"))
     return jnp.swapaxes(out, 1, 2).reshape(q.shape[0], q.shape[1], -1)
+
+
+# ---------------------------------------------------------------------------
+# paged attention (decode over a block-pool KV cache)
+# ---------------------------------------------------------------------------
+
+def dispatch_paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                             softcap=0.0):
+    """Decode attention through per-slot block tables over a physical
+    page pool.  Layout adapter: q arrives in model layout (B, 1, H, D)
+    and leaves as (B, 1, H*D); pages are (N, P, Hkv, D); block_tables
+    (B, NB) int32 may carry out-of-range entries for unmapped logical
+    blocks (clipped here — rows past ``lengths`` are masked regardless);
+    lengths (B,) counts each slot's valid tokens.
+
+    The pallas path additionally requires MXU-friendly tiling (head_dim
+    % 128, page % 8); off-tile shapes fall back to the jnp reference,
+    which the parity tests pin the kernel against."""
+    from repro.kernels import ref as R
+    b, s, h, d = q.shape
+    assert s == 1, f"paged attention is a decode (one-token) path, got {s}"
+    hk = k_pages.shape[2]
+    qg = q[:, 0].reshape(b, hk, h // hk, d)
+    n = k_pages.shape[0]
+    bt = jnp.clip(block_tables, 0, n - 1)
+    path = kernel_path()
+    if path == "ref" or (path == "pallas"
+                         and not (d % 128 == 0
+                                  and k_pages.shape[1] % 8 == 0)):
+        out = R.paged_attention_ref(qg, k_pages, v_pages, bt, lengths,
+                                    softcap=softcap)
+    else:
+        from repro.kernels.paged_attention import paged_attention_grouped
+        out = paged_attention_grouped(qg, k_pages, v_pages, bt, lengths,
+                                      softcap=softcap,
+                                      interpret=(path == "interpret"))
+    return out.reshape(b, s, h * d)
 
 
 # ---------------------------------------------------------------------------
@@ -124,6 +169,6 @@ def dispatch_linear_scan(a, b, h0=None):
 
 __all__ = [
     "kernel_path", "use_flash", "use_scan_kernel",
-    "dispatch_flash_attention", "dispatch_matmul", "dispatch_layernorm",
-    "dispatch_linear_scan",
+    "dispatch_flash_attention", "dispatch_paged_attention",
+    "dispatch_matmul", "dispatch_layernorm", "dispatch_linear_scan",
 ]

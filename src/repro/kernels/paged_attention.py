@@ -1,0 +1,122 @@
+"""Paged decode attention Pallas TPU kernel.
+
+Decode attention where K/V live in a physical block pool
+(``(num_blocks, page_size, kv_heads, head_dim)``) addressed through
+per-slot block tables, instead of one dense ``(slots, max_seq, ...)``
+reservation.  The block table rides the grid as a **scalar-prefetch**
+operand: each grid step's ``index_map`` reads ``bt[b, j]`` to DMA the
+j-th *logical* page of slot ``b`` straight from wherever it physically
+sits — the gather never materializes a contiguous K/V copy in HBM, which
+is the whole point (the SSR spatial story applied to memory: decode
+replicas stay busy because their KV footprint is live-token-sized).
+
+Layout: q ``(B, Hkv, G, D)`` (query heads grouped per kv head — GQA runs
+as one MXU matmul per kv head); pages ``(N, P, Hkv, D)``; block tables
+``(B, NB)`` int32 (host pre-clips unmapped entries into range — rows past
+``lengths`` are masked anyway); lengths ``(B,)`` = tokens valid per slot.
+
+Grid: ``(B, Hkv, NB)`` with the page dimension sequential ("arbitrary"):
+online-softmax (m, l, acc) statistics carry across pages in VMEM scratch,
+exactly like ``flash_attention.py`` carries them across KV blocks.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.backend import compat
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,   # ins
+                  o_ref,                                  # outs
+                  acc_ref, m_ref, l_ref,                  # scratch
+                  *, scale, softcap, page, nb):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)           # (P, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # rows of logical page j hold positions j*P + i; valid below length.
+    # the query sits at position length-1, so the length mask subsumes
+    # causality — every valid cached key is attendable.
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    ok = pos < len_ref[b]
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _done():
+        l = l_ref[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0, ...] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_attention_grouped(q, k_pages, v_pages, block_tables, lengths, *,
+                            softcap=0.0, interpret=False):
+    """q: (B, Hkv, G, D); k_pages/v_pages: (N, P, Hkv, D);
+    block_tables: (B, NB) int32 (in-range); lengths: (B,) int32.
+    Returns (B, Hkv, G, D)."""
+    b, hk, g, d = q.shape
+    n, page, _, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(d)
+
+    grid_spec = compat.prefetch_grid_spec(
+        num_scalar_prefetch=2,           # block tables + lengths
+        grid=(b, hk, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, h_, j, bt, ln: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, h_, j, bt, ln: (bt[b_, j], 0, h_, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, h_, j, bt, ln: (bt[b_, j], 0, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b_, h_, j, bt, ln: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            compat.vmem_scratch((g, d), jnp.float32),
+            compat.vmem_scratch((g, 1), jnp.float32),
+            compat.vmem_scratch((g, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, scale=scale, softcap=softcap,
+                               page=page, nb=nb)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hk, g, d), q.dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)

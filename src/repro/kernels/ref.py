@@ -37,6 +37,40 @@ def flash_attention_ref(q, k, v, q_pos, k_pos, k_valid, *, causal=True,
     return out.astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                        softcap=0.0):
+    """Decode attention over a paged KV cache, pure jnp.
+
+    q: (B, Hkv, G, D) — one query token per slot, q heads grouped per kv
+    head; k_pages/v_pages: (N, P, Hkv, D) physical block pool;
+    block_tables: (B, NB) int32 logical->physical map (entries >= N are
+    unmapped: clipped to a garbage page and masked); lengths: (B,) valid
+    tokens per slot (the query sits at position lengths-1).
+    Returns (B, Hkv, G, D).
+
+    The gathered layout is logical-ordered, so key position == gather row
+    and the length mask reproduces exactly the dense path's masking: the
+    valid keys are summed in the same order with the same f32 softmax, so
+    paged decode is bit-identical to dense decode.
+    """
+    b, hk, g, d = q.shape
+    n, p, _, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    dt = q.dtype
+    bt = jnp.clip(block_tables, 0, n - 1)
+    k = k_pages[bt].reshape(b, nb * p, hk, d)         # (B, T, Hkv, D)
+    v = v_pages[bt].reshape(b, nb * p, hk, d)
+    s = jnp.einsum("bhgd,bthd->bhgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    ok = jnp.arange(nb * p)[None, :] < lengths[:, None]   # (B, T)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", probs.astype(dt), v.astype(dt))
+    return out.astype(dt)
+
+
 def matmul_fused_ref(x, w, bias=None, *, activation="none", out_dtype=None):
     acc = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
     if bias is not None:

@@ -16,6 +16,13 @@ slot-partitioned decode replicas:
     python -m repro.launch.serve --arch yi-6b --strategy pipeline:2 \
         --replicas 2 --chunk 8
     python -m repro.launch.serve --arch yi-6b --strategy hybrid:2
+
+``--paged [--page-size N --num-blocks M]`` swaps the dense slot caches
+for the pool-backed paged layout (block tables + content-hash prefix
+sharing, ``repro.cache``); the stats line then reports the block-pool
+picture (peak blocks, reuse-hit rate, copy-on-writes, effective-slots
+gain).  Composes with plan-driven serving (each replica owns a pool
+partition).
 """
 from __future__ import annotations
 
@@ -84,6 +91,14 @@ def main(argv=None):
                          "(0: min(2, slots))")
     ap.add_argument("--chunk", type=int, default=8,
                     help="prefill chunk length for plan-driven serving")
+    ap.add_argument("--paged", action="store_true",
+                    help="pool-backed slot caches: paged global-attention "
+                         "KV with prefix sharing (repro.cache)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV block with --paged")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="block-pool size with --paged "
+                         "(0: slots * max_seq / page_size)")
     args = ap.parse_args(argv)
 
     cfg = reduced(REGISTRY[args.arch])
@@ -94,7 +109,9 @@ def main(argv=None):
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
     eng = ServingEngine(model, params, slots=args.slots,
-                        max_seq=args.max_seq, plan=splan)
+                        max_seq=args.max_seq, plan=splan, paged=args.paged,
+                        page_size=args.page_size,
+                        num_blocks=args.num_blocks)
     eos = None if args.eos < 0 else args.eos
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -109,6 +126,13 @@ def main(argv=None):
         extra = (f", {st['plan_stages']} stages x "
                  f"{st['decode_replicas']} replicas (chunk "
                  f"{st['prefill_chunk']})")
+    c = st["cache"]
+    if c["layout"] == "paged":
+        extra += (f", paged p{c['page_size']}: "
+                  f"peak {c['peak_blocks_in_use']}/{c['num_blocks']} blocks"
+                  f", reuse={c['reuse_hit_rate']:.2f}"
+                  f", cow={c['cow_copies']}"
+                  f", eff_slots_gain={c['effective_slots_gain']:.1f}x")
     print(f"[serve] {len(done)} requests, {st['gen_tokens']} tokens, "
           f"{st['gen_tokens']/wall:.1f} tok/s, "
           f"occupancy={st['slot_occupancy']:.2f}, "

@@ -243,7 +243,8 @@ def cross_kv(p, enc_out, cfg: ModelConfig):
 def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
                          causal=True, window=0, kv_cache=None,
                          cache_index=None, kv_source=None, use_rope=True,
-                         precomputed_kv=None, attend_cache=False):
+                         precomputed_kv=None, attend_cache=False,
+                         block_tables=None):
     """General attention supporting GQA, RoPE/M-RoPE, logit softcap, sliding
     window (ring-buffer cache), cross-attention (``kv_source``), and KV-cache
     prefill/decode.
@@ -260,7 +261,13 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
       * decode:  kv_cache given, x length small — read/modify/write cache.
 
     kv_cache: {"k": (B, W, Hkv, D), "v": ...} where W is max_seq for global
-    attention or the window size (ring buffer) for local attention.
+    attention or the window size (ring buffer) for local attention — OR a
+    *paged* cache {"k_pages": (N, P, Hkv, D), "v_pages": ...}: a physical
+    block pool shared by all slots, addressed through ``block_tables``
+    ((B, max_blocks) int32, unmapped entries out of range).  Paged caches
+    serve the per-slot decode mode only (one token per slot at its own
+    position); the write lands in the slot's current page row and the
+    attend gathers pages through the table (``dispatch_paged_attention``).
     cache_index: tokens already in the cache — a scalar int when the whole
     batch decodes in lock-step, or a (B,) vector for per-slot continuous
     batching (each slot writes its own cache row, attends under its own
@@ -313,6 +320,39 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
         out = _attend(q, k, v, cfg, q_pos=q_pos, k_pos=jnp.arange(k.shape[1]),
                       k_valid=None, causal=causal, window=window, dt=dt)
         new_cache = None
+    elif "k_pages" in kv_cache:
+        # ---- paged decode: the slot's fresh K/V lands in its current
+        # page row (table lookup; out-of-range pages drop the write, so
+        # idle slots riding along at fixed shape touch nothing), then
+        # attention gathers K/V through the block table.  The gathered
+        # layout is logical-ordered, so the per-slot length mask
+        # reproduces the dense masking exactly — paged decode is
+        # bit-identical to dense decode (see kernels/ref.py).
+        if s != 1 or not per_slot or block_tables is None:
+            raise NotImplementedError(
+                "paged KV caches serve per-slot decode (one token per "
+                "slot, vector cache_index, block_tables); prefill runs "
+                "against a dense batch-1 cache and is admitted via "
+                "transformer.scatter_cache_slot_paged")
+        if window:
+            raise NotImplementedError(
+                "sliding-window attention keeps its dense ring cache "
+                "(ring wrap order is position-, not block-, aligned)")
+        page = kv_cache["k_pages"].shape[1]
+        cdt = kv_cache["k_pages"].dtype
+        blk_idx = jnp.clip(offset // page, 0, block_tables.shape[1] - 1)
+        pages = jnp.take_along_axis(block_tables, blk_idx[:, None],
+                                    axis=1)[:, 0]
+        rows = offset % page
+        new_kp = kv_cache["k_pages"].at[pages, rows].set(
+            k[:, 0].astype(cdt), mode="drop")
+        new_vp = kv_cache["v_pages"].at[pages, rows].set(
+            v[:, 0].astype(cdt), mode="drop")
+        new_cache = {"k_pages": new_kp, "v_pages": new_vp}
+        from repro.backend import dispatch as kops
+        out = kops.dispatch_paged_attention(
+            q, new_kp, new_vp, block_tables, offset + 1,
+            softcap=cfg.attn_logit_softcap).astype(dt)
     else:
         W = kv_cache["k"].shape[1]
         cdt = kv_cache["k"].dtype

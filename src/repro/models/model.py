@@ -68,22 +68,24 @@ class Model:
 
     # --------------------------------------------------------------- forward
     def _lm_hidden(self, params, x, *, positions=None, cache=None,
-                   cache_index=None, remat=False, collect_state=False):
+                   cache_index=None, remat=False, collect_state=False,
+                   block_tables=None):
         cfg = self.cfg
         x = T.shard_act(x)
         x, new_cache, aux = T.run_stack(
             params["stack"], x, cfg, positions=positions, causal=True,
             cache=cache, cache_index=cache_index, remat=remat,
-            collect_state=collect_state)
+            collect_state=collect_state, block_tables=block_tables)
         x = L.apply_norm(params["final_norm"], x, cfg)
         return x, new_cache, aux
 
     def _lm_trunk(self, params, x, *, positions=None, cache=None,
-                  cache_index=None, remat=False, collect_state=False):
+                  cache_index=None, remat=False, collect_state=False,
+                  block_tables=None):
         x, new_cache, aux = self._lm_hidden(
             params, x, positions=positions, cache=cache,
             cache_index=cache_index, remat=remat,
-            collect_state=collect_state)
+            collect_state=collect_state, block_tables=block_tables)
         logits = L.logits_head(params.get("embed"), params.get("head"), x,
                                self.cfg)
         return logits, new_cache, aux
@@ -201,6 +203,14 @@ class Model:
         return T.make_cache(self.cfg, batch, max_seq, enc_len=enc_len,
                             factory=factory)
 
+    def init_paged_cache(self, batch: int, max_seq: int, *, page_size: int,
+                         num_blocks: int, factory=None):
+        """Pool-backed slot cache: global-attention KV as physical pages,
+        everything else dense (see ``transformer.make_paged_cache``)."""
+        return T.make_paged_cache(self.cfg, batch, max_seq,
+                                  page_size=page_size,
+                                  num_blocks=num_blocks, factory=factory)
+
     def prefill(self, params, batch, max_seq: int):
         """Process the prompt; returns (logits_last, cache)."""
         cfg = self.cfg
@@ -229,25 +239,19 @@ class Model:
             cache_index=jnp.int32(0), collect_state=True)
         return logits[:, -1:], cache
 
-    def prefill_into_slot(self, params, full_cache, tokens, slot, length,
-                          max_seq: int):
-        """Per-slot prefill for continuous batching (LM families only).
+    def prefill_one(self, params, tokens, length, max_seq: int):
+        """Batch-1 prompt prefill against a FRESH dense cache (LM families
+        only) — the admission primitive both cache layouts share.
 
-        Runs a batch-1 prefill over ``tokens`` (1, P) — right-padded to P;
-        ``length`` (traced scalar) is the true prompt length — against a
-        fresh cache, then scatters that cache into batch row ``slot`` of
-        the persistent ``full_cache`` without touching any other slot.
-        Padding is exact under causal attention (pad tokens sit *after*
-        every valid token, and their cache rows are overwritten by decode
-        before any length mask admits them).
-
-        Returns (logits at the last valid prompt position (1, 1, V),
-        new_full_cache).  Admission cost is O(prompt), independent of how
-        many other slots are mid-decode."""
+        ``tokens`` (1, P) is right-padded; ``length`` (traced scalar) is
+        the true prompt length.  Returns (logits at the last valid prompt
+        position (1, 1, V), the batch-1 cache) — the caller scatters the
+        cache into its persistent slot store (``scatter_cache_slot`` for
+        dense, ``scatter_cache_slot_paged`` for pool-backed)."""
         cfg = self.cfg
         if cfg.family in ("audio", "vision", "vlm") or cfg.mrope_sections:
             raise NotImplementedError(
-                "prefill_into_slot serves token-LM families "
+                "per-slot prefill serves token-LM families "
                 "(dense/moe/hybrid/ssm)")
         x = L.embed(params["embed"], tokens, cfg).astype(cfg.dtype)
         cache = self.init_cache(x.shape[0], max_seq)
@@ -257,16 +261,34 @@ class Model:
         last = lax.dynamic_slice_in_dim(hidden, length - 1, 1, axis=1)
         logits = L.logits_head(params.get("embed"), params.get("head"),
                                last, cfg)
+        return logits, cache
+
+    def prefill_into_slot(self, params, full_cache, tokens, slot, length,
+                          max_seq: int):
+        """Per-slot prefill for continuous batching (LM families only).
+
+        Runs ``prefill_one`` then scatters its cache into batch row
+        ``slot`` of the persistent ``full_cache`` without touching any
+        other slot.  Padding is exact under causal attention (pad tokens
+        sit *after* every valid token, and their cache rows are
+        overwritten by decode before any length mask admits them).
+
+        Returns (logits at the last valid prompt position (1, 1, V),
+        new_full_cache).  Admission cost is O(prompt), independent of how
+        many other slots are mid-decode."""
+        logits, cache = self.prefill_one(params, tokens, length, max_seq)
         return logits, T.scatter_cache_slot(full_cache, cache, slot)
 
     def decode_step(self, params, cache, tokens, cache_index,
-                    positions=None):
+                    positions=None, block_tables=None):
         """One decode step.  tokens: (B, 1).  Returns (logits, new_cache).
 
         ``cache_index`` is a scalar when all rows decode in lock-step, or a
         (B,) vector of per-slot positions for continuous batching (each
         slot then writes its own cache row and attends under its own
-        length mask — see ``layers.multi_head_attention``)."""
+        length mask — see ``layers.multi_head_attention``).
+        ``block_tables`` maps logical to physical pages when ``cache`` is
+        pool-backed (``transformer.make_paged_cache``)."""
         cfg = self.cfg
         x = L.embed(params["embed"], tokens, cfg).astype(cfg.dtype)
         if cfg.family == "audio":
@@ -280,7 +302,8 @@ class Model:
             return logits, cache
         logits, cache, _ = self._lm_trunk(
             params, x, positions=positions, cache=cache,
-            cache_index=cache_index, collect_state=True)
+            cache_index=cache_index, collect_state=True,
+            block_tables=block_tables)
         return logits, cache
 
     # ------------------------------------------------------------ input spec

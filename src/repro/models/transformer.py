@@ -105,7 +105,7 @@ def init_block(key, cfg: ModelConfig, blk: BlockSpec, cross: bool = False):
 
 def apply_block(p, x, cfg: ModelConfig, blk: BlockSpec, *,
                 positions=None, causal=True, state=None, cache_index=None,
-                enc_out=None, attend_cache=False):
+                enc_out=None, attend_cache=False, block_tables=None):
     """Returns (x, new_state, aux_loss)."""
     m = blk.mixer
     h = L.apply_norm(p["norm1"], x, cfg)
@@ -116,7 +116,7 @@ def apply_block(p, x, cfg: ModelConfig, blk: BlockSpec, *,
         h, new_kv = L.multi_head_attention(
             p["mixer"], h, cfg, positions=positions, causal=causal,
             window=window, kv_cache=attn_cache, cache_index=cache_index,
-            attend_cache=attend_cache)
+            attend_cache=attend_cache, block_tables=block_tables)
         new_state = {"kv": new_kv} if new_kv is not None else None
     elif m == "mamba":
         h, st = S.apply_mamba(p["mixer"], h, cfg,
@@ -204,6 +204,22 @@ def _state_leaf_dtype(cfg: ModelConfig, blk: BlockSpec, key: str, dtype):
     return jnp.float32
 
 
+def _dense_block_leaves(cfg: ModelConfig, blk: BlockSpec, batch: int,
+                        max_seq: int, enc_len: int, dt, factory):
+    """One pattern slot's dense state leaves (group axis leading) — the
+    shared builder behind ``make_cache`` and ``make_paged_cache``'s
+    non-paged branch, so dtype rules and shapes cannot drift between the
+    two layouts."""
+    shapes = block_state_shapes(cfg, blk, batch, max_seq, enc_len)
+    sub = {}
+    for key, val in shapes.items():
+        leaf_dt = dt if key in ("kv", "cross_kv") else jnp.float32
+        sub[key] = jax.tree.map(
+            lambda shp, d=leaf_dt: factory((cfg.num_groups,) + shp, d),
+            val, is_leaf=lambda x: isinstance(x, tuple))
+    return sub
+
+
 def make_cache(cfg: ModelConfig, batch: int, max_seq: int, *, enc_len: int = 0,
                dtype=None, factory=None):
     """Decode cache pytree, stacked over groups per pattern slot.
@@ -212,22 +228,60 @@ def make_cache(cfg: ModelConfig, batch: int, max_seq: int, *, enc_len: int = 0,
     pass jax.ShapeDtypeStruct for dry-run specs."""
     dt = jnp.dtype(dtype or cfg.dtype)
     factory = factory or jnp.zeros
-    cache = {}
-    for j, blk in enumerate(cfg.block_pattern):
-        shapes = block_state_shapes(cfg, blk, batch, max_seq, enc_len)
-        sub = {}
-        for key, val in shapes.items():
-            leaf_dt = dt if key in ("kv", "cross_kv") else jnp.float32
-            sub[key] = jax.tree.map(
-                lambda shp, d=leaf_dt: factory((cfg.num_groups,) + shp, d),
-                val, is_leaf=lambda x: isinstance(x, tuple))
-        cache[f"b{j}"] = sub
-    return cache
+    return {f"b{j}": _dense_block_leaves(cfg, blk, batch, max_seq, enc_len,
+                                         dt, factory)
+            for j, blk in enumerate(cfg.block_pattern)}
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
                enc_len: int = 0):
     return make_cache(cfg, batch, max_seq, enc_len=enc_len, dtype=dtype)
+
+
+def _is_global_attn(mixer: str) -> bool:
+    """Global-attention mixers ("attn" / "attn_global") hold pageable
+    max_seq KV; "attn_local" keeps a ring."""
+    return mixer.startswith("attn") and mixer != "attn_local"
+
+
+def has_paged_layers(cfg: ModelConfig) -> bool:
+    """Whether the pattern has any global-attention KV to page.  Sliding-
+    window rings (their ring wrap is position-, not block-, ordered) and
+    recurrent SSM state (O(1) per slot already) always stay dense."""
+    return any(_is_global_attn(b.mixer) for b in cfg.block_pattern)
+
+
+def make_paged_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+                     page_size: int, num_blocks: int, dtype=None,
+                     factory=None):
+    """Decode cache where global-attention KV lives in a physical block
+    pool instead of a dense per-slot reservation.
+
+    Global-attn leaves become page pools shaped
+    ``(num_groups, num_blocks, page_size, kv_heads, head_dim)`` shared by
+    all ``batch`` slots and addressed through per-slot block tables
+    (``repro.cache.PagedCacheManager``); every other leaf — local-window
+    rings, mamba/mlstm/slstm state — keeps the dense
+    ``(num_groups, batch, ...)`` slot layout of ``make_cache`` (paging
+    auto-disables for them).  The group axis stays leading, so the plan
+    runtime's ``slice_cache_groups`` stage slicing works unchanged on
+    paged caches."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    factory = factory or jnp.zeros
+    if max_seq % page_size:
+        raise ValueError(f"max_seq={max_seq} must be a multiple of "
+                         f"page_size={page_size}")
+    cache = {}
+    for j, blk in enumerate(cfg.block_pattern):
+        if _is_global_attn(blk.mixer):
+            shp = (cfg.num_groups, num_blocks, page_size,
+                   cfg.num_kv_heads, cfg.head_dim)
+            cache[f"b{j}"] = {"kv": {"k_pages": factory(shp, dt),
+                                     "v_pages": factory(shp, dt)}}
+        else:
+            cache[f"b{j}"] = _dense_block_leaves(cfg, blk, batch, max_seq,
+                                                 0, dt, factory)
+    return cache
 
 
 def slice_cache_groups(cache, first_group: int, n_groups: int):
@@ -254,6 +308,59 @@ def concat_cache_groups(slices):
     plan's stages tile the group axis, so concatenation on axis 0 of every
     leaf reassembles exactly ``num_groups`` entries."""
     return jax.tree.map(lambda *ls: jnp.concatenate(ls, axis=0), *slices)
+
+
+def scatter_cache_slot_paged(full_cache, part_cache, slot, logical, phys):
+    """Paged equivalent of ``scatter_cache_slot``: admit a batch-1 prefill
+    cache into a pool-backed slot cache.
+
+    Dense leaves (SSM state, local-window rings) scatter into batch row
+    ``slot`` exactly as ``scatter_cache_slot`` does.  Paged KV leaves
+    write the prompt's page-aligned K/V rows into the slot's *newly
+    allocated* physical blocks: ``logical``/``phys`` are equal-length
+    (max_blocks,) int32 vectors from ``PagedCacheManager.admit`` —
+    logical block ``logical[i]`` of the part cache lands in physical
+    block ``phys[i]``; padded entries carry an out-of-range ``phys``
+    and are dropped, which is also how **shared prefix blocks skip their
+    writes** (their pages already hold identical content)."""
+    out = {}
+    for bk, sub in full_cache.items():
+        new_sub = {}
+        for key, val in sub.items():
+            if isinstance(val, dict) and "k_pages" in val:
+
+                def write(pages, part):
+                    g, _, p, hk, hd = pages.shape
+                    blocks = part[:, 0].reshape(g, -1, p, hk, hd)
+                    sel = jnp.take(blocks, logical, axis=1, mode="clip")
+                    return pages.at[:, phys].set(sel.astype(pages.dtype),
+                                                 mode="drop")
+
+                pkv = part_cache[bk][key]
+                new_sub[key] = {"k_pages": write(val["k_pages"], pkv["k"]),
+                                "v_pages": write(val["v_pages"], pkv["v"])}
+            else:
+                new_sub[key] = jax.tree.map(
+                    lambda f, p: lax.dynamic_update_slice_in_dim(
+                        f, p.astype(f.dtype), slot, axis=1),
+                    val, part_cache[bk][key])
+        out[bk] = new_sub
+    return out
+
+
+def copy_cache_pages(full_cache, src, dst):
+    """Copy physical block ``src`` onto ``dst`` in every paged KV leaf —
+    the device half of copy-on-write (a slot diverging from a shared
+    block gets a private copy before its first write).  Dense leaves are
+    untouched; ``src``/``dst`` may be traced scalars."""
+    def leaf(sub):
+        if isinstance(sub, dict) and "k_pages" in sub:
+            return {n: p.at[:, dst].set(jnp.take(p, src, axis=1,
+                                                 mode="clip"))
+                    for n, p in sub.items()}
+        return sub
+    return {bk: {key: leaf(val) for key, val in s.items()}
+            for bk, s in full_cache.items()}
 
 
 def scatter_cache_slot(full_cache, part_cache, slot):
@@ -294,7 +401,8 @@ def init_stack(key, cfg: ModelConfig, cross: bool = False):
 def run_stack(stack_params, x, cfg: ModelConfig, *, positions=None,
               causal=True, cache=None, cache_index=None, enc_out=None,
               remat: bool = False, collect_state: bool = False,
-              group_mask=None, attend_cache: bool = False):
+              group_mask=None, attend_cache: bool = False,
+              block_tables=None):
     """Run the whole layer stack.  Returns (x, new_cache, aux_sum).
 
     collect_state: emit per-group state (KV cache / recurrent state) as scan
@@ -310,7 +418,11 @@ def run_stack(stack_params, x, cfg: ModelConfig, *, positions=None,
     attend_cache: chunked-prefill continuation — attention blocks attend
     the tokens already in ``cache`` (scalar ``cache_index`` = their count)
     in addition to the fresh chunk; recurrent blocks continue from the
-    cached state either way."""
+    cached state either way.
+
+    block_tables: (B, max_blocks) int32 logical->physical page map when
+    ``cache`` is pool-backed (``make_paged_cache``); shared across groups
+    (one table per slot addresses every layer's page pool)."""
     if group_mask is not None:
         assert cache is None and not collect_state, (
             "group_mask is for the stateless pipelined forward path")
@@ -325,7 +437,7 @@ def run_stack(stack_params, x, cfg: ModelConfig, *, positions=None,
             x, nst, a = apply_block(
                 gp[f"b{j}"], x, cfg, blk, positions=positions, causal=causal,
                 state=st, cache_index=cache_index, enc_out=enc_out,
-                attend_cache=attend_cache)
+                attend_cache=attend_cache, block_tables=block_tables)
             if nst is not None:
                 new_gc[f"b{j}"] = nst
             aux = aux + a

@@ -59,7 +59,8 @@ def plan_stage_params(stack_params, plan: ExecutionPlan):
 
 def run_stage(cfg: ModelConfig, stage_params, x, *, cache=None,
               cache_index=None, positions=None, collect_state: bool = False,
-              group_mask=None, attend_cache: bool = False):
+              group_mask=None, attend_cache: bool = False,
+              block_tables=None):
     """Execute ONE plan stage's (unpadded) group slice — the per-stage
     entry the serving engine steps instead of the whole-plan
     ``plan_forward``.  Returns (y, new_cache, aux).
@@ -73,11 +74,13 @@ def run_stage(cfg: ModelConfig, stage_params, x, *, cache=None,
       tokens — see ``models.layers.multi_head_attention``).
     group_mask: stateless padded-stage masking (the pipelined forward
       path) — mutually exclusive with ``cache``.
+    block_tables: logical->physical page map when ``cache`` is a paged
+      (pool-backed) slice — the paged decode stage walk.
     """
     return T.run_stack(stage_params, x, cfg, positions=positions,
                        causal=True, cache=cache, cache_index=cache_index,
                        collect_state=collect_state, group_mask=group_mask,
-                       attend_cache=attend_cache)
+                       attend_cache=attend_cache, block_tables=block_tables)
 
 
 def pipeline_spec(stack_params_staged, mesh: Mesh):

@@ -101,16 +101,19 @@ def make_prefill_finish(model) -> Callable:
 
 
 def make_plan_decode_step(model, plan: ExecutionPlan) -> Callable:
-    """decode(params, cache, tokens (B, 1), positions (B,)) ->
-    (next_tokens (B, 1), new_cache) — one batched greedy decode step for
-    ONE replica, walking the plan's stage slices in order: hidden states
-    thread between stages, each stage updates its own group range of the
-    replica's slot cache.  Numerically identical to the monolithic
-    ``serve_step`` (the group scan is merely sliced at stage boundaries).
+    """decode(params, cache, tokens (B, 1), positions (B,),
+    block_tables=None) -> (next_tokens (B, 1), new_cache) — one batched
+    greedy decode step for ONE replica, walking the plan's stage slices in
+    order: hidden states thread between stages, each stage updates its own
+    group range of the replica's slot cache.  Numerically identical to the
+    monolithic ``serve_step`` (the group scan is merely sliced at stage
+    boundaries).  ``block_tables`` addresses the replica's page pool when
+    its cache is paged (``make_paged_cache`` — group axis still leads, so
+    ``slice_cache_groups`` slices paged leaves unchanged).
     """
     cfg = model.cfg
 
-    def step(params, cache, tokens, positions):
+    def step(params, cache, tokens, positions, block_tables=None):
         x = _embed(model, params, {"tokens": tokens})
         x = T.shard_act(x)
         new_slices = []
@@ -120,7 +123,7 @@ def make_plan_decode_step(model, plan: ExecutionPlan) -> Callable:
                                             st.n_groups)
             x, new_sl, _ = run_stage(
                 cfg, stage_params, x, cache=cache_sl, cache_index=positions,
-                collect_state=True)
+                collect_state=True, block_tables=block_tables)
             new_slices.append(new_sl)
         new_cache = T.concat_cache_groups(new_slices)
         logits = _finish(model, params, x)

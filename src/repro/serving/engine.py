@@ -22,10 +22,17 @@ walking the stage slices per decode step.  This realizes the paper's
 hybrid spatial-sequential tradeoff under live traffic: prefill is
 pipelined spatially, decode is replicated for latency.
 
+**Paged mode** (``paged=True``) swaps the dense per-slot KV reservation
+for a fixed block pool with per-slot block tables, content-hash prefix
+sharing (admitted prompts sharing a prefix map the same physical blocks,
+refcounted, copy-on-write on first divergent write) and LRU reuse of
+released blocks — see ``repro.cache`` and ``docs/serving.md``.  SSM state
+and sliding-window rings stay dense; the parity guarantee is unchanged.
+
 Guarantee (tested by ``tests/test_serving_parity.py``): the token stream
 of every request is exactly equal to an isolated one-shot greedy decode
 of that request, regardless of arrival order, prompt-length mix, slot
-count — or ServingPlan.
+count — or ServingPlan, or cache layout (dense / paged).
 
 ``serve_step`` — the function the decode-shape dry-runs lower — is one
 batched decode step over a fixed slot set and keeps accepting a scalar
@@ -48,11 +55,15 @@ from repro.models.model import Model
 def make_serve_step(model: Model):
     """serve_step(params, cache, tokens, cache_index) ->
     (next_tokens, logits, new_cache) — one greedy decode step.
-    ``cache_index``: scalar (lock-step) or (B,) per-slot positions."""
+    ``cache_index``: scalar (lock-step) or (B,) per-slot positions.
+    ``block_tables``: logical->physical page map when ``cache`` is
+    pool-backed (paged engines)."""
 
-    def serve_step(params, cache, tokens, cache_index, positions=None):
+    def serve_step(params, cache, tokens, cache_index, positions=None,
+                   block_tables=None):
         logits, cache = model.decode_step(params, cache, tokens, cache_index,
-                                          positions=positions)
+                                          positions=positions,
+                                          block_tables=block_tables)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return nxt[:, None], logits, cache
 
@@ -76,6 +87,25 @@ def make_prefill_slot_step(model: Model, max_seq: int):
         return nxt, new_cache
 
     return prefill_slot_step
+
+
+def make_prefill_slot_paged_step(model: Model, max_seq: int):
+    """Paged admission: batch-1 prefill against a fresh dense cache, then
+    scatter — dense leaves into batch row ``slot``, prompt K/V pages into
+    the slot's newly allocated physical blocks (``logical``/``phys`` from
+    ``PagedCacheManager.admit``; shared prefix blocks carry an
+    out-of-range ``phys`` and their writes drop — the pool already holds
+    identical content)."""
+    from repro.models import transformer as T
+
+    def prefill_slot_paged(params, full_cache, tokens, slot, length,
+                           logical, phys):
+        logits, part = model.prefill_one(params, tokens, length, max_seq)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, T.scatter_cache_slot_paged(full_cache, part, slot,
+                                               logical, phys)
+
+    return prefill_slot_paged
 
 
 @dataclass
@@ -107,6 +137,18 @@ class ServingEngine:
     replicas).  Plan mode prefills chunks at exact lengths (the chunk
     size itself bounds jit specializations), so ``prefill_bucket`` is
     ignored.
+
+    paged: pool-backed slot caches — global-attention KV lives in a
+    fixed block pool of ``num_blocks`` pages of ``page_size`` tokens,
+    addressed through per-slot block tables with content-hash prefix
+    sharing, copy-on-write, and LRU reuse (``repro.cache``).  A slot then
+    costs ``ceil(live_tokens / page_size)`` blocks instead of a dense
+    ``max_seq`` reservation.  SSM state and sliding-window ring caches
+    stay dense; a model with no global-attention layer auto-disables
+    paging entirely.  ``num_blocks=0`` sizes the pool to the dense
+    reservation (sharing then only *frees* blocks); smaller pools admit
+    more slots than dense could — admission defers while the pool is
+    full.  In plan mode each decode replica owns its own pool partition.
     """
     model: Model
     params: Any
@@ -114,8 +156,12 @@ class ServingEngine:
     max_seq: int
     prefill_bucket: int = 16
     plan: Optional[Any] = None       # repro.plan.ServingPlan
+    paged: bool = False
+    page_size: int = 16
+    num_blocks: int = 0              # 0 = slots * max_seq / page_size
 
     def __post_init__(self):
+        from repro.models import transformer as T
         self.cfg = self.model.cfg
         # the engine's prefill/decode steps execute their hot kernels via
         # the dispatch front door (repro.backend.dispatch) inside the model;
@@ -138,8 +184,25 @@ class ServingEngine:
             (min(self.max_seq, self.cfg.window_size)
              for b in self.cfg.block_pattern if b.mixer == "attn_local"),
             default=0)
+        if self.paged and not T.has_paged_layers(self.cfg):
+            # nothing to page: every mixer keeps dense state (SSM) or a
+            # dense ring (local windows) — run the dense engine wholesale.
+            self.paged = False
+        if self.paged:
+            if self.max_seq % self.page_size:
+                raise ValueError(
+                    f"paged serving needs max_seq ({self.max_seq}) "
+                    f"divisible by page_size ({self.page_size})")
+            self._prefill_slot_paged = jax.jit(
+                make_prefill_slot_paged_step(self.model, self.max_seq))
+            self._copy_pages = jax.jit(T.copy_cache_pages)
+            self._scatter_paged = jax.jit(T.scatter_cache_slot_paged)
         # engine-lifetime state -------------------------------------------
         self._pf = None
+        self._pager = None               # monolithic PagedCacheManager
+        self._pagers = None              # one per plan decode replica
+        self._admit_plans = {}           # slot -> AdmitPlan (mid-prefill)
+        bps = self.max_seq // self.page_size if self.paged else 0
         if self.plan is not None:
             from repro.plan.serving import PlanRuntime, PrefillPipeline
             if self.plan.slots != self.slots:
@@ -150,11 +213,40 @@ class ServingEngine:
             self._rt = PlanRuntime(self.model, self.plan, self.max_seq)
             self._pf = PrefillPipeline(self._rt, self.params)
             # one engine-lifetime cache per decode replica (its slot
-            # partition is the batch axis)
-            self._caches = [self.model.init_cache(n, self.max_seq)
-                            for n in self.plan.replica_slots]
+            # partition is the batch axis); paged replicas each own a
+            # partition of the block pool
+            if self.paged:
+                from repro.cache import PagedCacheManager
+                total = self.num_blocks or self.slots * bps
+                # exact proportional split (sums to the requested total —
+                # an explicit num_blocks is a memory cap, never inflated);
+                # a partition too small for a request raises PoolExhausted
+                # at admission with a sizing message
+                nb = [total * n // self.slots
+                      for n in self.plan.replica_slots]
+                for i in range(total - sum(nb)):
+                    nb[i] += 1
+                self._pagers = [
+                    PagedCacheManager(n, self.max_seq, self.page_size, b)
+                    for n, b in zip(self.plan.replica_slots, nb)]
+                self._caches = [
+                    self.model.init_paged_cache(
+                        n, self.max_seq, page_size=self.page_size,
+                        num_blocks=b)
+                    for n, b in zip(self.plan.replica_slots, nb)]
+            else:
+                self._caches = [self.model.init_cache(n, self.max_seq)
+                                for n in self.plan.replica_slots]
             self._cache = None
             self.prefill_bucket = 1       # chunks run at exact lengths
+        elif self.paged:
+            from repro.cache import PagedCacheManager
+            nb = self.num_blocks or self.slots * bps
+            self._pager = PagedCacheManager(self.slots, self.max_seq,
+                                            self.page_size, nb)
+            self._cache = self.model.init_paged_cache(
+                self.slots, self.max_seq, page_size=self.page_size,
+                num_blocks=nb)
         else:
             self._cache = self.model.init_cache(self.slots, self.max_seq)
         self._pos = np.zeros((self.slots,), np.int32)    # tokens in cache
@@ -205,13 +297,53 @@ class ServingEngine:
 
     def reset_stats(self):
         """Zero the counters (e.g. after a compile-warmup run) so stats()
-        reports only the measured window.  Active slots are untouched."""
+        reports only the measured window.  Active slots (and the blocks
+        they reference) are untouched; pool *counters* reset so reuse and
+        copy-on-write rates cover only the measured window."""
         self.done = []
         self.decode_steps = 0
         self._occupied_step_sum = 0
         self.prefill_batch_sizes = []
         self.prefill_token_counts = []
         self.prefill_chunk_counts = []
+        for pager in self._all_pagers():
+            p = pager.pool
+            p.prefix_queries = p.prefix_hits = 0
+            p.cow_copies = p.evictions = 0
+            p.peak_in_use = p.blocks_in_use
+
+    def _all_pagers(self):
+        if self._pager is not None:
+            return [self._pager]
+        return list(self._pagers) if self._pagers is not None else []
+
+    def cache_stats(self) -> Dict[str, Any]:
+        """Cache memory utilization: live vs reserved tokens, and for
+        paged engines the block-pool picture (occupancy, prefix-reuse hit
+        rate, copy-on-write/eviction counts, and the effective-slots gain
+        — how many dense slot reservations the peak paged footprint
+        actually amounted to)."""
+        live = int(sum(int(self._pos[s]) for s in range(self.slots)
+                       if self._slot_req[s] is not None))
+        reserved = self.slots * self.max_seq
+        out: Dict[str, Any] = {
+            "layout": "paged" if self.paged else "dense",
+            "live_tokens": live,
+            "reserved_tokens": reserved,
+            "utilization": live / reserved if reserved else 0.0,
+        }
+        pagers = self._all_pagers()
+        if pagers:
+            agg = {k: sum(p.stats()[k] for p in pagers)
+                   for k in pagers[0].stats()}
+            agg["page_size"] = self.page_size
+            agg["reuse_hit_rate"] = (
+                agg["prefix_hits"] / max(agg["prefix_queries"], 1))
+            dense_blocks = self.slots * (self.max_seq // self.page_size)
+            agg["effective_slots_gain"] = (
+                dense_blocks / max(agg["peak_blocks_in_use"], 1))
+            out.update(agg)
+        return out
 
     def stats(self) -> Dict[str, Any]:
         """Serving-side latency/throughput numbers for the SSR story."""
@@ -231,6 +363,7 @@ class ServingEngine:
             "throughput_tok_s": gen / wall if wall > 0 else 0.0,
             "ttft_s": [r.t_first - r.t_submit for r in reqs],
             "latency_s": [r.t_done - r.t_submit for r in reqs],
+            "cache": self.cache_stats(),
         }
         if self.plan is not None:
             out["plan_stages"] = self.plan.n_stages
@@ -249,51 +382,89 @@ class ServingEngine:
             pp = n if n > self._ring_min else min(pp, self._ring_min)
         return pp
 
-    def _free_slot(self) -> Optional[int]:
-        for s in range(self.slots):
-            if self._slot_req[s] is None and s not in self._reserved:
-                return s
-        return None
+    def _free_slots(self):
+        return [s for s in range(self.slots)
+                if self._slot_req[s] is None and s not in self._reserved]
+
+    def _pager_of(self, slot: int):
+        """(PagedCacheManager, manager-local slot) for an engine slot —
+        (None, slot) when the engine is dense."""
+        if self._pager is not None:
+            return self._pager, slot
+        if self._pagers is not None:
+            replica, local = self.plan.replica_of_slot(slot)
+            return self._pagers[replica], local
+        return None, slot
 
     def _admit(self):
         while self.queue:
-            slot = self._free_slot()
-            if slot is None:
-                return
-            req = self.queue.pop(0)
-            if self._pf is not None:
-                self._admit_one_plan(req, slot)
-            else:
-                self._admit_one(req, slot)
+            req = self.queue[0]
+            admitted = False
+            # a plan-paged admission can fail on its slot's pool partition
+            # while another replica still has blocks: try every free slot.
+            # Everywhere else the outcome is slot-independent (dense
+            # always admits, the monolithic pool is shared) — first slot.
+            free = self._free_slots()
+            if self._pagers is None:
+                free = free[:1]
+            for slot in free:
+                if (self._admit_one_plan(req, slot) if self._pf is not None
+                        else self._admit_one(req, slot)):
+                    admitted = True
+                    break
+            if not admitted:
+                return    # head-of-line waits for pool blocks (stays FIFO)
+            self.queue.pop(0)
 
     # ---- monolithic admission (no plan) ----------------------------------
-    def _admit_one(self, req: Request, slot: int):
+    def _admit_one(self, req: Request, slot: int) -> bool:
         """Prefill ONE request into ONE free slot: O(prompt) compute, no
-        other slot's cache row or position is touched."""
+        other slot's cache row or position is touched.  Returns False when
+        a paged pool cannot supply the prompt's blocks yet."""
         plen = len(req.prompt)
         toks = np.zeros((1, self._padded_len(plen)), np.int32)
         toks[0, :plen] = req.prompt
-        nxt, self._cache = self._prefill_slot(
-            self.params, self._cache, jnp.asarray(toks),
-            jnp.int32(slot), jnp.int32(plen))
+        if self._pager is not None:
+            ap = self._pager.admit(slot, req.prompt, req.max_new_tokens)
+            if ap is None:
+                return False
+            nxt, self._cache = self._prefill_slot_paged(
+                self.params, self._cache, jnp.asarray(toks),
+                jnp.int32(slot), jnp.int32(plen),
+                jnp.asarray(ap.write_logical), jnp.asarray(ap.write_phys))
+            self._pager.commit(slot)      # pages landed: publish for reuse
+        else:
+            nxt, self._cache = self._prefill_slot(
+                self.params, self._cache, jnp.asarray(toks),
+                jnp.int32(slot), jnp.int32(plen))
         tok = int(np.asarray(nxt)[0])     # host sync: prefill has run
         self.prefill_batch_sizes.append(1)
         self.prefill_token_counts.append(toks.shape[1])
         self.prefill_chunk_counts.append(1)
         self._activate(req, slot, tok)
+        return True
 
     # ---- plan-driven admission (chunked prefill as plan stages) ----------
-    def _admit_one_plan(self, req: Request, slot: int):
+    def _admit_one_plan(self, req: Request, slot: int) -> bool:
         """Reserve the slot and enter the chunked-prefill pipeline: the
         prompt streams through the plan's stage slices one stage-step per
-        tick (``PrefillPipeline``), so admission never stalls decode."""
+        tick (``PrefillPipeline``), so admission never stalls decode.
+        Paged replicas reserve the prompt's pool blocks up front (the
+        scatter at finish must not fail mid-flight)."""
         replica, local = self.plan.replica_of_slot(slot)
+        if self._pagers is not None:
+            ap = self._pagers[replica].admit(local, req.prompt,
+                                             req.max_new_tokens)
+            if ap is None:
+                return False
+            self._admit_plans[slot] = ap
         self._reserved.add(slot)
         self._pf.admit(req, slot, replica, local)
         self.prefill_batch_sizes.append(1)
         self.prefill_token_counts.append(len(req.prompt))
         self.prefill_chunk_counts.append(
             len(self._pf.items[-1].chunks))
+        return True
 
     def _finish_prefill(self, item):
         """Last chunk left the last stage: bank the first token, scatter
@@ -302,9 +473,18 @@ class ServingEngine:
         nxt, _ = self._rt.finish(self.params, item.final_hidden)
         tok = int(np.asarray(nxt)[0])     # host sync: prefill has run
         from repro.models import transformer as T
-        self._caches[item.replica] = T.scatter_cache_slot(
-            self._caches[item.replica], item.part_cache,
-            jnp.int32(item.local_slot))
+        if self._pagers is not None:
+            ap = self._admit_plans.pop(item.slot)
+            pager = self._pagers[item.replica]
+            self._caches[item.replica] = self._scatter_paged(
+                self._caches[item.replica], item.part_cache,
+                jnp.int32(item.local_slot),
+                jnp.asarray(ap.write_logical), jnp.asarray(ap.write_phys))
+            pager.commit(item.local_slot)
+        else:
+            self._caches[item.replica] = T.scatter_cache_slot(
+                self._caches[item.replica], item.part_cache,
+                jnp.int32(item.local_slot))
         self._reserved.discard(item.slot)
         self._activate(item.req, item.slot, tok)
 
@@ -318,15 +498,40 @@ class ServingEngine:
         self._maybe_retire(slot, req.t_first)
 
     # ---- decode ----------------------------------------------------------
+    def _prepare_paged_writes(self, pager, first: int, last: int):
+        """Before a decode step: make every active slot's target block
+        writable — allocate at page boundaries, copy-on-write shared or
+        registered blocks (the device page copy runs here, before the
+        step's write lands)."""
+        for slot in range(first, last):
+            if self._slot_req[slot] is None:
+                continue
+            cow = pager.prepare_decode(slot - first, int(self._pos[slot]))
+            if cow is not None:
+                src, dst = cow
+                if self._pager is not None:
+                    self._cache = self._copy_pages(
+                        self._cache, jnp.int32(src), jnp.int32(dst))
+                else:
+                    r, _ = self.plan.replica_of_slot(slot)
+                    self._caches[r] = self._copy_pages(
+                        self._caches[r], jnp.int32(src), jnp.int32(dst))
+
     def _decode_once(self):
         """One batched decode step at per-slot positions.  Idle slots ride
         along at fixed shape (their rows are garbage until the admission
-        scatter replaces the whole slot).  Plan mode decodes each spatial
-        replica independently (its slot partition, its stage walk)."""
+        scatter replaces the whole slot; paged idle slots carry unmapped
+        block tables, so their page writes drop).  Plan mode decodes each
+        spatial replica independently (its slot partition, its stage
+        walk)."""
         if self._pf is None:
+            bt = None
+            if self._pager is not None:
+                self._prepare_paged_writes(self._pager, 0, self.slots)
+                bt = jnp.asarray(self._pager.table_matrix())
             nxt, _, self._cache = self.serve_step(
                 self.params, self._cache, jnp.asarray(self._cur),
-                jnp.asarray(self._pos))
+                jnp.asarray(self._pos), None, bt)
             arr = np.asarray(nxt)
             now = time.perf_counter()
             self._collect_decoded(arr, 0, self.slots, now)
@@ -340,10 +545,14 @@ class ServingEngine:
                 if not any(self._slot_req[s] is not None
                            for s in range(a, b)):
                     continue
+                bt = None
+                if self._pagers is not None:
+                    self._prepare_paged_writes(self._pagers[r], a, b)
+                    bt = jnp.asarray(self._pagers[r].table_matrix())
                 nxt, self._caches[r] = self._rt.decode_step(
                     self.params, self._caches[r],
                     jnp.asarray(self._cur[a:b]),
-                    jnp.asarray(self._pos[a:b]))
+                    jnp.asarray(self._pos[a:b]), bt)
                 pending.append((nxt, a, b))
             arrs = [(np.asarray(nxt), a, b) for nxt, a, b in pending]
             now = time.perf_counter()
@@ -357,6 +566,12 @@ class ServingEngine:
             req = self._slot_req[slot]
             if req is None:
                 continue
+            pager, local = self._pager_of(slot)
+            if pager is not None:
+                # the step wrote this slot's INPUT token's K/V at _pos:
+                # extend the block chain (registers blocks as they fill)
+                pager.note_written(local, int(self._cur[slot, 0]),
+                                   int(self._pos[slot]))
             self._pos[slot] += 1
             tok = int(arr[slot - a, 0])
             req.out_tokens.append(tok)
@@ -365,7 +580,9 @@ class ServingEngine:
 
     def _maybe_retire(self, slot: int, now: float):
         """Slot-level retirement: EOS, token budget, or a full slot cache.
-        Only this slot frees — every other slot keeps decoding."""
+        Only this slot frees — every other slot keeps decoding.  Paged
+        engines release the slot's blocks; fully-released registered
+        blocks park in the pool's LRU for prefix reuse."""
         req = self._slot_req[slot]
         if (len(req.out_tokens) >= req.max_new_tokens
                 or (req.eos_token is not None
@@ -374,3 +591,6 @@ class ServingEngine:
             req.t_done = now
             self.done.append(req)
             self._slot_req[slot] = None
+            pager, local = self._pager_of(slot)
+            if pager is not None:
+                pager.release_slot(local)

@@ -1,0 +1,345 @@
+"""Paged KV-cache subsystem: block pool / block table / prefix sharing /
+copy-on-write / LRU units, the paged scatter + page-copy device helpers,
+and the scatter/slice edge cases of the dense cache helpers."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache import BlockPool, PagedCacheManager, PoolExhausted
+from repro.cache.paged import _ROOT
+from repro.configs import REGISTRY, reduced
+from repro.models import build_model
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# BlockPool
+# ---------------------------------------------------------------------------
+
+def test_pool_allocate_release_roundtrip():
+    pool = BlockPool(4, page_size=2)
+    blks = [pool.allocate() for _ in range(4)]
+    assert sorted(blks) == [0, 1, 2, 3]
+    assert pool.blocks_in_use == 4 and pool.blocks_free == 0
+    with pytest.raises(PoolExhausted):
+        pool.allocate()
+    for b in blks:
+        pool.release(b)
+    assert pool.blocks_in_use == 0 and pool.blocks_free == 4
+    assert pool.blocks_cached == 0        # unregistered blocks free outright
+
+
+def test_pool_registered_blocks_park_in_lru_and_evict_oldest_first():
+    pool = BlockPool(3, page_size=2)
+    a, b = pool.allocate(), pool.allocate()
+    pool.register(a, _ROOT, [1, 2])
+    pool.register(b, pool.hash_of[a], [3, 4])
+    pool.release(a)
+    pool.release(b)
+    assert pool.blocks_cached == 2 and pool.blocks_free == 1
+    # drain: free block first, then LRU evictions oldest-release first
+    assert pool.allocate() == 2
+    assert pool.allocate() == a           # evicted + unregistered
+    assert pool.evictions == 1
+    assert a not in pool.hash_of
+    assert b in pool.hash_of              # newer entry survives
+
+
+def test_pool_register_collision_keeps_first_writer():
+    pool = BlockPool(2, page_size=2)
+    a, b = pool.allocate(), pool.allocate()
+    assert pool.register(a, _ROOT, [7, 8])
+    assert not pool.register(b, _ROOT, [7, 8])
+    assert pool.registry[pool.hash_of[a]] == a
+    assert b not in pool.hash_of          # stays private and writable
+    assert pool.writable(b) and not pool.writable(a)
+
+
+def test_pool_retain_revives_lru_block():
+    pool = BlockPool(2, page_size=2)
+    a = pool.allocate()
+    pool.register(a, _ROOT, [1, 2])
+    pool.release(a)
+    assert a in pool.lru
+    pool.retain(a)
+    assert a not in pool.lru and pool.refcount[a] == 1
+    pool.allocate()                       # only the other block remains
+    with pytest.raises(PoolExhausted):    # the revived block is not
+        pool.allocate()                   # evictable while referenced
+
+
+# ---------------------------------------------------------------------------
+# PagedCacheManager: admission / sharing / COW / release
+# ---------------------------------------------------------------------------
+
+def _mgr(slots=2, max_seq=16, page=4, blocks=8):
+    return PagedCacheManager(slots, max_seq, page, blocks)
+
+
+def test_manager_rejects_non_dividing_page_size():
+    with pytest.raises(ValueError, match="multiple of"):
+        PagedCacheManager(1, max_seq=10, page_size=4, num_blocks=4)
+
+
+def test_admit_allocates_prompt_blocks_and_commit_registers_full_ones():
+    m = _mgr()
+    ap = m.admit(0, np.arange(1, 7))      # 6 tokens: 1 full + 1 partial
+    assert ap is not None and ap.n_write == 2
+    # the table row maps only at commit (a reserved slot mid-prefill must
+    # ride decode with an unmapped row so stale-position writes drop)
+    assert m.tables[0].n_mapped == 0
+    assert not m.pool.registry            # nothing published before commit
+    m.commit(0)
+    assert m.tables[0].n_mapped == 2
+    assert len(m.pool.registry) == 1      # only the FULL block registers
+    # padded write vectors: pad entries point one past the pool (dropped)
+    assert list(ap.write_logical[:2]) == [0, 1]
+    assert all(p == m.pool.num_blocks for p in ap.write_phys[ap.n_write:])
+
+
+def test_admit_shares_full_prefix_blocks_refcounted():
+    m = _mgr()
+    m.admit(0, np.arange(1, 9))           # 8 tokens = 2 full blocks
+    m.commit(0)
+    ap = m.admit(1, np.arange(1, 9))      # identical prompt
+    m.commit(1)
+    assert ap is not None and ap.n_write == 0
+    assert np.array_equal(m.tables[0].blocks[:2], m.tables[1].blocks[:2])
+    for blk in m.tables[0].blocks[:2]:
+        assert m.pool.refcount[blk] == 2
+    assert ap.shared_blocks == tuple(int(b) for b in m.tables[0].blocks[:2])
+
+
+def test_partial_tail_share_then_copy_on_write():
+    m = _mgr()
+    m.admit(0, np.arange(1, 9))           # blocks [0..3], [4..7] tokens 1..8
+    m.commit(0)
+    ap = m.admit(1, np.arange(1, 7))      # 6 tokens: full match + tail [5,6]
+    m.commit(1)
+    assert ap is not None and ap.n_write == 0
+    tail = int(m.tables[1].blocks[1])
+    assert tail == int(m.tables[0].blocks[1])
+    assert m.pool.refcount[tail] == 2
+    # first decode write at pos 6 diverges from the registered content
+    cow = m.prepare_decode(1, 6)
+    assert cow is not None and cow[0] == tail
+    assert m.tables[1].blocks[1] == cow[1] != tail
+    assert m.pool.refcount[tail] == 1 and m.pool.cow_copies == 1
+
+
+def test_decode_allocates_at_page_boundary_and_registers_filled_blocks():
+    m = _mgr()
+    m.admit(0, np.arange(1, 5))           # exactly one full block
+    m.commit(0)
+    assert m.prepare_decode(0, 4) is None     # new boundary: fresh block
+    assert m.tables[0].n_mapped == 2
+    before = len(m.pool.registry)
+    for pos, tok in zip(range(4, 8), [9, 9, 9, 9]):
+        m.note_written(0, tok, pos)
+    assert len(m.pool.registry) == before + 1  # decode-filled block published
+    assert m.prepare_decode(0, 8) is None      # next boundary allocates again
+    assert m.tables[0].n_mapped == 3
+
+
+def test_admit_defers_when_pool_cannot_supply_blocks():
+    m = _mgr(slots=2, max_seq=16, page=4, blocks=2)
+    assert m.admit(0, np.arange(1, 8)) is not None     # needs both blocks
+    assert m.admit(1, np.arange(20, 26)) is None       # no state change
+    assert m.tables[1].n_mapped == 0
+    m.release_slot(0)
+    assert m.admit(1, np.arange(20, 26)) is not None   # blocks came back
+
+
+def test_never_fits_raises_even_when_prefix_is_shared():
+    """Regression: feasibility must count the retained shared blocks —
+    a shared + fresh footprint exceeding the pool would otherwise defer
+    forever (livelocking the FIFO head) instead of raising."""
+    m = _mgr(slots=2, max_seq=32, page=4, blocks=4)
+    m.admit(0, np.arange(1, 9), max_new_tokens=0)   # 2 full blocks
+    m.commit(0)
+    m.release_slot(0)                               # parked in the LRU
+    with pytest.raises(PoolExhausted, match="num_blocks"):
+        # same prefix: 2 shared + 3 growth = 5 > 4 can never fit
+        m.admit(1, np.arange(1, 9), max_new_tokens=9)
+
+
+def test_deferred_admission_does_not_inflate_reuse_counters():
+    """Regression: a deferred (retried) admission must count its registry
+    lookups once, on the attempt that admits — not once per retry —
+    or the reported reuse_hit_rate drifts toward the deferred request."""
+    m = _mgr(slots=2, max_seq=16, page=4, blocks=4)
+    m.admit(0, np.arange(1, 9), max_new_tokens=4)   # holds 2+1 blocks
+    m.commit(0)
+    for _ in range(5):                              # same prefix, no room
+        assert m.admit(1, np.arange(1, 9), max_new_tokens=8) is None
+    assert m.pool.prefix_queries == 1 and m.pool.prefix_hits == 0
+    m.release_slot(0)
+    assert m.admit(1, np.arange(1, 9), max_new_tokens=8) is not None
+    assert m.pool.prefix_queries == 3 and m.pool.prefix_hits == 2
+
+
+def test_lookup_full_verifies_tokens_not_just_hash():
+    """A registry hit must match stored content, so a chain-hash
+    collision degrades to a miss instead of mapping foreign K/V."""
+    pool = BlockPool(2, page_size=2)
+    a = pool.allocate()
+    pool.register(a, _ROOT, [1, 2])
+    h = pool.hash_of[a]
+    # same hash key, different content: force the collision directly
+    _, hit = pool.lookup_full(_ROOT, [1, 2])
+    assert hit == a
+    pool.tokens_of[a] = np.asarray([9, 9], np.int32)   # simulate collision
+    _, hit = pool.lookup_full(_ROOT, [1, 2])
+    assert hit is None
+    assert h in pool.registry                          # entry kept intact
+
+
+def test_release_parks_registered_blocks_for_reuse():
+    m = _mgr()
+    m.admit(0, np.arange(1, 9))
+    m.commit(0)
+    m.release_slot(0)
+    assert m.pool.blocks_in_use == 0 and m.pool.blocks_cached == 2
+    ap = m.admit(1, np.arange(1, 9))      # retired prefix still reusable
+    assert ap is not None and ap.n_write == 0
+    assert m.pool.prefix_hits >= 2
+
+
+# ---------------------------------------------------------------------------
+# device helpers: paged scatter, page copy
+# ---------------------------------------------------------------------------
+
+def _paged_setup(arch="yi-6b", layers=1, slots=2, max_seq=16, page=4):
+    cfg = reduced(REGISTRY[arch], layers=layers)
+    model = build_model(cfg)
+    nb = slots * (max_seq // page)
+    full = model.init_paged_cache(slots, max_seq, page_size=page,
+                                  num_blocks=nb)
+    part = model.init_cache(1, max_seq)
+    return cfg, model, full, part, nb
+
+
+def test_scatter_cache_slot_paged_writes_only_listed_blocks():
+    cfg, model, full, part, nb = _paged_setup()
+    part = jax.tree.map(lambda x: jnp.ones_like(x), part)
+    logical = jnp.asarray([0, 1, 0, 0], jnp.int32)
+    phys = jnp.asarray([2, 5, nb, nb], jnp.int32)     # two writes, two pads
+    out = T.scatter_cache_slot_paged(full, part, jnp.int32(0), logical, phys)
+    kp = np.asarray(out["b0"]["kv"]["k_pages"])
+    assert kp[:, 2].min() == 1.0 and kp[:, 5].min() == 1.0
+    untouched = [b for b in range(nb) if b not in (2, 5)]
+    assert abs(kp[:, untouched]).max() == 0.0          # pads dropped
+
+
+def test_copy_cache_pages_copies_one_block_everywhere():
+    cfg, model, full, part, nb = _paged_setup()
+    full = jax.tree.map(lambda x: jnp.ones_like(x), full)
+    full["b0"]["kv"]["k_pages"] = full["b0"]["kv"]["k_pages"].at[:, 3].set(7.0)
+    out = T.copy_cache_pages(full, jnp.int32(3), jnp.int32(1))
+    kp = np.asarray(out["b0"]["kv"]["k_pages"])
+    assert kp[:, 1].min() == 7.0 and kp[:, 3].min() == 7.0
+    assert kp[:, 0].max() == 1.0                       # others untouched
+
+
+def test_make_paged_cache_layer_layout_mixed_family():
+    """Global attention pages; local-window rings and SSM state stay dense
+    (per-slot batch axis)."""
+    cfg = reduced(REGISTRY["jamba-1.5-large-398b"], layers=8)
+    model = build_model(cfg)
+    cache = model.init_paged_cache(3, 16, page_size=4, num_blocks=12)
+    mixers = [b.mixer for b in cfg.block_pattern]
+    for j, mix in enumerate(mixers):
+        sub = cache[f"b{j}"]
+        if mix == "attn":
+            assert set(sub["kv"]) == {"k_pages", "v_pages"}
+            assert sub["kv"]["k_pages"].shape[1:3] == (12, 4)
+        else:
+            assert "ssm_state" in sub
+            leaf = jax.tree.leaves(sub["ssm_state"])[0]
+            assert leaf.shape[1] == 3                  # slots axis
+
+
+def test_has_paged_layers_gating():
+    assert T.has_paged_layers(reduced(REGISTRY["yi-6b"], layers=1))
+    assert T.has_paged_layers(reduced(REGISTRY["gemma2-9b"], layers=2))
+    assert not T.has_paged_layers(reduced(REGISTRY["xlstm-125m"], layers=4))
+
+
+# ---------------------------------------------------------------------------
+# dense helper edge cases: scatter_cache_slot / slice_cache_groups
+# ---------------------------------------------------------------------------
+
+def _dense_cache(arch, layers, slots, max_seq=8):
+    cfg = reduced(REGISTRY[arch], layers=layers)
+    model = build_model(cfg)
+    return cfg, model, model.init_cache(slots, max_seq)
+
+
+@pytest.mark.parametrize("slot", [0, 3])
+def test_scatter_cache_slot_first_and_last_slot(slot):
+    cfg, model, full = _dense_cache("yi-6b", 1, slots=4)
+    part = jax.tree.map(lambda x: jnp.ones_like(x),
+                        model.init_cache(1, 8))
+    out = T.scatter_cache_slot(full, part, jnp.int32(slot))
+
+    def check(leaf):
+        a = np.asarray(leaf)
+        assert a[:, slot].min() == 1.0
+        others = [s for s in range(4) if s != slot]
+        assert abs(a[:, others]).max() == 0.0
+    jax.tree.map(check, out)
+
+
+def test_scatter_cache_slot_ssm_state_only_cache():
+    """Pure-SSM caches (no KV leaves at all) ride the same scatter: the
+    recurrent state lives on the same (groups, slots, ...) axes."""
+    cfg, model, full = _dense_cache("xlstm-125m", 4, slots=3)
+    assert not any("kv" in sub for sub in full.values())
+    part = jax.tree.map(lambda x: 2.0 * jnp.ones_like(x),
+                        model.init_cache(1, 8))
+    out = T.scatter_cache_slot(full, part, jnp.int32(2))
+
+    def check(leaf):
+        a = np.asarray(leaf)
+        assert a[:, 2].min() == 2.0 and abs(a[:, :2]).max() == 0.0
+    jax.tree.map(check, out)
+
+
+def test_slice_cache_groups_single_group_plan_and_bounds():
+    """Single-group slices (the finest stage cut), the first/last group,
+    and the merge/concat round-trip."""
+    cfg, model, full = _dense_cache("yi-6b", 4, slots=2)
+    G = cfg.num_groups
+    assert G == 4
+    full = jax.tree.map(
+        lambda x: x + jnp.arange(G, dtype=x.dtype).reshape(
+            (G,) + (1,) * (x.ndim - 1)), full)
+    for g in (0, G - 1):
+        sl = T.slice_cache_groups(full, g, 1)
+        jax.tree.map(lambda l, g=g: np.testing.assert_array_equal(
+            np.asarray(l), g), sl)
+    # round-trip: slice each group, concat, compare to the original
+    slices = [T.slice_cache_groups(full, g, 1) for g in range(G)]
+    back = T.concat_cache_groups(slices)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), full, back)
+    # merge writes back exactly one group range
+    bumped = jax.tree.map(lambda l: l + 100.0, slices[2])
+    merged = T.merge_cache_groups(full, bumped, 2)
+    jax.tree.map(lambda l: np.testing.assert_array_equal(
+        np.asarray(l)[2], 102.0), merged)
+    jax.tree.map(lambda l, o: np.testing.assert_array_equal(
+        np.asarray(l)[[0, 1, 3]], np.asarray(o)[[0, 1, 3]]), merged, full)
+
+
+def test_slice_cache_groups_works_on_paged_leaves():
+    """Paged caches keep the leading group axis, so plan stage slicing is
+    layout-agnostic (the serving plan runtime relies on this)."""
+    cfg = reduced(REGISTRY["yi-6b"], layers=4)
+    model = build_model(cfg)
+    cache = model.init_paged_cache(2, 16, page_size=4, num_blocks=8)
+    sl = T.slice_cache_groups(cache, 1, 2)
+    assert sl["b0"]["kv"]["k_pages"].shape[0] == 2
+    assert sl["b0"]["kv"]["k_pages"].shape[1:3] == (8, 4)

@@ -95,8 +95,15 @@ def test_kernel_path_env_override(monkeypatch):
     for path in ("ref", "interpret", "pallas"):
         monkeypatch.setenv("REPRO_KERNELS", path)
         assert dispatch.kernel_path() == path
+
+
+def test_kernel_path_rejects_unknown_value_listing_choices(monkeypatch):
+    """A typo'd REPRO_KERNELS must fail loudly (silently falling back to
+    the jnp oracle would fake a kernel benchmark), naming the choices."""
     monkeypatch.setenv("REPRO_KERNELS", "garbage")
-    assert dispatch.kernel_path() == "ref"
+    with pytest.raises(ValueError, match=r"garbage.*auto.*pallas.*"
+                                         r"interpret.*ref"):
+        dispatch.kernel_path()
 
 
 @pytest.mark.parametrize("path", ["ref", "interpret"])
@@ -128,6 +135,28 @@ def test_dispatch_flash_attention_ref_parity(path, force_path):
         jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
         pos, pos, jnp.ones((s,), jnp.int32), causal=True)
     ref = jnp.swapaxes(ref, 1, 2).reshape(b, s, h * d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("path", ["ref", "interpret"])
+def test_dispatch_paged_attention_ref_parity(path, force_path):
+    """The paged decode kernel (block-table gather via scalar prefetch)
+    matches the jnp oracle on CPU — including unmapped table entries and
+    short lengths."""
+    force_path(path)
+    r = np.random.default_rng(4)
+    b, h, hk, d = 3, 4, 2, 128
+    n, page, nb = 8, 16, 4
+    q = jnp.asarray(r.standard_normal((b, 1, h, d)), jnp.float32)
+    kp = jnp.asarray(r.standard_normal((n, page, hk, d)), jnp.float32)
+    vp = jnp.asarray(r.standard_normal((n, page, hk, d)), jnp.float32)
+    bt = jnp.asarray([[3, 1, n, n], [5, 2, 7, n], [0, n, n, n]], jnp.int32)
+    lens = jnp.asarray([20, 37, 3], jnp.int32)
+    out = dispatch.dispatch_paged_attention(q, kp, vp, bt, lens)
+    qg = q[:, 0].reshape(b, hk, h // hk, d)
+    ref = R.paged_attention_ref(qg, kp, vp, jnp.clip(bt, 0, n - 1),
+                                lens).reshape(b, 1, h * d)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-5, rtol=2e-5)
 

@@ -1,6 +1,7 @@
 """Serving engine: request completion, continuous batching, greedy decode
 consistency."""
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +73,38 @@ def test_engine_stats_ordering_and_occupancy():
         assert 0 <= r.slot < eng.slots
     assert len(st["ttft_s"]) == len(st["latency_s"]) == 5
     assert all(t >= 0 for t in st["ttft_s"])
+
+
+def test_stats_report_cache_memory_utilization():
+    """stats()["cache"] reports live vs reserved tokens for the dense
+    layout, plus block-pool occupancy and prefix-reuse figures when
+    paging is on."""
+    cfg, model, params = setup()
+    eng = ServingEngine(model, params, slots=2, max_seq=48)
+    eng.submit(Request(0, np.arange(1, 6, dtype=np.int32), 4))
+    eng.tick()                           # admit: 5 prompt tokens live
+    st = eng.stats()["cache"]
+    assert st["layout"] == "dense"
+    assert st["reserved_tokens"] == 2 * 48
+    assert st["live_tokens"] == 6        # prompt + the first decode write
+    assert st["utilization"] == pytest.approx(6 / 96)
+    eng.run()
+    assert eng.stats()["cache"]["live_tokens"] == 0    # all retired
+
+    paged = ServingEngine(model, params, slots=2, max_seq=48, paged=True,
+                          page_size=4)
+    p = np.arange(1, 9, dtype=np.int32)
+    paged.submit(Request(0, p, 4))
+    paged.submit(Request(1, p.copy(), 4))    # identical prompt: full reuse
+    paged.run()
+    st = paged.stats()["cache"]
+    assert st["layout"] == "paged"
+    assert st["page_size"] == 4 and st["num_blocks"] == 2 * (48 // 4)
+    assert st["blocks_in_use"] == 0          # retired -> parked or freed
+    assert st["prefix_hits"] >= 2            # both full blocks reused
+    assert 0.0 < st["reuse_hit_rate"] <= 1.0
+    assert st["peak_blocks_in_use"] >= 2
+    assert st["effective_slots_gain"] >= 1.0
 
 
 def test_admission_does_not_change_active_slots_next_token():

@@ -48,8 +48,8 @@ STAGGERED = [  # (prompt, max_new, submit_after_tick)
 ]
 
 
-def run_staggered(model, params, slots, max_seq=64, plan=STAGGERED):
-    eng = ServingEngine(model, params, slots=slots, max_seq=max_seq)
+def run_staggered(model, params, slots, max_seq=64, plan=STAGGERED, **kw):
+    eng = ServingEngine(model, params, slots=slots, max_seq=max_seq, **kw)
     pending = sorted(enumerate(plan), key=lambda x: x[1][2])
     tick = 0
     busy = True
@@ -167,11 +167,11 @@ def test_parity_across_families(arch):
 # ---------------------------------------------------------------------------
 
 def run_plan_staggered(model, params, plan, *, slots, chunk, max_seq=64,
-                       sched=STAGGERED):
+                       sched=STAGGERED, **kw):
     from repro.plan import lower_serving
     splan = lower_serving(plan, slots=slots, chunk=chunk)
     eng = ServingEngine(model, params, slots=slots, max_seq=max_seq,
-                        plan=splan)
+                        plan=splan, **kw)
     pending = sorted(enumerate(sched), key=lambda x: x[1][2])
     tick = 0
     busy = True
@@ -291,6 +291,221 @@ def test_chunked_prefill_never_stalls_decode():
     done = {r.uid: r.out_tokens for r in eng.run()}
     assert done[0] == g0 and done[1] == g1
     assert eng.prefill_chunk_counts == [1, 4]
+
+
+# ---------------------------------------------------------------------------
+# paged engines (block-pool slot caches + prefix sharing) — same gold
+# standard, same guarantee, both cache layouts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("slots", [1, 2, 3])
+def test_paged_staggered_parity(slots):
+    """The paged tentpole guarantee: staggered Poisson-style arrivals
+    through a block-pool cache (page 4 — every prompt spans blocks) are
+    token-identical to isolated one-shot decode at every slot count."""
+    cfg, model, params = build()
+    golds = [gold_decode(model, params, p, mn, 64) for p, mn, _ in STAGGERED]
+    eng = run_staggered(model, params, slots, paged=True, page_size=4)
+    assert eng.paged and eng.cache_stats()["layout"] == "paged"
+    got = {r.uid: r.out_tokens for r in eng.done}
+    assert len(got) == len(STAGGERED)
+    for uid, gold in enumerate(golds):
+        assert got[uid] == gold, f"slots={slots} uid={uid}"
+
+
+@pytest.mark.parametrize("arch,layers", [("gemma2-9b", 2),
+                                         ("jamba-1.5-large-398b", 8)])
+def test_paged_parity_mixed_layouts(arch, layers):
+    """Families where paging applies per layer: gemma2 pages its global
+    layers while the local-window rings stay dense; jamba pages its one
+    attn layer while mamba state stays dense — parity holds throughout."""
+    cfg, model, params = build(arch, layers=layers, key=1)
+    golds = [gold_decode(model, params, p, mn, 64) for p, mn, _ in STAGGERED]
+    eng = run_staggered(model, params, slots=2, paged=True, page_size=4)
+    assert eng.paged
+    got = {r.uid: r.out_tokens for r in eng.done}
+    for uid, gold in enumerate(golds):
+        assert got[uid] == gold, f"{arch} uid={uid}"
+
+
+def test_paged_auto_disables_without_global_attention():
+    """An SSM-only model has no pageable KV: the engine falls back to the
+    dense layout wholesale (and still holds parity)."""
+    cfg, model, params = build("xlstm-125m", layers=4, key=1)
+    golds = [gold_decode(model, params, p, mn, 64) for p, mn, _ in STAGGERED]
+    eng = run_staggered(model, params, slots=2, paged=True, page_size=4)
+    assert not eng.paged and eng.cache_stats()["layout"] == "dense"
+    got = {r.uid: r.out_tokens for r in eng.done}
+    for uid, gold in enumerate(golds):
+        assert got[uid] == gold
+
+
+def test_paged_prefix_sharing_refcount_then_copy_on_write():
+    """The acceptance scenario: two prompts sharing a >= 1-block prefix
+    provably share physical blocks (refcount observed) — including a
+    partial-tail share — until the second stream's first divergent decode
+    write copy-on-writes; both streams stay gold-identical."""
+    cfg, model, params = build()
+    p1 = np.arange(1, 9, dtype=np.int32)       # 2 full blocks at page 4
+    p2 = p1[:6].copy()                         # full block + partial tail
+    g1 = gold_decode(model, params, p1, 5, 32)
+    g2 = gold_decode(model, params, p2, 5, 32)
+    eng = ServingEngine(model, params, slots=2, max_seq=32, paged=True,
+                        page_size=4)
+    pool = eng._pager.pool
+    eng.submit(Request(0, p1, 5))
+    eng.tick()                                 # admit + first decode of p1
+    eng.submit(Request(1, p2, 5))
+    eng._admit()                               # map p2 before any decode
+    t0 = eng._pager.tables[0].blocks.copy()
+    t1 = eng._pager.tables[1].blocks.copy()
+    assert t0[0] == t1[0] and pool.refcount[t0[0]] == 2   # full block shared
+    assert t0[1] == t1[1] and pool.refcount[t0[1]] == 2   # tail shared
+    assert pool.cow_copies == 0
+    eng.tick()                   # p2's first decode write diverges: COW
+    assert pool.cow_copies == 1
+    assert eng._pager.tables[1].blocks[1] != t0[1]
+    assert pool.refcount[t0[1]] == 1           # back to p1's exclusive ref
+    assert pool.refcount[t0[0]] == 2           # full block still shared
+    done = {r.uid: r.out_tokens for r in eng.run()}
+    assert done[0] == g1 and done[1] == g2
+    st = eng.cache_stats()
+    assert st["prefix_hits"] >= 2 and st["cow_copies"] == 1
+
+
+def test_paged_plan_reserved_slot_cannot_corrupt_shared_blocks():
+    """Regression: in plan mode a slot is mapped at admission but only
+    activated ticks later (chunked prefill) — meanwhile it rides the
+    replica's decode batch with a stale position.  Its block-table row
+    must stay unmapped until commit, or the stale write would corrupt a
+    shared registered block that the *other* stream is attending."""
+    from repro.plan import lower_serving, uniform_plan
+    cfg, model, params = build(layers=4)
+    pa = np.arange(1, 9, dtype=np.int32)            # 2 full blocks at page 4
+    pb = np.concatenate([pa, [30, 31]]).astype(np.int32)  # shares both
+    ga = gold_decode(model, params, pa, 12, 64)
+    gb = gold_decode(model, params, pb, 6, 64)
+    plan = uniform_plan(cfg.num_groups, 2, n_microbatches=1)
+    eng = ServingEngine(model, params, slots=2, max_seq=64,
+                        plan=lower_serving(plan, slots=2, chunk=4),
+                        paged=True, page_size=4)
+    eng.submit(Request(0, pa, 12))
+    while eng._slot_req[0] is None:                 # A through prefill
+        eng.tick()
+    eng.submit(Request(1, pb, 6))
+    pool = eng._pagers[0].pool
+    saw_shared_mid_prefill = False
+    while 1 in eng._reserved or eng._slot_req[1] is None:
+        eng.tick()                                  # A decodes every tick
+        if 1 in eng._reserved:
+            # B's prefix blocks are refcounted already, but its table
+            # row must stay unmapped while it rides A's decode batch
+            assert eng._pagers[0].tables[1].n_mapped == 0
+            if pool.refcount[eng._pagers[0].tables[0].blocks[0]] == 2:
+                saw_shared_mid_prefill = True
+    assert saw_shared_mid_prefill                   # sharing really engaged
+    done = {r.uid: r.out_tokens for r in eng.run()}
+    assert done[0] == ga and done[1] == gb
+
+
+def test_paged_decode_growth_reserved_no_mid_stream_exhaustion():
+    """Regression: admission reserves worst-case decode growth, so an
+    undersized pool defers admissions instead of raising PoolExhausted
+    mid-stream when slots grow past their prompt blocks."""
+    cfg, model, params = build()
+    prompts = [np.arange(1, 9, dtype=np.int32),
+               np.arange(20, 28, dtype=np.int32)]
+    golds = [gold_decode(model, params, p, 9, 32) for p in prompts]
+    # each request needs ceil((8+9)/4) = 5 blocks; 6 < 10 forces serial
+    eng = ServingEngine(model, params, slots=2, max_seq=32, paged=True,
+                        page_size=4, num_blocks=6)
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, 9))
+    done = {r.uid: r.out_tokens for r in eng.run()}
+    for uid, gold in enumerate(golds):
+        assert done[uid] == gold, f"uid={uid}"
+    assert eng.cache_stats()["peak_blocks_in_use"] <= 6
+
+
+def test_paged_request_that_can_never_fit_raises_with_sizing_message():
+    """A request whose prompt + budget exceeds the whole pool must fail
+    loudly at admission (deferral would deadlock the queue)."""
+    from repro.cache import PoolExhausted
+    cfg, model, params = build()
+    eng = ServingEngine(model, params, slots=2, max_seq=32, paged=True,
+                        page_size=4, num_blocks=4)
+    eng.submit(Request(0, np.arange(1, 9, dtype=np.int32), 9))  # 5 blocks
+    with pytest.raises(PoolExhausted, match="num_blocks"):
+        eng.run()
+
+
+def test_paged_small_pool_admission_defers_not_breaks():
+    """A pool smaller than the dense reservation forces admissions to
+    wait for blocks; every stream still retires gold-identical (deferral
+    is scheduling, and scheduling cannot change tokens)."""
+    cfg, model, params = build()
+    prompts = [np.arange(1 + 3 * i, 8 + 3 * i, dtype=np.int32)
+               for i in range(4)]
+    golds = [gold_decode(model, params, p, 4, 32) for p in prompts]
+    eng = ServingEngine(model, params, slots=2, max_seq=32, paged=True,
+                        page_size=4, num_blocks=6)    # dense would need 16
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, 4))
+    done = {r.uid: r.out_tokens for r in eng.run()}
+    assert len(done) == 4
+    for uid, gold in enumerate(golds):
+        assert done[uid] == gold, f"uid={uid}"
+    assert eng.cache_stats()["peak_blocks_in_use"] <= 6
+
+
+@pytest.mark.parametrize("slots", [2, 3])
+def test_paged_plan_replica_parity(slots):
+    """Paged caches compose with plan-driven serving: each decode replica
+    owns a partition of the block pool; chunked prefill + stage-walk
+    decode over paged replica caches stay token-identical to one-shot
+    decode."""
+    from repro.plan import uniform_plan
+    cfg, model, params = build(layers=4)
+    golds = [gold_decode(model, params, p, mn, 64) for p, mn, _ in STAGGERED]
+    plan = uniform_plan(cfg.num_groups, 2, n_microbatches=2)
+    eng = run_plan_staggered(model, params, plan, slots=slots, chunk=4,
+                             paged=True, page_size=4)
+    assert eng.paged and len(eng._pagers) == 2
+    got = {r.uid: r.out_tokens for r in eng.done}
+    assert len(got) == len(STAGGERED)
+    for uid, gold in enumerate(golds):
+        assert got[uid] == gold, f"slots={slots} uid={uid}"
+
+
+def test_paged_plan_uneven_searched_plan_parity():
+    """Paged + an uneven EA-searched ServingPlan (stage slices [3, 1])."""
+    cfg, model, params, plan = _uneven_searched_plan()
+    assert not plan.is_uniform
+    golds = [gold_decode(model, params, p, mn, 64) for p, mn, _ in STAGGERED]
+    eng = run_plan_staggered(model, params, plan, slots=3, chunk=4,
+                             paged=True, page_size=4)
+    got = {r.uid: r.out_tokens for r in eng.done}
+    for uid, gold in enumerate(golds):
+        assert got[uid] == gold, f"uid={uid}"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,layers", [("jamba-1.5-large-398b", 16),
+                                         ("xlstm-125m", 8),
+                                         ("gemma2-9b", 4)])
+def test_paged_plan_parity_across_families(arch, layers):
+    """Paged plan-replica engines across the hybrid / pure-SSM /
+    local-window families (paging auto-disables per layer or wholesale as
+    the pattern dictates)."""
+    from repro.plan import uniform_plan
+    cfg, model, params = build(arch, layers=layers, key=1)
+    golds = [gold_decode(model, params, p, mn, 64) for p, mn, _ in STAGGERED]
+    plan = uniform_plan(cfg.num_groups, 2, n_microbatches=2)
+    eng = run_plan_staggered(model, params, plan, slots=2, chunk=4,
+                             paged=True, page_size=4)
+    got = {r.uid: r.out_tokens for r in eng.done}
+    for uid, gold in enumerate(golds):
+        assert got[uid] == gold, f"{arch} uid={uid}"
 
 
 @pytest.mark.slow
