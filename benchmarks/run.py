@@ -123,7 +123,12 @@ def smoke(json_path: str = "", seed: int = 0) -> int:
 
 def smoke_sections(sections, json_path: str = "", seed: int = 0) -> int:
     """Smoke-sized section runs (``run.py <section> --smoke``): print the
-    rows and optionally archive them as JSON (CI perf artifact)."""
+    rows and optionally archive them as JSON (CI perf artifact).  The
+    ``serving`` section additionally writes ``BENCH_serving.json`` (next
+    to ``json_path``, else the cwd): the headline serving numbers —
+    throughput, cold vs warm TTFT, prefix-hit rate, block savings — that
+    CI archives and gates on (warm TTFT must beat cold)."""
+    from benchmarks.serving import serving_bench_summary
     from benchmarks.serving import smoke_rows as serving_smoke
 
     known = {"serving": serving_smoke}
@@ -146,6 +151,18 @@ def smoke_sections(sections, json_path: str = "", seed: int = 0) -> int:
         except Exception as e:      # pragma: no cover - keep harness alive
             print(f"{key}/ERROR,0,{type(e).__name__}: {e}")
             summary["sections"][key] = {"error": f"{type(e).__name__}: {e}"}
+            rc = 1
+    if "serving" in sections:
+        bench_path = os.path.join(
+            os.path.dirname(os.path.abspath(json_path)) if json_path
+            else os.getcwd(), "BENCH_serving.json")
+        try:
+            bench = serving_bench_summary(seed=seed)
+            with open(bench_path, "w") as f:
+                json.dump(bench, f, indent=2)
+            print(f"[smoke] wrote {bench_path}")
+        except Exception as e:      # pragma: no cover - keep harness alive
+            print(f"serving/BENCH_ERROR,0,{type(e).__name__}: {e}")
             rc = 1
     if json_path:
         os.makedirs(os.path.dirname(os.path.abspath(json_path)),

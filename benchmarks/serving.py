@@ -23,6 +23,13 @@ asserted between the layouts, and the rows report block-pool occupancy,
 prefix-reuse hit rate, copy-on-write counts, and the effective-slots
 gain (``paged_design_points``, also ``source="served"``).
 
+``prefix_reuse_sweep`` measures prefix COMPUTE reuse: requests sharing a
+long warm prefix admit suffix-only (the registry supplies the prefix
+K/V), so their TTFT drops below cold same-length requests — the sweep
+reports cold vs warm TTFT medians, prefill hit rate, and block/token
+savings.  ``serving_bench_summary`` packages it (plus throughput) as the
+``BENCH_serving.json`` payload the smoke run archives.
+
     PYTHONPATH=src python benchmarks/run.py serving
     python benchmarks/run.py serving --smoke   # small plan + paged-vs-dense
 """
@@ -219,6 +226,99 @@ def _paged_rows(pstats: Sequence[dict]) -> List[Tuple[str, float, str]]:
     return out
 
 
+def prefix_reuse_sweep(arch: str = "yi-6b", *, slots: int = 2,
+                       requests: int = 6, prefix_len: int = 120,
+                       tail_len: int = 4, new_tokens: int = 4,
+                       max_seq: int = 160, page_size: int = 4,
+                       seed: int = 0) -> dict:
+    """Cold vs warm TTFT under shared-prefix traffic on one paged engine.
+
+    The warm leg admits prompts sharing one registered ``prefix_len``
+    prefix, so each prefills only its ``tail_len`` suffix; the cold leg
+    admits prompts with DISTINCT prefixes (same length, so both legs
+    prefill at the same padded shape family).  Requests run one at a
+    time (clean TTFT); both prefill shapes are compiled during warmup,
+    so the medians compare pure suffix-vs-full prefill work.  The warm
+    leg runs FIRST — the cold leg's parked blocks eventually crowd the
+    shared prefix out of the LRU, which must not poison the warm
+    measurements."""
+    import jax
+
+    from repro.configs import REGISTRY, reduced
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = reduced(REGISTRY[arch], layers=1)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(seed)
+    eng = ServingEngine(model, params, slots=slots, max_seq=max_seq,
+                        paged=True, page_size=page_size, prefill_bucket=4)
+
+    shared = rng.integers(1, cfg.vocab_size, size=prefix_len)
+
+    def prompt(warm: bool):
+        head = shared if warm else rng.integers(1, cfg.vocab_size,
+                                                size=prefix_len)
+        tail = rng.integers(1, cfg.vocab_size, size=tail_len)
+        return np.concatenate([head, tail]).astype(np.int32)
+
+    def one(p, uid: int) -> float:
+        eng.submit(Request(uid, p, new_tokens))
+        eng.run()
+        r = eng.done[-1]
+        return r.t_first - r.t_submit
+
+    # warmup: compile the full-prompt shape AND the suffix-only shape
+    # outside the measured window; the first warm prompt also registers
+    # the shared prefix (it is itself a cold admission).
+    one(prompt(False), -3)
+    one(prompt(True), -2)                     # registers the shared prefix
+    one(prompt(True), -1)                     # compiles the suffix shape
+    eng.reset_stats()                         # registry survives the reset
+
+    warm = [one(prompt(True), 200 + i) for i in range(requests)]
+    cold = [one(prompt(False), 100 + i) for i in range(requests)]
+    st = eng.stats()
+    c = st["cache"]
+    total_tokens = c["reused_prefill_tokens"] + c["suffix_prefill_tokens"]
+    return {
+        "arch": arch, "page_size": page_size, "prefix_len": prefix_len,
+        "tail_len": tail_len, "requests_per_leg": requests,
+        "throughput_tok_s": st["throughput_tok_s"],
+        "ttft_cold_p50_s": float(np.median(cold)),
+        "ttft_warm_p50_s": float(np.median(warm)),
+        "ttft_speedup": float(np.median(cold)
+                              / max(float(np.median(warm)), 1e-9)),
+        "prefill_hit_rate": c["prefill_hit_rate"],
+        "reused_prefill_tokens": c["reused_prefill_tokens"],
+        "suffix_prefill_tokens": c["suffix_prefill_tokens"],
+        "token_savings_frac": (c["reused_prefill_tokens"]
+                               / max(total_tokens, 1)),
+        "blocks_saved": c["prefix_hits"],     # registry blocks not written
+        "phase_time_s": st["phase_time_s"],
+    }
+
+
+def _prefix_rows(s: dict) -> List[Tuple[str, float, str]]:
+    name = (f"serving/prefix-reuse/{s['arch']}/"
+            f"prefix{s['prefix_len']}-p{s['page_size']}")
+    return [(name, s["ttft_warm_p50_s"] * 1e6,
+             f"ttft_cold_ms={s['ttft_cold_p50_s']*1e3:.1f} "
+             f"ttft_warm_ms={s['ttft_warm_p50_s']*1e3:.1f} "
+             f"speedup={s['ttft_speedup']:.2f}x "
+             f"hit_rate={s['prefill_hit_rate']:.2f} "
+             f"tok_saved={s['token_savings_frac']:.2f} "
+             f"blocks_saved={s['blocks_saved']}")]
+
+
+def serving_bench_summary(seed: int = 0) -> dict:
+    """The ``BENCH_serving.json`` payload: the headline serving numbers —
+    throughput, cold vs warm TTFT, prefix-hit rate, block/token savings —
+    from the shared-prefix compute-reuse sweep."""
+    return prefix_reuse_sweep(seed=seed)
+
+
 def _serving_plans(cfg, slots: int, chunk: int, seq: int, batch: int):
     """The strategy triple as ServingPlans: sequential (1 stage, 1 decode
     replica), spatial (one stage per group, max replicas = all slots), and
@@ -333,16 +433,20 @@ def rows(seed: int = 0) -> List[Tuple[str, float, str]]:
                     f"pareto={'Y' if on_front else 'n'}"))
     out += _plan_rows(plan_serving_sweep(seed=seed))
     out += _paged_rows(paged_serving_sweep(seed=seed))
+    out += _prefix_rows(prefix_reuse_sweep(seed=seed))
     return out
 
 
 def smoke_rows(seed: int = 0) -> List[Tuple[str, float, str]]:
-    """`benchmarks/run.py serving --smoke`: the plan-driven strategy sweep
-    plus a paged-vs-dense comparison (token parity asserted, block savings
-    reported) at smoke size on CPU jax — the per-commit perf artifact's
-    serving rows (serving_smoke.json)."""
+    """`benchmarks/run.py serving --smoke`: the plan-driven strategy sweep,
+    a paged-vs-dense comparison (token parity asserted, block savings
+    reported), and the shared-prefix compute-reuse TTFT sweep at smoke
+    size on CPU jax — the per-commit perf artifact's serving rows
+    (serving_smoke.json; the reuse sweep also lands in
+    BENCH_serving.json)."""
     rows = _plan_rows(plan_serving_sweep(
         requests=6, new_tokens=4, slots=2, chunk=4, seed=seed))
     rows += _paged_rows(paged_serving_sweep(
         requests=6, new_tokens=4, slots=2, page_sizes=(4,), seed=seed))
+    rows += _prefix_rows(prefix_reuse_sweep(requests=4, seed=seed))
     return rows

@@ -117,6 +117,44 @@ def dispatch_paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     return out.reshape(b, s, h * d)
 
 
+def dispatch_paged_prefill_attention(q, k_pages, v_pages, block_tables,
+                                     offset, *, softcap=0.0):
+    """Suffix/chunked prefill attention through per-slot block tables:
+    the fresh chunk's K/V are already written into the pool, and every
+    query attends the full mapped prefix (shared + fresh) under a causal
+    mask.  Layout adapter: q arrives in model layout (B, S, H, D) and
+    leaves as (B, S, H*D); pages are (N, P, Hkv, D); block_tables (B, NB)
+    int32 may carry out-of-range entries for unmapped logical blocks
+    (clipped here, causally masked); offset () int32 is the position of
+    the first fresh query.
+
+    The pallas path additionally requires MXU-friendly tiling (head_dim
+    % 128, page % 8, G*S % 8); off-tile shapes fall back to the jnp
+    reference, which the kernel sweep tests pin the kernel against."""
+    from repro.kernels import ref as R
+    b, s, h, d = q.shape
+    hk = k_pages.shape[2]
+    g = h // hk
+    qg = jnp.swapaxes(q, 1, 2).reshape(b, hk, g, s, d)
+    n = k_pages.shape[0]
+    bt = jnp.clip(block_tables, 0, n - 1)
+    path = kernel_path()
+    if path == "ref" or (path == "pallas"
+                         and not (d % 128 == 0
+                                  and k_pages.shape[1] % 8 == 0
+                                  and (g * s) % 8 == 0)):
+        out = R.paged_prefill_attention_ref(qg, k_pages, v_pages, bt,
+                                            offset, softcap=softcap)
+    else:
+        from repro.kernels.paged_attention import (
+            paged_prefill_attention_grouped)
+        out = paged_prefill_attention_grouped(
+            qg, k_pages, v_pages, bt, offset, softcap=softcap,
+            interpret=(path == "interpret"))
+    return jnp.swapaxes(out.reshape(b, hk * g, s, d), 1, 2).reshape(
+        b, s, h * d)
+
+
 # ---------------------------------------------------------------------------
 # fused matmul
 # ---------------------------------------------------------------------------
@@ -170,5 +208,6 @@ def dispatch_linear_scan(a, b, h0=None):
 __all__ = [
     "kernel_path", "use_flash", "use_scan_kernel",
     "dispatch_flash_attention", "dispatch_paged_attention",
+    "dispatch_paged_prefill_attention",
     "dispatch_matmul", "dispatch_layernorm", "dispatch_linear_scan",
 ]

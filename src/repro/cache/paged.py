@@ -32,10 +32,20 @@ Sharing model (vLLM-style, full-block granularity plus a partial tail):
     so a future prompt with the same prefix can re-admit it; the LRU is
     evicted (unregister + free) only when the pool runs dry.
 
+Beyond memory sharing, the LRU-parked registry is a cross-request
+**compute cache**: an admission whose prefix blocks hit the registry can
+skip their prefill entirely (``reuse_compute=True`` reports
+``AdmitPlan.reused_tokens`` — the engine prefills only the unmatched
+suffix, attending the shared pages through the block table).  The
+``prefill_compute_hits`` / ``reused_prefill_tokens`` counters track how
+much prefill work the registry saved.
+
 Everything here is plain numpy/python (no jax): the manager runs in the
-engine's host loop and only *describes* device work (which pages to
-write, which to copy) that ``transformer.scatter_cache_slot_paged`` /
-``copy_cache_pages`` execute.
+engine's host loop and only *describes* device work (which pages the
+prefill may write — ``AdmitPlan.write_table`` — and which to copy on
+divergence, executed by ``transformer.copy_cache_pages``).  Prompt K/V
+streams straight into the pool as the prefill runs; there is no dense
+staging buffer and no commit-time copy.
 """
 from __future__ import annotations
 
@@ -81,6 +91,11 @@ class BlockPool:
         self.cow_copies = 0
         self.evictions = 0
         self.peak_in_use = 0
+        # prefill compute-cache accounting (suffix-only prefill) -----------
+        self.prefill_admissions = 0
+        self.prefill_compute_hits = 0     # admissions that skipped compute
+        self.reused_prefill_tokens = 0    # prompt tokens NOT re-prefilled
+        self.suffix_prefill_tokens = 0    # prompt tokens actually computed
 
     # -- capacity ----------------------------------------------------------
     @property
@@ -219,13 +234,25 @@ class BlockTable:
 @dataclass
 class AdmitPlan:
     """Device work an admission implies: which logical prompt blocks the
-    scatter must write (the rest are shared and already populated)."""
+    prefill may write (the rest are shared and already populated), the
+    gather table it attends through, and how much prefill compute the
+    registry saved."""
     slot: int
     shared_blocks: Tuple[int, ...]        # physical ids mapped without write
     write_logical: np.ndarray             # (max_blocks,) padded logical idx
     write_phys: np.ndarray                # (max_blocks,) padded; pad = pool
     #                                       size (dropped by the scatter)
     n_write: int
+    block_table: np.ndarray               # (max_blocks,) gather table over
+    #                                       ALL mapped blocks; sentinel =
+    #                                       pool size for unmapped entries
+    write_table: np.ndarray               # (max_blocks,) fresh block phys id
+    #                                       at its logical position; shared /
+    #                                       unmapped entries carry the
+    #                                       sentinel so prefill writes drop
+    reused_tokens: int = 0                # prefix tokens whose prefill is
+    #                                       skipped (warm compute-cache hit);
+    #                                       the suffix starts here
 
 
 class PagedCacheManager:
@@ -241,7 +268,7 @@ class PagedCacheManager:
     """
 
     def __init__(self, slots: int, max_seq: int, page_size: int,
-                 num_blocks: int):
+                 num_blocks: int, *, prefix_cache: bool = True):
         if max_seq % page_size:
             raise ValueError(
                 f"max_seq={max_seq} must be a multiple of "
@@ -250,11 +277,14 @@ class PagedCacheManager:
         self.max_seq = max_seq
         self.page_size = page_size
         self.blocks_per_slot = max_seq // page_size
+        self.prefix_cache = prefix_cache  # False: no registry lookups, no
+        #                                   registration, no LRU parking
         self.pool = BlockPool(num_blocks, page_size)
         self.tables = [BlockTable(np.full((self.blocks_per_slot,), -1,
                                           np.int32))
                        for _ in range(slots)]
-        self._pending: Dict[int, List[Tuple[int, object, np.ndarray]]] = {}
+        self._pending: Dict[int, List[Tuple[int, int, object,
+                                            np.ndarray]]] = {}
         self._pending_map: Dict[int, np.ndarray] = {}
         self._reserved = 0                # sum of per-slot growth reserves
 
@@ -268,15 +298,23 @@ class PagedCacheManager:
         return out
 
     # -- admission ---------------------------------------------------------
-    def admit(self, slot: int, prompt,
-              max_new_tokens: int = 0) -> Optional[AdmitPlan]:
+    def admit(self, slot: int, prompt, max_new_tokens: int = 0, *,
+              reuse_compute: bool = False) -> Optional[AdmitPlan]:
         """Map the prompt onto blocks: longest-prefix match of full blocks
         against the registry, optional partial-tail share, fresh blocks
         for the rest — plus a *reservation* for the request's worst-case
         decode growth (``max_new_tokens``), drawn down as the blocks are
         actually allocated.  Returns None (no state change) when the pool
         cannot supply prompt + growth — the engine defers the admission.
-        Raises PoolExhausted when the request could NEVER fit the pool."""
+        Raises PoolExhausted when the request could NEVER fit the pool.
+
+        ``reuse_compute=True`` additionally reports the matched prefix as
+        ``AdmitPlan.reused_tokens`` so the engine prefills only the
+        unmatched suffix (always at least one token: the last prompt
+        position is recomputed to produce the first-token logits).  Leave
+        it False for families whose prefill is not suffix-decomposable
+        (see ``transformer.supports_prefix_compute_reuse``) — blocks
+        still share their *memory* either way."""
         P = self.page_size
         prompt = np.asarray(prompt, np.int32)
         L = len(prompt)
@@ -290,16 +328,17 @@ class PagedCacheManager:
         shared: List[int] = []
         hashes: List[int] = []
         h = _ROOT
-        for j in range(n_full):
-            h2, blk = self.pool.lookup_full(h, prompt[j * P:(j + 1) * P])
-            if blk is None:
-                break
-            shared.append(blk)
-            hashes.append(h2)
-            h = h2
+        if self.prefix_cache:
+            for j in range(n_full):
+                h2, blk = self.pool.lookup_full(h, prompt[j * P:(j + 1) * P])
+                if blk is None:
+                    break
+                shared.append(blk)
+                hashes.append(h2)
+                h = h2
         m = len(shared)
         tail_shared = None
-        if m == n_full and rem:
+        if self.prefix_cache and m == n_full and rem:
             tail_shared = self.pool.lookup_partial(h, prompt[n_full * P:])
 
         retained = shared + ([tail_shared] if tail_shared is not None
@@ -338,14 +377,14 @@ class PagedCacheManager:
         # the table row is NOT written here: a reserved slot must ride
         # decode ticks with an unmapped (sentinel) row so its stale-
         # position write drops — the mapping lands at commit(), together
-        # with the scatter that makes the fresh blocks' content real.
+        # with the prefill writes that make the fresh blocks' content real.
         mapped = np.full((self.blocks_per_slot,), -1, np.int32)
         tb.chain = [int(t) for t in prompt]
         tb.hashes = list(hashes)
         for j, blk in enumerate(shared):
             mapped[j] = blk
         write_log, write_phys = [], []
-        pending: List[Tuple[int, object, np.ndarray]] = []
+        pending: List[Tuple[int, int, object, np.ndarray]] = []
         for j in range(m, n_full):
             blk = self.pool.allocate()
             mapped[j] = blk
@@ -354,7 +393,7 @@ class PagedCacheManager:
             toks = prompt[j * P:(j + 1) * P]
             h = _chain_hash(h, toks)
             tb.hashes.append(h)
-            pending.append((blk, tb.hashes[j - 1] if j else _ROOT, toks))
+            pending.append((j, blk, tb.hashes[j - 1] if j else _ROOT, toks))
         if rem:
             if tail_shared is not None:
                 mapped[n_full] = tail_shared
@@ -368,28 +407,69 @@ class PagedCacheManager:
         tb.reserved = growth
         self._reserved += growth
 
+        # compute-cache accounting: the matched prefix's prefill is
+        # skipped outright (the suffix keeps at least the last prompt
+        # token — its hidden state is what produces the first logits)
+        matched = m * P + (rem if tail_shared is not None else 0)
+        reused = min(matched, L - 1) if reuse_compute else 0
+        self.pool.prefill_admissions += 1
+        if reused > 0:
+            self.pool.prefill_compute_hits += 1
+        self.pool.reused_prefill_tokens += reused
+        self.pool.suffix_prefill_tokens += L - reused
+
         MB, NB = self.blocks_per_slot, self.pool.num_blocks
         logical = np.zeros((MB,), np.int32)
         phys = np.full((MB,), NB, np.int32)          # pad = dropped write
         logical[:len(write_log)] = write_log
         phys[:len(write_phys)] = write_phys
+        gather = mapped.copy()
+        gather[gather < 0] = NB                      # sentinel: masked page
+        wtable = np.full((MB,), NB, np.int32)        # sentinel: dropped write
+        for j, blk in zip(write_log, write_phys):
+            wtable[j] = blk
         return AdmitPlan(slot=slot,
                          shared_blocks=tuple(shared) + (
                              (tail_shared,) if tail_shared is not None
                              else ()),
                          write_logical=logical, write_phys=phys,
-                         n_write=len(write_log))
+                         n_write=len(write_log),
+                         block_table=gather, write_table=wtable,
+                         reused_tokens=int(reused))
+
+    def commit_chunk(self, slot: int, tokens_on_device: int):
+        """A prefill chunk's page writes have landed: publish every
+        pending FULL block the chunk completed (its content is real on
+        device now) without waiting for the whole prompt.  This is what
+        makes chunked prefill feed the compute cache incrementally — a
+        later admission can hit blocks of a prompt still mid-prefill.
+        The table-row mapping itself stays deferred to ``commit`` (a
+        reserved slot riding decode must keep an unmapped row)."""
+        if not self.prefix_cache:
+            return
+        pending = self._pending.get(slot)
+        if not pending:
+            return
+        keep, done = [], []
+        for e in pending:
+            (done if (e[0] + 1) * self.page_size <= tokens_on_device
+             else keep).append(e)
+        if done:
+            self._pending[slot] = keep
+            for _, blk, parent, toks in done:
+                self.pool.register(blk, parent, toks)
 
     def commit(self, slot: int):
-        """The admission scatter has landed: map the slot's table row and
-        publish its freshly written FULL prompt blocks for prefix
-        sharing.  (Both deferred until the pages actually hold the K/V —
-        a concurrently-admitted prompt must never map a still-garbage
-        block, and a reserved slot riding decode must keep an unmapped
-        row so its stale-position write drops.)"""
+        """The prefill's page writes have all landed: map the slot's
+        table row and publish its remaining freshly written FULL prompt
+        blocks for prefix sharing.  (Both deferred until the pages
+        actually hold the K/V — a concurrently-admitted prompt must never
+        map a still-garbage block, and a reserved slot riding decode must
+        keep an unmapped row so its stale-position write drops.)"""
         self.tables[slot].blocks[:] = self._pending_map.pop(slot)
-        for blk, parent, toks in self._pending.pop(slot, ()):
-            self.pool.register(blk, parent, toks)
+        for _, blk, parent, toks in self._pending.pop(slot, ()):
+            if self.prefix_cache:
+                self.pool.register(blk, parent, toks)
 
     # -- decode ------------------------------------------------------------
     def _allocate_reserved(self, tb: BlockTable) -> int:
@@ -438,8 +518,8 @@ class PagedCacheManager:
             toks = np.asarray(tb.chain[j * P:(j + 1) * P], np.int32)
             tb.hashes.append(_chain_hash(parent, toks))
             blk = int(tb.blocks[j])
-            if self.pool.writable(blk):      # exclusively ours: publish it
-                self.pool.register(blk, parent, toks)
+            if self.prefix_cache and self.pool.writable(blk):
+                self.pool.register(blk, parent, toks)  # exclusively ours
 
     # -- retirement --------------------------------------------------------
     def release_slot(self, slot: int):
@@ -473,4 +553,11 @@ class PagedCacheManager:
             "reuse_hit_rate": p.prefix_hits / max(p.prefix_queries, 1),
             "cow_copies": p.cow_copies,
             "evictions": p.evictions,
+            "prefix_cache": self.prefix_cache,
+            "prefill_admissions": p.prefill_admissions,
+            "prefill_compute_hits": p.prefill_compute_hits,
+            "prefill_hit_rate": (p.prefill_compute_hits
+                                 / max(p.prefill_admissions, 1)),
+            "reused_prefill_tokens": p.reused_prefill_tokens,
+            "suffix_prefill_tokens": p.suffix_prefill_tokens,
         }

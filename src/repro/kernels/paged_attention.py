@@ -79,6 +79,105 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,   # ins
         o_ref[0, 0, ...] = (acc_ref[...] / safe).astype(o_ref.dtype)
 
 
+def _paged_prefill_kernel(bt_ref, off_ref, q_ref, k_ref, v_ref,   # ins
+                          o_ref,                                  # outs
+                          acc_ref, m_ref, l_ref,                  # scratch
+                          *, scale, softcap, page, nb, g, s):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # (G, S, D) -> (G*S, D): one query row per (group, position) pair so
+    # the whole chunk runs as a single MXU matmul per kv head per page.
+    d = q_ref.shape[-1]
+    q = q_ref[0, 0].astype(jnp.float32).reshape(g * s, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)           # (P, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        sc = softcap * jnp.tanh(sc / softcap)
+
+    # rows of logical page j hold positions j*P + i; row r of the flat
+    # query block sits at position offset + (r % S).  Pure causal mask:
+    # a suffix query attends the whole reused prefix plus itself.
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    qpos = off_ref[0] + (
+        jax.lax.broadcasted_iota(jnp.int32, (g * s, 1), 0) % s)
+    ok = pos <= qpos                                 # (G*S, P)
+    sc = jnp.where(ok, sc, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(sc, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(sc - m_new)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _done():
+        l = l_ref[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0, ...] = (acc_ref[...] / safe).astype(
+            o_ref.dtype).reshape(g, s, d)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_prefill_attention_grouped(q, k_pages, v_pages, block_tables,
+                                    offset, *, softcap=0.0,
+                                    interpret=False):
+    """Suffix/chunked prefill over the paged pool: q (B, Hkv, G, S, D)
+    holds S fresh tokens at positions offset..offset+S-1 (K/V already
+    written into the pool); block_tables (B, NB) int32 (in-range) maps
+    every logical block — shared prefix and fresh suffix; offset () int32.
+    Returns (B, Hkv, G, S, D).  Same page-sequential online-softmax walk
+    as decode, with the causal mask replacing the length mask."""
+    b, hk, g, s, d = q.shape
+    n, page, _, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(d)
+
+    grid_spec = compat.prefetch_grid_spec(
+        num_scalar_prefetch=2,           # block tables + offset
+        grid=(b, hk, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, s, d),
+                         lambda b_, h_, j, bt, off: (b_, h_, 0, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, h_, j, bt, off: (bt[b_, j], 0, h_, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, h_, j, bt, off: (bt[b_, j], 0, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, s, d),
+                               lambda b_, h_, j, bt, off: (b_, h_, 0, 0, 0)),
+        scratch_shapes=[
+            compat.vmem_scratch((g * s, d), jnp.float32),
+            compat.vmem_scratch((g * s, 1), jnp.float32),
+            compat.vmem_scratch((g * s, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_prefill_kernel, scale=scale,
+                               softcap=softcap, page=page, nb=nb, g=g, s=s)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hk, g, s, d), q.dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32),
+      jnp.asarray(offset, jnp.int32).reshape(1),
+      q, k_pages, v_pages)
+
+
 @functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
 def paged_attention_grouped(q, k_pages, v_pages, block_tables, lengths, *,
                             softcap=0.0, interpret=False):

@@ -71,6 +71,47 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
     return out.astype(dt)
 
 
+def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, offset,
+                                *, softcap=0.0):
+    """Suffix/chunked prefill attention over a paged KV cache, pure jnp.
+
+    q: (B, Hkv, G, S, D) — S fresh query tokens per slot sitting at
+    positions ``offset .. offset+S-1``, q heads grouped per kv head;
+    k_pages/v_pages: (N, P, Hkv, D) physical block pool (the fresh
+    chunk's K/V are already written in); block_tables: (B, NB) int32
+    logical->physical map over *all* mapped blocks — shared prefix and
+    fresh suffix alike (entries >= N are unmapped: clipped to a garbage
+    page and causally masked); offset: () int32 position of the first
+    fresh query.  Returns (B, Hkv, G, S, D).
+
+    The mask is purely causal (``kpos <= qpos``): a suffix query attends
+    every earlier cached position — the reused prefix — plus the fresh
+    chunk up to itself.  The gathered layout is logical-ordered, so key
+    position == gather row and the valid keys reduce in the same order
+    with the same f32 softmax as the dense path; masked rows contribute
+    exact zeros, so suffix-only prefill decodes token-identically to a
+    cold full prefill.
+    """
+    b, hk, g, s, d = q.shape
+    n, p, _, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    dt = q.dtype
+    bt = jnp.clip(block_tables, 0, n - 1)
+    k = k_pages[bt].reshape(b, nb * p, hk, d)         # (B, T, Hkv, D)
+    v = v_pages[bt].reshape(b, nb * p, hk, d)
+    sc = jnp.einsum("bhgsd,bthd->bhgst", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap > 0:
+        sc = softcap * jnp.tanh(sc / softcap)
+    qpos = offset + jnp.arange(s)                     # (S,)
+    kpos = jnp.arange(nb * p)                         # (T,)
+    ok = kpos[None, :] <= qpos[:, None]               # (S, T)
+    sc = jnp.where(ok[None, None, None, :, :], sc, NEG_INF)
+    probs = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bhgsd", probs.astype(dt), v.astype(dt))
+    return out.astype(dt)
+
+
 def matmul_fused_ref(x, w, bias=None, *, activation="none", out_dtype=None):
     acc = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
     if bias is not None:

@@ -23,6 +23,12 @@ sharing, ``repro.cache``); the stats line then reports the block-pool
 picture (peak blocks, reuse-hit rate, copy-on-writes, effective-slots
 gain).  Composes with plan-driven serving (each replica owns a pool
 partition).
+
+``--prefix-cache`` / ``--no-prefix-cache`` (paged only; default on)
+toggles cross-request prefix compute reuse: warm prefixes are looked up
+in the registered block cache on admission and only the unmatched
+suffix is prefilled; the stats line adds the prefix-hit picture
+(prefill hit rate, reused tokens, registry block hits).
 """
 from __future__ import annotations
 
@@ -99,7 +105,18 @@ def main(argv=None):
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="block-pool size with --paged "
                          "(0: slots * max_seq / page_size)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="with --paged: share registered prefix blocks "
+                         "across requests and prefill only the suffix on a "
+                         "warm prefix (default: on)")
     args = ap.parse_args(argv)
+
+    if args.prefix_cache and not args.paged:
+        raise SystemExit("--prefix-cache requires --paged: prefix blocks "
+                         "live in the paged block pool (dense slot caches "
+                         "have no shareable blocks)")
+    prefix_cache = True if args.prefix_cache is None else args.prefix_cache
 
     cfg = reduced(REGISTRY[args.arch])
     splan = _build_serving_plan(cfg, args.strategy, args.slots,
@@ -111,7 +128,8 @@ def main(argv=None):
     eng = ServingEngine(model, params, slots=args.slots,
                         max_seq=args.max_seq, plan=splan, paged=args.paged,
                         page_size=args.page_size,
-                        num_blocks=args.num_blocks)
+                        num_blocks=args.num_blocks,
+                        prefix_cache=prefix_cache)
     eos = None if args.eos < 0 else args.eos
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -133,6 +151,12 @@ def main(argv=None):
                   f", reuse={c['reuse_hit_rate']:.2f}"
                   f", cow={c['cow_copies']}"
                   f", eff_slots_gain={c['effective_slots_gain']:.1f}x")
+        if c["prefix_cache"]:
+            extra += (f", prefix: hit_rate={c['prefill_hit_rate']:.2f}"
+                      f" reused_tok={c['reused_prefill_tokens']}"
+                      f" blocks_hit={c['prefix_hits']}")
+        else:
+            extra += ", prefix: off"
     print(f"[serve] {len(done)} requests, {st['gen_tokens']} tokens, "
           f"{st['gen_tokens']/wall:.1f} tok/s, "
           f"occupancy={st['slot_occupancy']:.2f}, "

@@ -244,7 +244,7 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
                          causal=True, window=0, kv_cache=None,
                          cache_index=None, kv_source=None, use_rope=True,
                          precomputed_kv=None, attend_cache=False,
-                         block_tables=None):
+                         block_tables=None, write_tables=None):
     """General attention supporting GQA, RoPE/M-RoPE, logit softcap, sliding
     window (ring-buffer cache), cross-attention (``kv_source``), and KV-cache
     prefill/decode.
@@ -265,9 +265,17 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
     *paged* cache {"k_pages": (N, P, Hkv, D), "v_pages": ...}: a physical
     block pool shared by all slots, addressed through ``block_tables``
     ((B, max_blocks) int32, unmapped entries out of range).  Paged caches
-    serve the per-slot decode mode only (one token per slot at its own
-    position); the write lands in the slot's current page row and the
-    attend gathers pages through the table (``dispatch_paged_attention``).
+    serve two modes: per-slot decode (one token per slot at its own
+    position — the write lands in the slot's current page row and the
+    attend gathers pages through the table, ``dispatch_paged_attention``)
+    and batch-1 suffix/chunk prefill (scalar ``cache_index`` = tokens
+    already cached, x = the fresh chunk: K/V are scattered straight into
+    the pool rows named by ``write_tables`` — sentinel entries drop the
+    write, protecting shared prefix blocks — then every query attends the
+    full mapped prefix through ``block_tables`` under a causal mask,
+    ``dispatch_paged_prefill_attention``).  ``write_tables`` defaults to
+    ``block_tables`` when the whole table is writable (cold prefill with
+    no shared blocks).
     cache_index: tokens already in the cache — a scalar int when the whole
     batch decodes in lock-step, or a (B,) vector for per-slot continuous
     batching (each slot writes its own cache row, attends under its own
@@ -321,38 +329,72 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
                       k_valid=None, causal=causal, window=window, dt=dt)
         new_cache = None
     elif "k_pages" in kv_cache:
-        # ---- paged decode: the slot's fresh K/V lands in its current
-        # page row (table lookup; out-of-range pages drop the write, so
-        # idle slots riding along at fixed shape touch nothing), then
-        # attention gathers K/V through the block table.  The gathered
-        # layout is logical-ordered, so the per-slot length mask
-        # reproduces the dense masking exactly — paged decode is
-        # bit-identical to dense decode (see kernels/ref.py).
-        if s != 1 or not per_slot or block_tables is None:
-            raise NotImplementedError(
-                "paged KV caches serve per-slot decode (one token per "
-                "slot, vector cache_index, block_tables); prefill runs "
-                "against a dense batch-1 cache and is admitted via "
-                "transformer.scatter_cache_slot_paged")
         if window:
             raise NotImplementedError(
                 "sliding-window attention keeps its dense ring cache "
                 "(ring wrap order is position-, not block-, aligned)")
+        if block_tables is None:
+            raise NotImplementedError(
+                "paged KV caches are addressed through block_tables "
+                "(per-slot decode or batch-1 suffix/chunk prefill)")
         page = kv_cache["k_pages"].shape[1]
         cdt = kv_cache["k_pages"].dtype
-        blk_idx = jnp.clip(offset // page, 0, block_tables.shape[1] - 1)
-        pages = jnp.take_along_axis(block_tables, blk_idx[:, None],
-                                    axis=1)[:, 0]
-        rows = offset % page
-        new_kp = kv_cache["k_pages"].at[pages, rows].set(
-            k[:, 0].astype(cdt), mode="drop")
-        new_vp = kv_cache["v_pages"].at[pages, rows].set(
-            v[:, 0].astype(cdt), mode="drop")
-        new_cache = {"k_pages": new_kp, "v_pages": new_vp}
         from repro.backend import dispatch as kops
-        out = kops.dispatch_paged_attention(
-            q, new_kp, new_vp, block_tables, offset + 1,
-            softcap=cfg.attn_logit_softcap).astype(dt)
+        if s == 1 and per_slot:
+            # ---- paged decode: the slot's fresh K/V lands in its
+            # current page row (table lookup; out-of-range pages drop the
+            # write, so idle slots riding along at fixed shape touch
+            # nothing), then attention gathers K/V through the block
+            # table.  The gathered layout is logical-ordered, so the
+            # per-slot length mask reproduces the dense masking exactly —
+            # paged decode is bit-identical to dense decode (see
+            # kernels/ref.py).
+            blk_idx = jnp.clip(offset // page, 0, block_tables.shape[1] - 1)
+            pages = jnp.take_along_axis(block_tables, blk_idx[:, None],
+                                        axis=1)[:, 0]
+            rows = offset % page
+            new_kp = kv_cache["k_pages"].at[pages, rows].set(
+                k[:, 0].astype(cdt), mode="drop")
+            new_vp = kv_cache["v_pages"].at[pages, rows].set(
+                v[:, 0].astype(cdt), mode="drop")
+            new_cache = {"k_pages": new_kp, "v_pages": new_vp}
+            out = kops.dispatch_paged_attention(
+                q, new_kp, new_vp, block_tables, offset + 1,
+                softcap=cfg.attn_logit_softcap).astype(dt)
+        elif per_slot:
+            raise NotImplementedError(
+                "paged prefill is a batch-1 path (scalar cache_index); "
+                "per-slot multi-token steps are not supported")
+        else:
+            # ---- paged suffix/chunk prefill: write the fresh chunk's
+            # K/V straight into the pool (write_tables names each fresh
+            # block's physical page; sentinel entries — shared prefix
+            # blocks and pad positions past the mapped range — drop the
+            # write), then attend ALL mapped positions through the block
+            # table under a pure causal mask.  A warm suffix thereby
+            # attends the reused prefix without ever recomputing it.
+            if b != 1:
+                raise NotImplementedError(
+                    "paged prefill writes through one write-table row; "
+                    "batch the chunks, not the slots")
+            wt = block_tables if write_tables is None else write_tables
+            n = kv_cache["k_pages"].shape[0]
+            nb = wt.shape[1]
+            pos = offset + jnp.arange(s)
+            blk = pos // page
+            rows = pos % page
+            # pad positions can run past the table; clipping must not
+            # alias them onto the last real block, so map them to the
+            # drop sentinel explicitly.
+            phys = jnp.where(blk < nb, wt[0, jnp.clip(blk, 0, nb - 1)], n)
+            new_kp = kv_cache["k_pages"].at[phys, rows].set(
+                k[0].astype(cdt), mode="drop")
+            new_vp = kv_cache["v_pages"].at[phys, rows].set(
+                v[0].astype(cdt), mode="drop")
+            new_cache = {"k_pages": new_kp, "v_pages": new_vp}
+            out = kops.dispatch_paged_prefill_attention(
+                q, new_kp, new_vp, block_tables, offset,
+                softcap=cfg.attn_logit_softcap).astype(dt)
     else:
         W = kv_cache["k"].shape[1]
         cdt = kv_cache["k"].dtype

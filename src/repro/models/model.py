@@ -69,13 +69,14 @@ class Model:
     # --------------------------------------------------------------- forward
     def _lm_hidden(self, params, x, *, positions=None, cache=None,
                    cache_index=None, remat=False, collect_state=False,
-                   block_tables=None):
+                   block_tables=None, write_tables=None):
         cfg = self.cfg
         x = T.shard_act(x)
         x, new_cache, aux = T.run_stack(
             params["stack"], x, cfg, positions=positions, causal=True,
             cache=cache, cache_index=cache_index, remat=remat,
-            collect_state=collect_state, block_tables=block_tables)
+            collect_state=collect_state, block_tables=block_tables,
+            write_tables=write_tables)
         x = L.apply_norm(params["final_norm"], x, cfg)
         return x, new_cache, aux
 
@@ -246,8 +247,9 @@ class Model:
         ``tokens`` (1, P) is right-padded; ``length`` (traced scalar) is
         the true prompt length.  Returns (logits at the last valid prompt
         position (1, 1, V), the batch-1 cache) — the caller scatters the
-        cache into its persistent slot store (``scatter_cache_slot`` for
-        dense, ``scatter_cache_slot_paged`` for pool-backed)."""
+        cache into its persistent slot store (``scatter_cache_slot``).
+        Pool-backed engines do NOT stage through here: they run
+        ``prefill_suffix_paged``, which writes pages directly."""
         cfg = self.cfg
         if cfg.family in ("audio", "vision", "vlm") or cfg.mrope_sections:
             raise NotImplementedError(
@@ -278,6 +280,44 @@ class Model:
         many other slots are mid-decode."""
         logits, cache = self.prefill_one(params, tokens, length, max_seq)
         return logits, T.scatter_cache_slot(full_cache, cache, slot)
+
+    def prefill_suffix_paged(self, params, full_cache, tokens, slot,
+                             offset, length, max_seq: int, block_tables,
+                             write_tables):
+        """Paged end-to-end prefill into slot ``slot`` of a pool-backed
+        cache (LM families only): the prompt SUFFIX streams straight into
+        the pool — no dense staging buffer, no commit-time copy.
+
+        ``tokens`` (1, S) is the right-padded unmatched suffix;
+        ``offset`` (traced scalar) counts the prefix tokens already
+        sitting in shared pages (0 on a cold admission — then the suffix
+        is the whole prompt); ``length`` (traced scalar) is the true
+        suffix length.  ``block_tables`` (1, NB) maps every logical block
+        of the request — shared prefix and fresh suffix — for the
+        attention gather; ``write_tables`` (1, NB) names only the fresh
+        blocks (sentinel elsewhere) so shared pages are never written.
+
+        Global-attention K/V lands in its physical pages as the stack
+        runs; dense per-slot state (SSM, local-window rings) rides a
+        batch-1 part view and scatters into batch row ``slot`` at the
+        end.  Returns (logits at the last valid suffix position (1,1,V),
+        new_full_cache)."""
+        cfg = self.cfg
+        if cfg.family in ("audio", "vision", "vlm") or cfg.mrope_sections:
+            raise NotImplementedError(
+                "per-slot prefill serves token-LM families "
+                "(dense/moe/hybrid/ssm)")
+        x = L.embed(params["embed"], tokens, cfg).astype(cfg.dtype)
+        view = T.combine_prefill_parts(
+            full_cache, T.make_prefill_part(cfg, max_seq))
+        hidden, new_view, _ = self._lm_hidden(
+            params, x, cache=view, cache_index=jnp.asarray(offset, jnp.int32),
+            collect_state=True, block_tables=block_tables,
+            write_tables=write_tables)
+        last = lax.dynamic_slice_in_dim(hidden, length - 1, 1, axis=1)
+        logits = L.logits_head(params.get("embed"), params.get("head"),
+                               last, cfg)
+        return logits, T.merge_prefill_view(full_cache, new_view, slot)
 
     def decode_step(self, params, cache, tokens, cache_index,
                     positions=None, block_tables=None):

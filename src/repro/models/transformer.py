@@ -105,7 +105,8 @@ def init_block(key, cfg: ModelConfig, blk: BlockSpec, cross: bool = False):
 
 def apply_block(p, x, cfg: ModelConfig, blk: BlockSpec, *,
                 positions=None, causal=True, state=None, cache_index=None,
-                enc_out=None, attend_cache=False, block_tables=None):
+                enc_out=None, attend_cache=False, block_tables=None,
+                write_tables=None):
     """Returns (x, new_state, aux_loss)."""
     m = blk.mixer
     h = L.apply_norm(p["norm1"], x, cfg)
@@ -116,7 +117,8 @@ def apply_block(p, x, cfg: ModelConfig, blk: BlockSpec, *,
         h, new_kv = L.multi_head_attention(
             p["mixer"], h, cfg, positions=positions, causal=causal,
             window=window, kv_cache=attn_cache, cache_index=cache_index,
-            attend_cache=attend_cache, block_tables=block_tables)
+            attend_cache=attend_cache, block_tables=block_tables,
+            write_tables=write_tables)
         new_state = {"kv": new_kv} if new_kv is not None else None
     elif m == "mamba":
         h, st = S.apply_mamba(p["mixer"], h, cfg,
@@ -310,41 +312,89 @@ def concat_cache_groups(slices):
     return jax.tree.map(lambda *ls: jnp.concatenate(ls, axis=0), *slices)
 
 
-def scatter_cache_slot_paged(full_cache, part_cache, slot, logical, phys):
-    """Paged equivalent of ``scatter_cache_slot``: admit a batch-1 prefill
-    cache into a pool-backed slot cache.
+def _block_is_paged(sub) -> bool:
+    """Whether one pattern slot's cache entry holds pool-backed KV."""
+    return "kv" in sub and isinstance(sub["kv"], dict) \
+        and "k_pages" in sub["kv"]
 
-    Dense leaves (SSM state, local-window rings) scatter into batch row
-    ``slot`` exactly as ``scatter_cache_slot`` does.  Paged KV leaves
-    write the prompt's page-aligned K/V rows into the slot's *newly
-    allocated* physical blocks: ``logical``/``phys`` are equal-length
-    (max_blocks,) int32 vectors from ``PagedCacheManager.admit`` —
-    logical block ``logical[i]`` of the part cache lands in physical
-    block ``phys[i]``; padded entries carry an out-of-range ``phys``
-    and are dropped, which is also how **shared prefix blocks skip their
-    writes** (their pages already hold identical content)."""
+
+def supports_prefix_compute_reuse(cfg: ModelConfig) -> bool:
+    """Whether a warm prefix may skip its prefill *compute* (not just its
+    KV memory): every mixer must be global attention (local-window rings
+    and recurrent SSM state have no paged per-position cache to resume
+    from) and no FFN may be MoE (expert capacity couples the routing of
+    every token in a call, so a suffix-only call is not numerically the
+    tail of the full-prompt call).  Block-level memory sharing stays on
+    for every family regardless."""
+    return all(_is_global_attn(b.mixer) and b.ffn != "moe"
+               for b in cfg.block_pattern)
+
+
+def make_prefill_part(cfg: ModelConfig, max_seq: int, *, dtype=None,
+                      enc_len: int = 0):
+    """The *dense remainder* of a paged prefill: batch-1 state for every
+    non-paged pattern slot (SSM state, local-window rings) and an empty
+    entry for paged ones — global-attn K/V streams straight into the
+    pool, so nothing is staged for it.  Combine with the pool-backed
+    cache via ``combine_prefill_parts`` to run the stack, and land the
+    dense half with ``scatter_prefill_part``."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return {f"b{j}": ({} if _is_global_attn(blk.mixer)
+                      else _dense_block_leaves(cfg, blk, 1, max_seq,
+                                               enc_len, dt, jnp.zeros))
+            for j, blk in enumerate(cfg.block_pattern)}
+
+
+def combine_prefill_parts(paged_cache, dense_part):
+    """Assemble the cache view a paged prefill runs against: paged blocks
+    contribute their live pool leaves (written in place through the write
+    tables), every other block its batch-1 dense part."""
+    return {bk: (sub if _block_is_paged(sub) else dense_part[bk])
+            for bk, sub in paged_cache.items()}
+
+
+def split_prefill_parts(view, paged_cache):
+    """Inverse of ``combine_prefill_parts``: split an updated view into
+    (new_paged_cache, new_dense_part).  ``paged_cache`` supplies the
+    layout (and the untouched dense slot leaves of the full cache)."""
+    new_paged = {bk: (view[bk] if _block_is_paged(sub) else sub)
+                 for bk, sub in paged_cache.items()}
+    new_part = {bk: ({} if _block_is_paged(sub) else view[bk])
+                for bk, sub in paged_cache.items()}
+    return new_paged, new_part
+
+
+def merge_prefill_view(full_cache, new_view, slot):
+    """Land a finished paged prefill: paged blocks take the view's pool
+    leaves wholesale (the K/V already sits in the right physical pages —
+    there is no commit-time copy), dense blocks scatter their batch-1
+    part into batch row ``slot``."""
     out = {}
     for bk, sub in full_cache.items():
-        new_sub = {}
-        for key, val in sub.items():
-            if isinstance(val, dict) and "k_pages" in val:
+        if _block_is_paged(sub):
+            out[bk] = new_view[bk]
+        else:
+            out[bk] = jax.tree.map(
+                lambda f, p: lax.dynamic_update_slice_in_dim(
+                    f, p.astype(f.dtype), slot, axis=1),
+                sub, new_view[bk])
+    return out
 
-                def write(pages, part):
-                    g, _, p, hk, hd = pages.shape
-                    blocks = part[:, 0].reshape(g, -1, p, hk, hd)
-                    sel = jnp.take(blocks, logical, axis=1, mode="clip")
-                    return pages.at[:, phys].set(sel.astype(pages.dtype),
-                                                 mode="drop")
 
-                pkv = part_cache[bk][key]
-                new_sub[key] = {"k_pages": write(val["k_pages"], pkv["k"]),
-                                "v_pages": write(val["v_pages"], pkv["v"])}
-            else:
-                new_sub[key] = jax.tree.map(
-                    lambda f, p: lax.dynamic_update_slice_in_dim(
-                        f, p.astype(f.dtype), slot, axis=1),
-                    val, part_cache[bk][key])
-        out[bk] = new_sub
+def scatter_prefill_part(full_cache, dense_part, slot):
+    """Scatter only the *dense* half of a paged prefill (SSM state,
+    local-window rings) into batch row ``slot``; paged blocks pass
+    through untouched — their K/V was written directly into the pool as
+    the chunks ran."""
+    out = {}
+    for bk, sub in full_cache.items():
+        if _block_is_paged(sub):
+            out[bk] = sub
+        else:
+            out[bk] = jax.tree.map(
+                lambda f, p: lax.dynamic_update_slice_in_dim(
+                    f, p.astype(f.dtype), slot, axis=1),
+                sub, dense_part[bk])
     return out
 
 
@@ -402,7 +452,7 @@ def run_stack(stack_params, x, cfg: ModelConfig, *, positions=None,
               causal=True, cache=None, cache_index=None, enc_out=None,
               remat: bool = False, collect_state: bool = False,
               group_mask=None, attend_cache: bool = False,
-              block_tables=None):
+              block_tables=None, write_tables=None):
     """Run the whole layer stack.  Returns (x, new_cache, aux_sum).
 
     collect_state: emit per-group state (KV cache / recurrent state) as scan
@@ -422,7 +472,12 @@ def run_stack(stack_params, x, cfg: ModelConfig, *, positions=None,
 
     block_tables: (B, max_blocks) int32 logical->physical page map when
     ``cache`` is pool-backed (``make_paged_cache``); shared across groups
-    (one table per slot addresses every layer's page pool)."""
+    (one table per slot addresses every layer's page pool).
+
+    write_tables: like ``block_tables`` but naming only the blocks this
+    call may WRITE (fresh suffix blocks; sentinel elsewhere) — the paged
+    prefill path scatters K/V through it so shared prefix blocks are
+    never touched.  ``None`` defaults to ``block_tables``."""
     if group_mask is not None:
         assert cache is None and not collect_state, (
             "group_mask is for the stateless pipelined forward path")
@@ -437,7 +492,8 @@ def run_stack(stack_params, x, cfg: ModelConfig, *, positions=None,
             x, nst, a = apply_block(
                 gp[f"b{j}"], x, cfg, blk, positions=positions, causal=causal,
                 state=st, cache_index=cache_index, enc_out=enc_out,
-                attend_cache=attend_cache, block_tables=block_tables)
+                attend_cache=attend_cache, block_tables=block_tables,
+                write_tables=write_tables)
             if nst is not None:
                 new_gc[f"b{j}"] = nst
             aux = aux + a

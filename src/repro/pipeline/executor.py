@@ -60,7 +60,7 @@ def plan_stage_params(stack_params, plan: ExecutionPlan):
 def run_stage(cfg: ModelConfig, stage_params, x, *, cache=None,
               cache_index=None, positions=None, collect_state: bool = False,
               group_mask=None, attend_cache: bool = False,
-              block_tables=None):
+              block_tables=None, write_tables=None):
     """Execute ONE plan stage's (unpadded) group slice — the per-stage
     entry the serving engine steps instead of the whole-plan
     ``plan_forward``.  Returns (y, new_cache, aux).
@@ -76,11 +76,15 @@ def run_stage(cfg: ModelConfig, stage_params, x, *, cache=None,
       path) — mutually exclusive with ``cache``.
     block_tables: logical->physical page map when ``cache`` is a paged
       (pool-backed) slice — the paged decode stage walk.
+    write_tables: fresh-blocks-only page map for paged chunked prefill
+      (shared warm blocks carry the sentinel so the chunk's page writes
+      drop on them — see ``models.layers.multi_head_attention``).
     """
     return T.run_stack(stage_params, x, cfg, positions=positions,
                        causal=True, cache=cache, cache_index=cache_index,
                        collect_state=collect_state, group_mask=group_mask,
-                       attend_cache=attend_cache, block_tables=block_tables)
+                       attend_cache=attend_cache, block_tables=block_tables,
+                       write_tables=write_tables)
 
 
 def pipeline_spec(stack_params_staged, mesh: Mesh):

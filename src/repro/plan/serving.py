@@ -89,6 +89,38 @@ def make_stage_prefill(model, plan: ExecutionPlan, s: int,
     return jax.jit(f)
 
 
+def make_stage_prefill_paged(model, plan: ExecutionPlan, s: int,
+                             cont: bool) -> Callable:
+    """One *paged* prefill stage-step: the chunk's global-attention K/V
+    streams straight into the REPLICA's block pool — fresh pages are
+    written through ``write_tables`` (shared warm-prefix blocks carry the
+    sentinel, so their writes drop) and every query attends the full
+    mapped prefix (warm blocks + earlier chunks) through
+    ``block_tables``.  Only the non-paged leaves (SSM state, local-window
+    rings) update in the request's batch-1 ``part_cache``; there is no
+    dense staging buffer and no commit-time page copy.
+
+    ``pos_base`` counts reused warm-prefix tokens plus earlier chunks, so
+    a warm suffix enters chunk 0 already offset past the shared pages.
+    Returns (hidden, new_replica_cache, new_part_cache)."""
+    cfg = model.cfg
+    st = plan.stages[s]
+
+    def f(params, replica_cache, part_cache, hidden, pos_base,
+          block_tables, write_tables):
+        stage_params = _stage_slice(params["stack"], plan, s)
+        view = T.combine_prefill_parts(replica_cache, part_cache)
+        cache_sl = T.slice_cache_groups(view, st.first_group, st.n_groups)
+        y, new_sl, _ = run_stage(
+            cfg, stage_params, hidden, cache=cache_sl, cache_index=pos_base,
+            collect_state=True, attend_cache=cont,
+            block_tables=block_tables, write_tables=write_tables)
+        new_view = T.merge_cache_groups(view, new_sl, st.first_group)
+        new_paged, new_part = T.split_prefill_parts(new_view, replica_cache)
+        return y, new_paged, new_part
+    return jax.jit(f)
+
+
 def make_prefill_finish(model) -> Callable:
     """finish(params, hidden (1, L, d)) -> (first_token (1,), logits):
     final norm + head at the chunk's last (exact-length) position."""
@@ -183,9 +215,16 @@ class _PrefillItem:
     local_slot: int
     chunks: List[np.ndarray]        # (1, L) token chunks, exact lengths
     part_cache: Any                 # batch-1 full-group cache being built
+    #                                 (paged items: the dense remainder
+    #                                 only — pool leaves live in the
+    #                                 replica cache)
     next_chunk: int = 0
     flight: List[_Flight] = field(default_factory=list)
     final_hidden: Any = None
+    reused: int = 0                 # warm-prefix tokens whose prefill is
+    #                                 skipped (chunks cover the suffix)
+    bt: Any = None                  # (1, max_blocks) gather table (paged)
+    wt: Any = None                  # (1, max_blocks) fresh-write table
 
 
 class PlanRuntime:
@@ -207,6 +246,9 @@ class PlanRuntime:
         self.finish = make_prefill_finish(model)
         self.stage_fns = {
             (s, cont): make_stage_prefill(model, plan, s, cont)
+            for s in range(plan.n_stages) for cont in (False, True)}
+        self.stage_fns_paged = {
+            (s, cont): make_stage_prefill_paged(model, plan, s, cont)
             for s in range(plan.n_stages) for cont in (False, True)}
         self.decode_step = jax.jit(make_plan_decode_step(model, plan))
         # chunking exactness gates (mirrors the engine's bucketing gates):
@@ -254,16 +296,63 @@ class PrefillPipeline:
     def busy(self) -> bool:
         return bool(self.items)
 
-    def admit(self, req, slot: int, replica: int, local_slot: int):
-        chunks = self.rt.split_chunks(req.prompt)
-        part_cache = self.rt.model.init_cache(1, self.rt.max_seq)
+    def admit(self, req, slot: int, replica: int, local_slot: int,
+              reused: int = 0, tables=None):
+        """Queue a chunked prefill.  Paged admissions pass the pager's
+        ``tables=(block_table, write_table)``: chunks then stream their
+        K/V straight into the replica's pool pages, the ``part_cache``
+        holds only the dense remainder, and ``reused`` warm-prefix tokens
+        are skipped outright (the chunks cover just the suffix)."""
+        chunks = self.rt.split_chunks(req.prompt[reused:])
+        if tables is not None:
+            part_cache = T.make_prefill_part(self.rt.model.cfg,
+                                             self.rt.max_seq)
+            bt = jnp.asarray(tables[0])[None]
+            wt = jnp.asarray(tables[1])[None]
+        else:
+            part_cache = self.rt.model.init_cache(1, self.rt.max_seq)
+            bt = wt = None
         self.items.append(_PrefillItem(
             req=req, slot=slot, replica=replica, local_slot=local_slot,
-            chunks=chunks, part_cache=part_cache))
+            chunks=chunks, part_cache=part_cache, reused=reused,
+            bt=bt, wt=wt))
 
-    def step(self) -> List[_PrefillItem]:
+    def _run_stage(self, it: _PrefillItem, si: int, cont: bool, hidden,
+                   pos_base: int, caches):
+        """Execute one stage for one chunk, routing paged items through
+        the replica-cache-threading stage fns."""
+        if it.bt is not None:
+            fn = self.rt.stage_fns_paged[(si, cont)]
+            hidden, caches[it.replica], it.part_cache = fn(
+                self.params, caches[it.replica], it.part_cache, hidden,
+                jnp.int32(pos_base), it.bt, it.wt)
+        else:
+            fn = self.rt.stage_fns[(si, cont)]
+            hidden, it.part_cache = fn(
+                self.params, it.part_cache, hidden, jnp.int32(pos_base))
+        return hidden
+
+    def _chunk_exited(self, it: _PrefillItem, fl: _Flight, finished,
+                      on_chunk):
+        """A chunk just left the last stage: its pool pages are written —
+        let the engine publish the completed blocks (incremental compute
+        cache) and collect the item if it was the final chunk."""
+        if it.bt is not None and on_chunk is not None:
+            done = it.reused + sum(c.shape[1]
+                                   for c in it.chunks[:fl.ci + 1])
+            on_chunk(it.slot, done)
+        if fl.ci == len(it.chunks) - 1:
+            it.final_hidden = fl.hidden
+            finished.append(it)
+
+    def step(self, caches=None, on_chunk=None) -> List[_PrefillItem]:
         """Advance every in-flight chunk by at most one stage; inject the
-        next chunk of each item into stage 0 when it is free."""
+        next chunk of each item into stage 0 when it is free.
+
+        caches: the engine's per-replica cache list — REQUIRED when paged
+        items are in flight (their stage steps rebind
+        ``caches[replica]``); on_chunk(slot, tokens_done) fires each time
+        a paged chunk clears the last stage."""
         S = self.rt.splan.n_stages
         occupied = set()
         finished: List[_PrefillItem] = []
@@ -277,16 +366,13 @@ class PrefillPipeline:
             if fl.si in occupied:
                 continue
             occupied.add(fl.si)
-            fn = self.rt.stage_fns[(fl.si, fl.ci > 0)]
-            fl.hidden, it.part_cache = fn(
-                self.params, it.part_cache, fl.hidden,
-                jnp.int32(fl.pos_base))
+            fl.hidden = self._run_stage(
+                it, fl.si, fl.ci > 0 or it.reused > 0, fl.hidden,
+                fl.pos_base, caches)
             fl.si += 1
             if fl.si == S:
                 it.flight.remove(fl)
-                if fl.ci == len(it.chunks) - 1:
-                    it.final_hidden = fl.hidden
-                    finished.append(it)
+                self._chunk_exited(it, fl, finished, on_chunk)
 
         # inject next chunks at stage 0 when it is free this tick (a
         # predecessor chunk has always left stage 0 already: injection
@@ -296,18 +382,17 @@ class PrefillPipeline:
                 continue
             occupied.add(0)
             tokens = it.chunks[it.next_chunk]
-            pos_base = sum(c.shape[1] for c in it.chunks[:it.next_chunk])
+            pos_base = it.reused + sum(c.shape[1]
+                                       for c in it.chunks[:it.next_chunk])
             hidden = self.rt.embed(self.params, jnp.asarray(tokens))
-            fn = self.rt.stage_fns[(0, it.next_chunk > 0)]
-            hidden, it.part_cache = fn(
-                self.params, it.part_cache, hidden, jnp.int32(pos_base))
+            hidden = self._run_stage(
+                it, 0, it.next_chunk > 0 or it.reused > 0, hidden,
+                pos_base, caches)
             fl = _Flight(ci=it.next_chunk, si=1, hidden=hidden,
                          pos_base=pos_base)
             it.next_chunk += 1
             if fl.si == S:
-                if fl.ci == len(it.chunks) - 1:
-                    it.final_hidden = fl.hidden
-                    finished.append(it)
+                self._chunk_exited(it, fl, finished, on_chunk)
             else:
                 it.flight.append(fl)
 

@@ -89,23 +89,23 @@ def make_prefill_slot_step(model: Model, max_seq: int):
     return prefill_slot_step
 
 
-def make_prefill_slot_paged_step(model: Model, max_seq: int):
-    """Paged admission: batch-1 prefill against a fresh dense cache, then
-    scatter — dense leaves into batch row ``slot``, prompt K/V pages into
-    the slot's newly allocated physical blocks (``logical``/``phys`` from
-    ``PagedCacheManager.admit``; shared prefix blocks carry an
-    out-of-range ``phys`` and their writes drop — the pool already holds
-    identical content)."""
-    from repro.models import transformer as T
+def make_prefill_suffix_paged_step(model: Model, max_seq: int):
+    """Paged admission, end-to-end: prefill the prompt's unmatched SUFFIX
+    directly into the pool (no dense staging buffer, no commit-time
+    copy).  ``offset`` counts the warm-prefix tokens already sitting in
+    shared pages (0 cold); ``block_tables``/``write_tables`` come from
+    ``PagedCacheManager.admit`` — the gather map over all mapped blocks
+    and the write map naming only the fresh ones."""
 
-    def prefill_slot_paged(params, full_cache, tokens, slot, length,
-                           logical, phys):
-        logits, part = model.prefill_one(params, tokens, length, max_seq)
+    def prefill_suffix_paged(params, full_cache, tokens, slot, offset,
+                             length, block_tables, write_tables):
+        logits, new_cache = model.prefill_suffix_paged(
+            params, full_cache, tokens, slot, offset, length, max_seq,
+            block_tables, write_tables)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return nxt, T.scatter_cache_slot_paged(full_cache, part, slot,
-                                               logical, phys)
+        return nxt, new_cache
 
-    return prefill_slot_paged
+    return prefill_suffix_paged
 
 
 @dataclass
@@ -159,6 +159,9 @@ class ServingEngine:
     paged: bool = False
     page_size: int = 16
     num_blocks: int = 0              # 0 = slots * max_seq / page_size
+    prefix_cache: bool = True        # paged only: registry lookups +
+    #                                  block publication + suffix-only
+    #                                  prefill on warm prefixes
 
     def __post_init__(self):
         from repro.models import transformer as T
@@ -188,15 +191,20 @@ class ServingEngine:
             # nothing to page: every mixer keeps dense state (SSM) or a
             # dense ring (local windows) — run the dense engine wholesale.
             self.paged = False
+        # suffix-only prefill on warm prefixes: only when the prefill is
+        # suffix-decomposable (all-global-attention, no MoE) — block-level
+        # MEMORY sharing stays on for every paged family regardless.
+        self._suffix_reuse = (self.paged and self.prefix_cache
+                              and T.supports_prefix_compute_reuse(self.cfg))
         if self.paged:
             if self.max_seq % self.page_size:
                 raise ValueError(
                     f"paged serving needs max_seq ({self.max_seq}) "
                     f"divisible by page_size ({self.page_size})")
-            self._prefill_slot_paged = jax.jit(
-                make_prefill_slot_paged_step(self.model, self.max_seq))
+            self._prefill_suffix_paged = jax.jit(
+                make_prefill_suffix_paged_step(self.model, self.max_seq))
             self._copy_pages = jax.jit(T.copy_cache_pages)
-            self._scatter_paged = jax.jit(T.scatter_cache_slot_paged)
+            self._scatter_paged = jax.jit(T.scatter_prefill_part)
         # engine-lifetime state -------------------------------------------
         self._pf = None
         self._pager = None               # monolithic PagedCacheManager
@@ -227,7 +235,8 @@ class ServingEngine:
                 for i in range(total - sum(nb)):
                     nb[i] += 1
                 self._pagers = [
-                    PagedCacheManager(n, self.max_seq, self.page_size, b)
+                    PagedCacheManager(n, self.max_seq, self.page_size, b,
+                                      prefix_cache=self.prefix_cache)
                     for n, b in zip(self.plan.replica_slots, nb)]
                 self._caches = [
                     self.model.init_paged_cache(
@@ -243,7 +252,8 @@ class ServingEngine:
             from repro.cache import PagedCacheManager
             nb = self.num_blocks or self.slots * bps
             self._pager = PagedCacheManager(self.slots, self.max_seq,
-                                            self.page_size, nb)
+                                            self.page_size, nb,
+                                            prefix_cache=self.prefix_cache)
             self._cache = self.model.init_paged_cache(
                 self.slots, self.max_seq, page_size=self.page_size,
                 num_blocks=nb)
@@ -261,6 +271,10 @@ class ServingEngine:
         self.prefill_batch_sizes: List[int] = []  # always 1 per admission
         self.prefill_token_counts: List[int] = []
         self.prefill_chunk_counts: List[int] = []  # chunks per admission
+        self.ticks = 0
+        # host wall-clock per engine phase, accumulated across ticks
+        self.phase_time = {"admission": 0.0, "prefill": 0.0, "decode": 0.0}
+        self._prefill_window = 0.0        # prefill seconds inside _admit()
 
     # -- public API --------------------------------------------------------
     def submit(self, req: Request):
@@ -278,13 +292,30 @@ class ServingEngine:
     def tick(self) -> bool:
         """Admit whatever fits, advance any in-flight chunked prefills by
         one stage-step, then run one batched decode step per replica.
-        Returns True while there is (or may be) work in flight."""
+        Returns True while there is (or may be) work in flight.
+
+        Each phase's host wall-clock accrues in ``phase_time`` (the
+        prefill compute launched inside admission is credited to
+        "prefill", so "admission" is pure bookkeeping — block matching,
+        allocation, padding)."""
+        t0 = time.perf_counter()
+        self._prefill_window = 0.0
         self._admit()
+        t1 = time.perf_counter()
+        self.phase_time["admission"] += (t1 - t0) - self._prefill_window
+        self.phase_time["prefill"] += self._prefill_window
         if self._pf is not None and self._pf.busy:
-            for item in self._pf.step():
+            for item in self._pf.step(
+                    caches=self._caches if self._pagers is not None
+                    else None,
+                    on_chunk=self._chunk_committed):
                 self._finish_prefill(item)
+            self.phase_time["prefill"] += time.perf_counter() - t1
         if self.active:
+            t2 = time.perf_counter()
             self._decode_once()
+            self.phase_time["decode"] += time.perf_counter() - t2
+        self.ticks += 1
         return bool(self.active or self.queue
                     or (self._pf is not None and self._pf.busy))
 
@@ -306,11 +337,15 @@ class ServingEngine:
         self.prefill_batch_sizes = []
         self.prefill_token_counts = []
         self.prefill_chunk_counts = []
+        self.ticks = 0
+        self.phase_time = {"admission": 0.0, "prefill": 0.0, "decode": 0.0}
         for pager in self._all_pagers():
             p = pager.pool
             p.prefix_queries = p.prefix_hits = 0
             p.cow_copies = p.evictions = 0
             p.peak_in_use = p.blocks_in_use
+            p.prefill_admissions = p.prefill_compute_hits = 0
+            p.reused_prefill_tokens = p.suffix_prefill_tokens = 0
 
     def _all_pagers(self):
         if self._pager is not None:
@@ -339,6 +374,11 @@ class ServingEngine:
             agg["page_size"] = self.page_size
             agg["reuse_hit_rate"] = (
                 agg["prefix_hits"] / max(agg["prefix_queries"], 1))
+            # non-additive keys: recompute over the aggregate
+            agg["prefix_cache"] = self.prefix_cache
+            agg["prefill_hit_rate"] = (
+                agg["prefill_compute_hits"]
+                / max(agg["prefill_admissions"], 1))
             dense_blocks = self.slots * (self.max_seq // self.page_size)
             agg["effective_slots_gain"] = (
                 dense_blocks / max(agg["peak_blocks_in_use"], 1))
@@ -363,6 +403,8 @@ class ServingEngine:
             "throughput_tok_s": gen / wall if wall > 0 else 0.0,
             "ttft_s": [r.t_first - r.t_submit for r in reqs],
             "latency_s": [r.t_done - r.t_submit for r in reqs],
+            "ticks": self.ticks,
+            "phase_time_s": dict(self.phase_time),
             "cache": self.cache_stats(),
         }
         if self.plan is not None:
@@ -420,24 +462,43 @@ class ServingEngine:
     def _admit_one(self, req: Request, slot: int) -> bool:
         """Prefill ONE request into ONE free slot: O(prompt) compute, no
         other slot's cache row or position is touched.  Returns False when
-        a paged pool cannot supply the prompt's blocks yet."""
+        a paged pool cannot supply the prompt's blocks yet.
+
+        Paged admission is suffix-only: the pager reports how many prefix
+        tokens are already sitting in warm registry blocks
+        (``AdmitPlan.reused_tokens``) and the prefill runs over just the
+        remaining suffix, writing fresh pages through ``write_table`` and
+        attending the warm ones through ``block_table``.  Cold prompts
+        are the reused=0 special case of the same path."""
         plen = len(req.prompt)
-        toks = np.zeros((1, self._padded_len(plen)), np.int32)
-        toks[0, :plen] = req.prompt
         if self._pager is not None:
-            ap = self._pager.admit(slot, req.prompt, req.max_new_tokens)
+            ap = self._pager.admit(slot, req.prompt, req.max_new_tokens,
+                                   reuse_compute=self._suffix_reuse)
             if ap is None:
                 return False
-            nxt, self._cache = self._prefill_slot_paged(
+            reused = ap.reused_tokens
+            suffix = req.prompt[reused:]
+            slen = len(suffix)
+            toks = np.zeros((1, self._padded_len(slen)), np.int32)
+            toks[0, :slen] = suffix
+            t0 = time.perf_counter()
+            nxt, self._cache = self._prefill_suffix_paged(
                 self.params, self._cache, jnp.asarray(toks),
-                jnp.int32(slot), jnp.int32(plen),
-                jnp.asarray(ap.write_logical), jnp.asarray(ap.write_phys))
+                jnp.int32(slot), jnp.int32(reused), jnp.int32(slen),
+                jnp.asarray(ap.block_table)[None],
+                jnp.asarray(ap.write_table)[None])
             self._pager.commit(slot)      # pages landed: publish for reuse
+            tok = int(np.asarray(nxt)[0])  # host sync: prefill has run
+            self._prefill_window += time.perf_counter() - t0
         else:
+            toks = np.zeros((1, self._padded_len(plen)), np.int32)
+            toks[0, :plen] = req.prompt
+            t0 = time.perf_counter()
             nxt, self._cache = self._prefill_slot(
                 self.params, self._cache, jnp.asarray(toks),
                 jnp.int32(slot), jnp.int32(plen))
-        tok = int(np.asarray(nxt)[0])     # host sync: prefill has run
+            tok = int(np.asarray(nxt)[0])  # host sync: prefill has run
+            self._prefill_window += time.perf_counter() - t0
         self.prefill_batch_sizes.append(1)
         self.prefill_token_counts.append(toks.shape[1])
         self.prefill_chunk_counts.append(1)
@@ -452,34 +513,49 @@ class ServingEngine:
         Paged replicas reserve the prompt's pool blocks up front (the
         scatter at finish must not fail mid-flight)."""
         replica, local = self.plan.replica_of_slot(slot)
+        reused = 0
         if self._pagers is not None:
             ap = self._pagers[replica].admit(local, req.prompt,
-                                             req.max_new_tokens)
+                                             req.max_new_tokens,
+                                             reuse_compute=self._suffix_reuse)
             if ap is None:
                 return False
             self._admit_plans[slot] = ap
-        self._reserved.add(slot)
-        self._pf.admit(req, slot, replica, local)
+            reused = ap.reused_tokens
+            self._reserved.add(slot)
+            self._pf.admit(req, slot, replica, local, reused=reused,
+                           tables=(ap.block_table, ap.write_table))
+        else:
+            self._reserved.add(slot)
+            self._pf.admit(req, slot, replica, local)
         self.prefill_batch_sizes.append(1)
-        self.prefill_token_counts.append(len(req.prompt))
+        self.prefill_token_counts.append(len(req.prompt) - reused)
         self.prefill_chunk_counts.append(
             len(self._pf.items[-1].chunks))
         return True
 
+    def _chunk_committed(self, slot: int, tokens_done: int):
+        """A prefill chunk left the last stage with its pool pages
+        written: publish the slot's newly-completed blocks for prefix
+        reuse now, without waiting for the whole admission to finish."""
+        pager, local = self._pager_of(slot)
+        if pager is not None:
+            pager.commit_chunk(local, tokens_done)
+
     def _finish_prefill(self, item):
         """Last chunk left the last stage: bank the first token, scatter
-        the request's batch-1 cache into its replica's slot partition, and
-        start decoding."""
+        the request's batch-1 DENSE leaves (SSM state, ring caches) into
+        its replica's slot partition — the paged K/V already streamed
+        into the pool as the chunks ran — and start decoding."""
         nxt, _ = self._rt.finish(self.params, item.final_hidden)
         tok = int(np.asarray(nxt)[0])     # host sync: prefill has run
         from repro.models import transformer as T
         if self._pagers is not None:
-            ap = self._admit_plans.pop(item.slot)
+            self._admit_plans.pop(item.slot, None)
             pager = self._pagers[item.replica]
             self._caches[item.replica] = self._scatter_paged(
                 self._caches[item.replica], item.part_cache,
-                jnp.int32(item.local_slot),
-                jnp.asarray(ap.write_logical), jnp.asarray(ap.write_phys))
+                jnp.int32(item.local_slot))
             pager.commit(item.local_slot)
         else:
             self._caches[item.replica] = T.scatter_cache_slot(

@@ -180,6 +180,107 @@ def test_deferred_admission_does_not_inflate_reuse_counters():
     assert m.pool.prefix_queries == 3 and m.pool.prefix_hits == 2
 
 
+def test_admit_reuse_compute_reports_suffix_and_tables():
+    """A warm admission with reuse_compute=True skips the matched prefix
+    (keeping the last prompt token — its hidden state makes the first
+    logits) and describes the device work through two tables: the gather
+    table maps EVERY block, the write table only the fresh ones."""
+    m = _mgr()
+    NB = m.pool.num_blocks
+    ap0 = m.admit(0, np.arange(1, 9))         # cold: 2 full blocks
+    assert ap0.reused_tokens == 0             # nothing warm yet
+    m.commit(0)
+    ap = m.admit(1, np.arange(1, 9), reuse_compute=True)
+    m.commit(1)
+    assert ap.reused_tokens == 7              # 8 matched, capped at L-1
+    assert ap.n_write == 0
+    assert list(ap.block_table[:2]) == list(m.tables[0].blocks[:2])
+    assert all(b == NB for b in ap.block_table[2:])   # unmapped: sentinel
+    assert all(b == NB for b in ap.write_table)       # nothing fresh
+    assert m.pool.prefill_admissions == 2
+    assert m.pool.prefill_compute_hits == 1
+    assert m.pool.reused_prefill_tokens == 7
+    assert m.pool.suffix_prefill_tokens == 8 + 1
+    st = m.stats()
+    assert st["prefill_hit_rate"] == 0.5 and st["prefix_cache"]
+
+
+def test_write_table_sentinels_protect_shared_blocks():
+    """Partial warm match: fresh suffix blocks appear in the write table
+    at their logical positions; the shared prefix blocks carry the
+    sentinel so the suffix prefill's page writes drop on them."""
+    m = _mgr()
+    NB = m.pool.num_blocks
+    m.admit(0, np.arange(1, 5))               # 1 full block [1..4]
+    m.commit(0)
+    suffix_prompt = np.concatenate([np.arange(1, 5), np.arange(40, 46)])
+    ap = m.admit(1, suffix_prompt, reuse_compute=True)
+    assert ap.reused_tokens == 4 and ap.n_write == 2
+    assert ap.write_table[0] == NB            # shared block: write drops
+    assert ap.write_table[1] != NB and ap.write_table[2] != NB
+    assert all(ap.block_table[:3] < NB)       # gather maps all three
+
+
+def test_commit_chunk_publishes_full_blocks_incrementally():
+    """Chunked prefill feeds the compute cache mid-prompt: each chunk
+    that lands publishes the full blocks it completed, while the table
+    row stays unmapped until the final commit."""
+    m = _mgr()
+    m.admit(0, np.arange(1, 11))              # 10 tokens: 2 full + 1 tail
+    m.commit_chunk(0, 4)                      # first chunk landed
+    assert len(m.pool.registry) == 1
+    assert m.tables[0].n_mapped == 0          # row mapping still deferred
+    m.commit_chunk(0, 6)                      # mid-block: nothing new
+    assert len(m.pool.registry) == 1
+    m.commit_chunk(0, 8)
+    assert len(m.pool.registry) == 2
+    # a second request can hit blocks of the still-mid-prefill prompt
+    ap = m.admit(1, np.arange(1, 9), reuse_compute=True)
+    assert ap.reused_tokens == 7
+    m.commit(0)
+    assert m.tables[0].n_mapped == 3
+    assert len(m.pool.registry) == 2          # chunks already published all
+
+
+def test_prefix_cache_off_disables_sharing_and_parking():
+    """prefix_cache=False: no registry lookups, no publication, and
+    release frees blocks outright (nothing parks in the LRU)."""
+    m = PagedCacheManager(2, 16, 4, 8, prefix_cache=False)
+    ap0 = m.admit(0, np.arange(1, 9), reuse_compute=True)
+    m.commit(0)
+    assert not m.pool.registry                # commit publishes nothing
+    assert ap0.reused_tokens == 0
+    ap = m.admit(1, np.arange(1, 9), reuse_compute=True)
+    m.commit(1)
+    assert ap.n_write == 2                    # identical prompt: no share
+    assert ap.reused_tokens == 0
+    assert m.pool.prefix_queries == 0
+    m.release_slot(0)
+    m.release_slot(1)
+    assert m.pool.blocks_cached == 0 and m.pool.blocks_free == 8
+    assert not m.stats()["prefix_cache"]
+
+
+def test_parked_compute_cache_evicts_under_pool_pressure():
+    """Parked warm blocks are reclaimable capacity: a new admission that
+    needs the whole pool evicts them oldest-first and still succeeds —
+    the compute cache never wedges the pool."""
+    m = _mgr(slots=2, max_seq=16, page=4, blocks=4)
+    m.admit(0, np.arange(1, 13))              # 12 tokens = 3 full blocks
+    m.commit(0)
+    m.release_slot(0)                         # full blocks park in the LRU
+    assert m.pool.blocks_cached == 3
+    ap = m.admit(1, np.arange(50, 64))        # 14 tokens = 4 fresh blocks
+    assert ap is not None and ap.n_write == 4
+    assert m.pool.evictions >= 1              # parked blocks reclaimed
+    assert m.pool.blocks_cached == 0
+    # evicted entries left the registry: the old prefix no longer hits
+    m.commit(1)
+    m.release_slot(1)
+    ap2 = m.admit(0, np.arange(1, 13), reuse_compute=True)
+    assert ap2.reused_tokens == 0
+
+
 def test_lookup_full_verifies_tokens_not_just_hash():
     """A registry hit must match stored content, so a chain-hash
     collision degrades to a miss instead of mapping foreign K/V."""
@@ -221,16 +322,42 @@ def _paged_setup(arch="yi-6b", layers=1, slots=2, max_seq=16, page=4):
     return cfg, model, full, part, nb
 
 
-def test_scatter_cache_slot_paged_writes_only_listed_blocks():
-    cfg, model, full, part, nb = _paged_setup()
+def test_scatter_prefill_part_scatters_dense_only_pool_passthrough():
+    """Finishing a paged prefill has NO commit-time page copy: only the
+    dense remainder (SSM state, rings) scatters into the slot row — the
+    pool leaves pass through object-identical (their K/V was written in
+    place through the write tables as the prefill ran)."""
+    cfg = reduced(REGISTRY["jamba-1.5-large-398b"], layers=8)
+    model = build_model(cfg)
+    full = model.init_paged_cache(3, 16, page_size=4, num_blocks=12)
+    part = T.make_prefill_part(cfg, 16)
     part = jax.tree.map(lambda x: jnp.ones_like(x), part)
-    logical = jnp.asarray([0, 1, 0, 0], jnp.int32)
-    phys = jnp.asarray([2, 5, nb, nb], jnp.int32)     # two writes, two pads
-    out = T.scatter_cache_slot_paged(full, part, jnp.int32(0), logical, phys)
-    kp = np.asarray(out["b0"]["kv"]["k_pages"])
-    assert kp[:, 2].min() == 1.0 and kp[:, 5].min() == 1.0
-    untouched = [b for b in range(nb) if b not in (2, 5)]
-    assert abs(kp[:, untouched]).max() == 0.0          # pads dropped
+    out = T.scatter_prefill_part(full, part, jnp.int32(1))
+    for j, blk in enumerate(cfg.block_pattern):
+        sub = out[f"b{j}"]
+        if blk.mixer == "attn":
+            assert sub is full[f"b{j}"]            # pool: untouched object
+        else:
+            leaf = np.asarray(jax.tree.leaves(sub)[0])
+            assert np.all(leaf[:, 1] == 1.0)       # slot row landed
+            assert np.all(leaf[:, 0] == 0.0)       # other slots untouched
+
+
+def test_prefill_view_combine_split_roundtrip():
+    """combine_prefill_parts / split_prefill_parts are exact inverses:
+    paged blocks ride the pool leaves, dense blocks the batch-1 part."""
+    cfg = reduced(REGISTRY["jamba-1.5-large-398b"], layers=8)
+    model = build_model(cfg)
+    full = model.init_paged_cache(2, 16, page_size=4, num_blocks=8)
+    part = T.make_prefill_part(cfg, 16)
+    view = T.combine_prefill_parts(full, part)
+    paged2, part2 = T.split_prefill_parts(view, full)
+    assert jax.tree.structure(paged2) == jax.tree.structure(full)
+    assert jax.tree.structure(part2) == jax.tree.structure(part)
+    for a, b in zip(jax.tree.leaves(paged2), jax.tree.leaves(full)):
+        assert a is b
+    for a, b in zip(jax.tree.leaves(part2), jax.tree.leaves(part)):
+        assert a is b
 
 
 def test_copy_cache_pages_copies_one_block_everywhere():

@@ -162,6 +162,31 @@ def test_dispatch_paged_attention_ref_parity(path, force_path):
 
 
 @pytest.mark.parametrize("path", ["ref", "interpret"])
+@pytest.mark.parametrize("offset", [0, 10])
+def test_dispatch_paged_prefill_attention_ref_parity(path, offset,
+                                                    force_path):
+    """The paged prefill kernel (suffix queries attending the full mapped
+    prefix through the block table) matches the jnp oracle — cold
+    (offset=0) and warm (offset>0), with a sentinel pad entry whose rows
+    the causal mask must exclude."""
+    force_path(path)
+    r = np.random.default_rng(5)
+    b, h, hk, d = 1, 4, 2, 128
+    n, page = 8, 8
+    s = 8
+    q = jnp.asarray(r.standard_normal((b, s, h, d)), jnp.float32)
+    kp = jnp.asarray(r.standard_normal((n, page, hk, d)), jnp.float32)
+    vp = jnp.asarray(r.standard_normal((n, page, hk, d)), jnp.float32)
+    bt = jnp.asarray([[3, 1, 6, n]], jnp.int32)  # covers offset+s, 1 pad
+    out = dispatch.dispatch_paged_prefill_attention(q, kp, vp, bt, offset)
+    qg = jnp.swapaxes(q, 1, 2).reshape(b, hk, h // hk, s, d)
+    ref = R.paged_prefill_attention_ref(qg, kp, vp, bt, offset)
+    ref = jnp.swapaxes(ref.reshape(b, h, s, d), 1, 2).reshape(b, s, h * d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("path", ["ref", "interpret"])
 def test_dispatch_linear_scan_ref_parity(path, force_path):
     force_path(path)
     r = np.random.default_rng(2)

@@ -107,6 +107,73 @@ def test_stats_report_cache_memory_utilization():
     assert st["effective_slots_gain"] >= 1.0
 
 
+def test_stats_report_per_phase_host_timing():
+    """stats() breaks the host wall-clock into admission / prefill /
+    decode per tick; reset_stats() zeroes the window."""
+    cfg, model, params = setup()
+    eng = ServingEngine(model, params, slots=2, max_seq=48)
+    eng.submit(Request(0, np.arange(1, 6, dtype=np.int32), 4))
+    eng.run()
+    st = eng.stats()
+    assert st["ticks"] > 0
+    pt = st["phase_time_s"]
+    assert set(pt) == {"admission", "prefill", "decode"}
+    assert all(v >= 0.0 for v in pt.values())
+    assert pt["prefill"] > 0.0 and pt["decode"] > 0.0
+    eng.reset_stats()
+    st = eng.stats()
+    assert st["ticks"] == 0
+    assert all(v == 0.0 for v in st["phase_time_s"].values())
+
+
+def test_warm_prefix_runs_suffix_only_and_stays_token_identical():
+    """The tentpole contract end-to-end: a second request whose prompt
+    extends a retired request's prefix reports a prefill-compute hit,
+    prefills only the unmatched suffix, and still emits exactly the
+    token stream of a cold engine."""
+    cfg, model, params = setup()
+    shared = np.arange(1, 9, dtype=np.int32)         # 2 full 4-token blocks
+    warm_prompt = np.concatenate([shared, np.array([30, 31], np.int32)])
+
+    cold = ServingEngine(model, params, slots=1, max_seq=48, paged=True,
+                         page_size=4, prefill_bucket=4, prefix_cache=False)
+    cold.submit(Request(0, warm_prompt.copy(), 6))
+    gold = list(cold.run()[0].out_tokens)
+    assert cold.stats()["cache"]["prefill_compute_hits"] == 0
+
+    eng = ServingEngine(model, params, slots=1, max_seq=48, paged=True,
+                        page_size=4, prefill_bucket=4)
+    eng.submit(Request(0, shared.copy(), 4))         # seeds the registry
+    eng.submit(Request(1, warm_prompt.copy(), 6))
+    done = {r.uid: list(r.out_tokens) for r in eng.run()}
+    assert done[1] == gold                           # token-identical
+    st = eng.stats()["cache"]
+    assert st["prefill_compute_hits"] == 1
+    assert st["prefill_hit_rate"] == 0.5
+    assert st["reused_prefill_tokens"] == 8          # both shared blocks
+    # suffix-only: the warm admission prefilled 2 tokens (padded to the
+    # bucket), not the 10-token prompt
+    assert eng.prefill_token_counts[1] < len(warm_prompt)
+
+
+def test_prefix_cache_flag_disables_reuse_end_to_end():
+    """prefix_cache=False keeps paged memory layout but never shares or
+    reuses: identical prompts prefill in full, and nothing parks."""
+    cfg, model, params = setup()
+    p = np.arange(1, 9, dtype=np.int32)
+    eng = ServingEngine(model, params, slots=2, max_seq=48, paged=True,
+                        page_size=4, prefix_cache=False)
+    eng.submit(Request(0, p, 4))
+    eng.submit(Request(1, p.copy(), 4))
+    eng.run()
+    st = eng.stats()["cache"]
+    assert st["prefix_cache"] is False
+    assert st["prefix_queries"] == 0 and st["prefix_hits"] == 0
+    assert st["prefill_compute_hits"] == 0
+    assert st["reused_prefill_tokens"] == 0
+    assert st["blocks_cached"] == 0                  # no LRU parking
+
+
 def test_admission_does_not_change_active_slots_next_token():
     """Admitting a request mid-stream must not perturb the token stream of
     already-active slots (no full-batch re-prefill, no position reset)."""

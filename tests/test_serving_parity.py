@@ -508,6 +508,128 @@ def test_paged_plan_parity_across_families(arch, layers):
         assert got[uid] == gold, f"{arch} uid={uid}"
 
 
+# ---------------------------------------------------------------------------
+# prefix COMPUTE reuse (suffix-only prefill on warm prefixes) — same gold
+# standard: a warm engine must emit exactly what a cold engine emits
+# ---------------------------------------------------------------------------
+
+WARM_SEED = np.arange(1, 9, dtype=np.int32)        # 2 full 4-token blocks
+
+WARM_CASES = [  # (warm prompt, expected reused_tokens at page 4)
+    # extends the seed: both full blocks warm, 2-token suffix
+    (np.concatenate([WARM_SEED, [30, 31]]).astype(np.int32), 8),
+    # partial-tail match: 1 full block + 2 rows of the seed's second
+    # block; only the last token (capped at L-1) recomputes
+    (WARM_SEED[:6].copy(), 5),
+    # identical prompt: everything warm except the forced last token
+    (WARM_SEED.copy(), 7),
+]
+
+
+def test_warm_prefix_suffix_only_parity_monolithic():
+    """A retired request's parked blocks make later admissions warm: each
+    WARM_CASE reports its exact reused-token count, prefills only the
+    suffix, and the token stream equals a cold one-shot decode —
+    full-block matches, partial-tail matches, and the identical prompt
+    (whose one recomputed token's page write must drop on the shared
+    block)."""
+    cfg, model, params = build()
+    golds = [gold_decode(model, params, p, 6, 64) for p, _ in WARM_CASES]
+    eng = ServingEngine(model, params, slots=2, max_seq=64, paged=True,
+                        page_size=4, prefill_bucket=4)
+    eng.submit(Request(99, WARM_SEED.copy(), 4))
+    eng.run()                                      # seed retires: blocks park
+    eng.reset_stats()
+    for uid, (p, _) in enumerate(WARM_CASES):
+        eng.submit(Request(uid, p.copy(), 6))
+    done = {r.uid: r.out_tokens for r in eng.run()}
+    for uid, gold in enumerate(golds):
+        assert done[uid] == gold, f"warm case {uid}"
+    st = eng.cache_stats()
+    assert st["prefill_compute_hits"] == len(WARM_CASES)
+    assert st["reused_prefill_tokens"] == sum(r for _, r in WARM_CASES)
+    # suffix-only: no warm admission prefilled more than its suffix
+    # rounded to the bucket (never the whole prompt re-padded)
+    for toks, (p, reused) in zip(eng.prefill_token_counts, WARM_CASES):
+        assert toks <= -(-(len(p) - reused) // 4) * 4
+
+
+@pytest.mark.parametrize("chunk", [4, 16])
+def test_warm_prefix_suffix_only_parity_plan(chunk):
+    """Plan-driven warm admissions: the suffix streams through the plan's
+    stages — chunked (chunk=4: a 10-token suffix is 3 chunks) and
+    whole-prompt (chunk=16: one chunk) — writing pool pages as chunks
+    complete, token-identical to cold one-shot decode."""
+    from repro.plan import lower_serving, uniform_plan
+    cfg, model, params = build(layers=4)
+    warm = np.concatenate([WARM_SEED,
+                           np.arange(30, 40)]).astype(np.int32)
+    gold = gold_decode(model, params, warm, 6, 64)
+    plan = uniform_plan(cfg.num_groups, 2, n_microbatches=1)
+    eng = ServingEngine(model, params, slots=2, max_seq=64,
+                        plan=lower_serving(plan, slots=2, chunk=chunk),
+                        paged=True, page_size=4)
+    eng.submit(Request(0, WARM_SEED.copy(), 4))
+    eng.run()                                      # seed retires: blocks park
+    eng.submit(Request(1, warm.copy(), 6))
+    done = {r.uid: r.out_tokens for r in eng.run()}
+    assert done[1] == gold
+    pool = eng._pagers[0].pool
+    assert pool.prefill_compute_hits == 1
+    assert pool.reused_prefill_tokens == 8
+    # the warm admission chunked only its 10-token suffix
+    assert eng.prefill_token_counts[-1] == len(warm) - 8
+    assert eng.prefill_chunk_counts[-1] == (3 if chunk == 4 else 1)
+
+
+def test_chunked_prefill_publishes_blocks_mid_prompt_for_reuse():
+    """Chunks write pool pages as they complete, so a prompt still
+    mid-prefill already feeds the compute cache: a second request sharing
+    its prefix admits warm BEFORE the first finishes — both streams stay
+    gold-identical."""
+    from repro.plan import lower_serving, uniform_plan
+    cfg, model, params = build(layers=4)
+    pa = np.arange(1, 13, dtype=np.int32)          # 12 tokens = 3 chunks
+    pb = np.concatenate([pa[:8], [50, 51]]).astype(np.int32)
+    ga = gold_decode(model, params, pa, 6, 64)
+    gb = gold_decode(model, params, pb, 6, 64)
+    plan = uniform_plan(cfg.num_groups, 2, n_microbatches=1)
+    eng = ServingEngine(model, params, slots=2, max_seq=64,
+                        plan=lower_serving(plan, slots=2, chunk=4),
+                        paged=True, page_size=4)
+    eng.submit(Request(0, pa, 6))
+    pool = eng._pagers[0].pool
+    while not pool.registry:                       # first chunk publishes
+        assert eng.tick()
+    assert 0 in eng._reserved                      # A still mid-prefill
+    eng.submit(Request(1, pb, 6))
+    done = {r.uid: r.out_tokens for r in eng.run()}
+    assert done[0] == ga and done[1] == gb
+    assert pool.prefill_compute_hits >= 1          # B admitted warm
+    assert pool.reused_prefill_tokens >= 4
+
+
+def test_warm_prefix_memory_shares_without_compute_reuse_for_hybrids():
+    """Families whose prefill is not suffix-decomposable (here: jamba's
+    mamba blocks) keep block-level MEMORY sharing but never skip
+    compute: reused tokens stay zero, parity still holds."""
+    cfg, model, params = build("jamba-1.5-large-398b", layers=8, key=1)
+    p = np.arange(1, 9, dtype=np.int32)
+    gold = gold_decode(model, params, p, 5, 64)
+    eng = ServingEngine(model, params, slots=2, max_seq=64, paged=True,
+                        page_size=4)
+    assert not eng._suffix_reuse
+    eng.submit(Request(0, p, 5))
+    eng.run()
+    eng.submit(Request(1, p.copy(), 5))
+    done = {r.uid: r.out_tokens for r in eng.run()}
+    assert done[1] == gold
+    st = eng.cache_stats()
+    assert st["prefix_hits"] >= 2                  # memory sharing engaged
+    assert st["prefill_compute_hits"] == 0         # compute reuse gated off
+    assert st["reused_prefill_tokens"] == 0
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("arch,layers", [("jamba-1.5-large-398b", 16),
                                          ("xlstm-125m", 8),
