@@ -312,11 +312,91 @@ def _prefix_rows(s: dict) -> List[Tuple[str, float, str]]:
              f"blocks_saved={s['blocks_saved']}")]
 
 
+def _repetitive_prompts(rng, cfg, requests: int, period: int = 2,
+                        repeats: int = 4):
+    """Each prompt tiles a short random pattern, so the prompt-lookup
+    drafter has an n-gram match to propose from on the first tick."""
+    out = []
+    for _ in range(requests):
+        pat = rng.integers(1, cfg.vocab_size, size=period)
+        out.append(np.tile(pat, repeats).astype(np.int32))
+    return out
+
+
+def speculative_sweep(arch: str = "yi-6b", *, slots: int = 2,
+                      requests: int = 6, new_tokens: int = 20,
+                      speculate: int = 4, max_seq: int = 96,
+                      page_size: int = 4, seed: int = 0) -> dict:
+    """Spec-on vs spec-off over one repetitive-prompt request set on paged
+    engines.  Token parity between the legs is ASSERTED (greedy verify
+    makes speculation a pure latency optimisation); the payload reports
+    the acceptance rate and decode tokens-per-step of each leg — the
+    spec-on leg must clear 1.0 tokens/step (the CI gate) since every
+    accepted draft token rides an existing verify step for free."""
+    import jax
+
+    from repro.configs import REGISTRY, reduced
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = reduced(REGISTRY[arch], layers=1)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(seed)
+    prompts = _repetitive_prompts(rng, cfg, requests)
+
+    legs = {}
+    streams = {}
+    for name, k in (("off", 0), ("on", speculate)):
+        eng = ServingEngine(model, params, slots=slots, max_seq=max_seq,
+                            paged=True, page_size=page_size, speculate=k)
+        # warmup: compile prefill + decode (and the verify window shape)
+        eng.submit(Request(-1, np.tile([3, 4], 4).astype(np.int32), 4))
+        eng.run()
+        eng.reset_stats()
+        wall = _drive_submissions(eng, prompts, new_tokens)
+        streams[name] = {r.uid: list(r.out_tokens) for r in eng.done}
+        st = eng.stats()
+        legs[name] = {"wall_s": wall, "decode_steps": st["decode_steps"],
+                      "tokens_per_step": st["tokens_per_step"],
+                      "acceptance_rate": st["acceptance_rate"],
+                      "throughput_tok_s": st["throughput_tok_s"]}
+    assert streams["on"] == streams["off"], (
+        "speculative decode diverged from plain greedy token streams")
+    return {
+        "arch": arch, "speculate": speculate, "slots": slots,
+        "requests": requests, "new_tokens": new_tokens,
+        "page_size": page_size, "parity": True,
+        "tokens_per_step_on": legs["on"]["tokens_per_step"],
+        "tokens_per_step_off": legs["off"]["tokens_per_step"],
+        "acceptance_rate": legs["on"]["acceptance_rate"],
+        "decode_steps_on": legs["on"]["decode_steps"],
+        "decode_steps_off": legs["off"]["decode_steps"],
+        "step_reduction": (1.0 - legs["on"]["decode_steps"]
+                           / max(legs["off"]["decode_steps"], 1)),
+        "wall_on_s": legs["on"]["wall_s"],
+        "wall_off_s": legs["off"]["wall_s"],
+    }
+
+
+def _spec_rows(s: dict) -> List[Tuple[str, float, str]]:
+    name = (f"serving/speculative/{s['arch']}/"
+            f"k{s['speculate']}-p{s['page_size']}")
+    return [(name, s["wall_on_s"] * 1e6,
+             f"parity=Y tok_per_step={s['tokens_per_step_on']:.2f} "
+             f"accept={s['acceptance_rate']:.2f} "
+             f"steps={s['decode_steps_on']}/{s['decode_steps_off']} "
+             f"step_reduction={s['step_reduction']:.2f}")]
+
+
 def serving_bench_summary(seed: int = 0) -> dict:
     """The ``BENCH_serving.json`` payload: the headline serving numbers —
-    throughput, cold vs warm TTFT, prefix-hit rate, block/token savings —
-    from the shared-prefix compute-reuse sweep."""
-    return prefix_reuse_sweep(seed=seed)
+    throughput, cold vs warm TTFT, prefix-hit rate, block/token savings
+    from the shared-prefix compute-reuse sweep — plus the speculative
+    sweep under ``"speculative"`` (parity-asserted; CI gates
+    ``tokens_per_step_on > 1``)."""
+    return {**prefix_reuse_sweep(seed=seed),
+            "speculative": speculative_sweep(seed=seed)}
 
 
 def _serving_plans(cfg, slots: int, chunk: int, seq: int, batch: int):
@@ -434,6 +514,7 @@ def rows(seed: int = 0) -> List[Tuple[str, float, str]]:
     out += _plan_rows(plan_serving_sweep(seed=seed))
     out += _paged_rows(paged_serving_sweep(seed=seed))
     out += _prefix_rows(prefix_reuse_sweep(seed=seed))
+    out += _spec_rows(speculative_sweep(seed=seed))
     return out
 
 
@@ -449,4 +530,5 @@ def smoke_rows(seed: int = 0) -> List[Tuple[str, float, str]]:
     rows += _paged_rows(paged_serving_sweep(
         requests=6, new_tokens=4, slots=2, page_sizes=(4,), seed=seed))
     rows += _prefix_rows(prefix_reuse_sweep(requests=4, seed=seed))
+    rows += _spec_rows(speculative_sweep(requests=4, seed=seed))
     return rows

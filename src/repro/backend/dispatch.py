@@ -155,6 +155,33 @@ def dispatch_paged_prefill_attention(q, k_pages, v_pages, block_tables,
         b, s, h * d)
 
 
+def dispatch_paged_verify_attention(q, k_pages, v_pages, block_tables,
+                                    offset, *, softcap=0.0):
+    """Speculative-verify attention through per-slot block tables: each
+    slot's S-token verify window (current token + drafted tokens) is
+    already written into the pool and attends its full mapped prefix
+    under a causal mask anchored at a PER-SLOT ``offset`` (B,) — slots
+    verify at different sequence depths in one batched step.  Layout
+    adapter: q arrives in model layout (B, S, H, D) and leaves as
+    (B, S, H*D).
+
+    Verify windows are short (K+1 tokens) and off the steady-state
+    decode hot loop, so every path runs the jnp reference for now; a
+    Pallas lowering can slot in behind this front door without touching
+    callers."""
+    from repro.kernels import ref as R
+    b, s, h, d = q.shape
+    hk = k_pages.shape[2]
+    g = h // hk
+    qg = jnp.swapaxes(q, 1, 2).reshape(b, hk, g, s, d)
+    n = k_pages.shape[0]
+    bt = jnp.clip(block_tables, 0, n - 1)
+    out = R.paged_verify_attention_ref(qg, k_pages, v_pages, bt, offset,
+                                       softcap=softcap)
+    return jnp.swapaxes(out.reshape(b, hk * g, s, d), 1, 2).reshape(
+        b, s, h * d)
+
+
 # ---------------------------------------------------------------------------
 # fused matmul
 # ---------------------------------------------------------------------------
@@ -208,6 +235,6 @@ def dispatch_linear_scan(a, b, h0=None):
 __all__ = [
     "kernel_path", "use_flash", "use_scan_kernel",
     "dispatch_flash_attention", "dispatch_paged_attention",
-    "dispatch_paged_prefill_attention",
+    "dispatch_paged_prefill_attention", "dispatch_paged_verify_attention",
     "dispatch_matmul", "dispatch_layernorm", "dispatch_linear_scan",
 ]

@@ -1,7 +1,8 @@
 """Paged KV-cache subsystem: block pool + per-slot block tables + content-
 hash prefix sharing for the serving engine (see ``repro.cache.paged``)."""
 from repro.cache.paged import (AdmitPlan, BlockPool, BlockTable,
-                               PagedCacheManager, PoolExhausted)
+                               ConcurrentPeakTracker, PagedCacheManager,
+                               PoolExhausted)
 
-__all__ = ["AdmitPlan", "BlockPool", "BlockTable", "PagedCacheManager",
-           "PoolExhausted"]
+__all__ = ["AdmitPlan", "BlockPool", "BlockTable", "ConcurrentPeakTracker",
+           "PagedCacheManager", "PoolExhausted"]

@@ -66,6 +66,33 @@ class PoolExhausted(RuntimeError):
     """The block pool has no free or evictable block left."""
 
 
+class ConcurrentPeakTracker:
+    """Concurrent peak of blocks-in-use ACROSS a set of pools.
+
+    Per-pool ``peak_in_use`` maxima occur at different times, so summing
+    them overstates the true concurrent footprint (and understates the
+    effective-slots gain derived from it).  Pools attached here ping the
+    tracker on every allocate/retain; the tracker records the maximum of
+    the *summed instantaneous* usage instead."""
+
+    def __init__(self):
+        self.pools: List[BlockPool] = []
+        self.peak = 0
+
+    def attach(self, pool: "BlockPool"):
+        self.pools.append(pool)
+        pool.tracker = self
+        self.note()
+
+    def note(self):
+        now = sum(p.blocks_in_use for p in self.pools)
+        if now > self.peak:
+            self.peak = now
+
+    def reset(self):
+        self.peak = sum(p.blocks_in_use for p in self.pools)
+
+
 class BlockPool:
     """Fixed-size pool of physical KV blocks with refcounts, a content
     registry (chain hash -> block) for prefix sharing, and an LRU of
@@ -85,6 +112,7 @@ class BlockPool:
         self.tokens_of: Dict[int, np.ndarray] = {}  # block -> its tokens
         self.children: Dict[object, List[int]] = {}  # parent -> blocks
         self.lru: "OrderedDict[int, None]" = OrderedDict()  # ref 0, registered
+        self.tracker: Optional[ConcurrentPeakTracker] = None
         # stats ------------------------------------------------------------
         self.prefix_queries = 0
         self.prefix_hits = 0
@@ -136,6 +164,8 @@ class BlockPool:
                 f"this out, or retire requests sooner")
         self.refcount[blk] = 1
         self.peak_in_use = max(self.peak_in_use, self.blocks_in_use)
+        if self.tracker is not None:
+            self.tracker.note()
         return int(blk)
 
     def retain(self, blk: int):
@@ -143,6 +173,8 @@ class BlockPool:
         self.refcount[blk] += 1
         self.lru.pop(blk, None)
         self.peak_in_use = max(self.peak_in_use, self.blocks_in_use)
+        if self.tracker is not None:
+            self.tracker.note()
 
     def release(self, blk: int):
         assert self.refcount[blk] > 0, blk
@@ -359,6 +391,10 @@ class PagedCacheManager:
         # request whose shared + fresh footprint exceeds the pool must
         # raise (deferring would livelock the FIFO head forever)
         if len(retained) + n_new + growth > self.pool.num_blocks:
+            # the raise is still "no admission happened": restore the
+            # reuse counters just like the deferral path below, or a
+            # never-fits request would permanently skew reuse_hit_rate
+            self.pool.prefix_queries, self.pool.prefix_hits = q0, h0
             raise PoolExhausted(
                 f"a {L}-token prompt with max_new_tokens="
                 f"{max_new_tokens} needs {len(retained) + n_new + growth} "
@@ -520,6 +556,30 @@ class PagedCacheManager:
             blk = int(tb.blocks[j])
             if self.prefix_cache and self.pool.writable(blk):
                 self.pool.register(blk, parent, toks)  # exclusively ours
+
+    def rollback(self, slot: int, pos: int):
+        """Rewind the slot to ``pos`` written tokens: truncate the chain
+        (and the per-block hash spine), release blocks wholly past the
+        accepted position, and return them to the slot's growth
+        reservation.  This is the reject path of speculative decode —
+        only ever invoked on positions the slot itself just wrote, so
+        every released block is a fresh exclusively-owned decode block
+        (never shared, never registered: blocks register only when FULL,
+        and a full block at index < ceil(pos/P) is always kept)."""
+        tb = self.tables[slot]
+        P = self.page_size
+        n_keep = -(-pos // P)
+        for j in range(n_keep, self.blocks_per_slot):
+            blk = int(tb.blocks[j])
+            if blk < 0:
+                continue
+            assert self.pool.writable(blk), (slot, j, blk)
+            self.pool.release(blk)
+            tb.blocks[j] = -1
+            tb.reserved += 1
+            self._reserved += 1
+        del tb.chain[pos:]
+        del tb.hashes[pos // P:]
 
     # -- retirement --------------------------------------------------------
     def release_slot(self, slot: int):

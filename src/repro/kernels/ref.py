@@ -112,6 +112,47 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, offset,
     return out.astype(dt)
 
 
+def paged_verify_attention_ref(q, k_pages, v_pages, block_tables, offset,
+                               *, softcap=0.0):
+    """Speculative-verify attention over a paged KV cache, pure jnp.
+
+    Identical to ``paged_prefill_attention_ref`` except ``offset`` is a
+    PER-SLOT ``(B,)`` vector: each slot's S-token verify window (current
+    token + K drafted tokens) sits at its own positions
+    ``offset[b] .. offset[b]+S-1`` — slots verify at different depths in
+    one batched step, exactly as the decode path's per-slot position
+    vector allows.
+
+    q: (B, Hkv, G, S, D); k_pages/v_pages: (N, P, Hkv, D) with the
+    window's K/V already written in; block_tables: (B, NB);
+    offset: (B,) int32.  Returns (B, Hkv, G, S, D).
+
+    Same logical-ordered gather, causal mask, and f32 softmax as the
+    other paged refs — so greedy verification scores each window
+    position exactly as a sequential one-token decode would, which is
+    what keeps accepted speculative tokens bit-identical to the one-shot
+    greedy stream.
+    """
+    b, hk, g, s, d = q.shape
+    n, p, _, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    dt = q.dtype
+    bt = jnp.clip(block_tables, 0, n - 1)
+    k = k_pages[bt].reshape(b, nb * p, hk, d)         # (B, T, Hkv, D)
+    v = v_pages[bt].reshape(b, nb * p, hk, d)
+    sc = jnp.einsum("bhgsd,bthd->bhgst", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap > 0:
+        sc = softcap * jnp.tanh(sc / softcap)
+    qpos = offset[:, None] + jnp.arange(s)[None, :]   # (B, S)
+    kpos = jnp.arange(nb * p)                         # (T,)
+    ok = kpos[None, None, :] <= qpos[:, :, None]      # (B, S, T)
+    sc = jnp.where(ok[:, None, None, :, :], sc, NEG_INF)
+    probs = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bhgsd", probs.astype(dt), v.astype(dt))
+    return out.astype(dt)
+
+
 def matmul_fused_ref(x, w, bias=None, *, activation="none", out_dtype=None):
     acc = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
     if bias is not None:

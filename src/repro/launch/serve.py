@@ -29,6 +29,14 @@ toggles cross-request prefix compute reuse: warm prefixes are looked up
 in the registered block cache on admission and only the unmatched
 suffix is prefilled; the stats line adds the prefix-hit picture
 (prefill hit rate, reused tokens, registry block hits).
+
+``--speculate K`` (``--no-speculate`` to force off) turns on speculative
+decode: a prompt-lookup n-gram drafter proposes up to K tokens per slot
+and one batched verify step scores them all; greedy verification keeps
+every stream bit-identical to plain decode, so the stats line's
+tokens-per-step and acceptance rate are pure latency wins.  Families
+whose verify step is not decomposable (SSM mixers, local-window rings,
+MoE) gate speculation off automatically.
 """
 from __future__ import annotations
 
@@ -110,6 +118,13 @@ def main(argv=None):
                     help="with --paged: share registered prefix blocks "
                          "across requests and prefill only the suffix on a "
                          "warm prefix (default: on)")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="speculative decode: draft up to K tokens per slot "
+                         "(prompt-lookup n-grams) and verify them in one "
+                         "batched step; greedy verify keeps streams "
+                         "bit-identical (0: disabled)")
+    ap.add_argument("--no-speculate", action="store_const", const=0,
+                    dest="speculate", help="force speculation off")
     args = ap.parse_args(argv)
 
     if args.prefix_cache and not args.paged:
@@ -129,7 +144,8 @@ def main(argv=None):
                         max_seq=args.max_seq, plan=splan, paged=args.paged,
                         page_size=args.page_size,
                         num_blocks=args.num_blocks,
-                        prefix_cache=prefix_cache)
+                        prefix_cache=prefix_cache,
+                        speculate=args.speculate)
     eos = None if args.eos < 0 else args.eos
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -157,6 +173,12 @@ def main(argv=None):
                       f" blocks_hit={c['prefix_hits']}")
         else:
             extra += ", prefix: off"
+    if st["spec_steps"]:
+        extra += (f", spec k={args.speculate}: "
+                  f"tok_per_step={st['tokens_per_step']:.2f}"
+                  f" accept={st['acceptance_rate']:.2f}")
+    elif args.speculate:
+        extra += ", spec: gated off (family not verify-decomposable)"
     print(f"[serve] {len(done)} requests, {st['gen_tokens']} tokens, "
           f"{st['gen_tokens']/wall:.1f} tok/s, "
           f"occupancy={st['slot_occupancy']:.2f}, "

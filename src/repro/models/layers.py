@@ -362,9 +362,32 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
                 q, new_kp, new_vp, block_tables, offset + 1,
                 softcap=cfg.attn_logit_softcap).astype(dt)
         elif per_slot:
-            raise NotImplementedError(
-                "paged prefill is a batch-1 path (scalar cache_index); "
-                "per-slot multi-token steps are not supported")
+            # ---- paged speculative verify: each slot writes an S-token
+            # window (current token + drafted tokens) at its own
+            # positions — page lookups per window element, out-of-range
+            # blocks drop the write — then every window query attends
+            # the slot's full mapped prefix through the block table
+            # under a per-slot causal mask.  Greedy argmax over each
+            # position then scores the drafts exactly as S sequential
+            # one-token decodes would (rejected rows are causally masked
+            # everywhere and overwritten by the next window before they
+            # could become valid).
+            nb = block_tables.shape[1]
+            n = kv_cache["k_pages"].shape[0]
+            blk = pos_bs // page                                    # (B,S)
+            pages = jnp.where(
+                blk < nb,
+                jnp.take_along_axis(block_tables,
+                                    jnp.clip(blk, 0, nb - 1), axis=1), n)
+            rows = pos_bs % page
+            new_kp = kv_cache["k_pages"].at[pages, rows].set(
+                k.astype(cdt), mode="drop")
+            new_vp = kv_cache["v_pages"].at[pages, rows].set(
+                v.astype(cdt), mode="drop")
+            new_cache = {"k_pages": new_kp, "v_pages": new_vp}
+            out = kops.dispatch_paged_verify_attention(
+                q, new_kp, new_vp, block_tables, offset,
+                softcap=cfg.attn_logit_softcap).astype(dt)
         else:
             # ---- paged suffix/chunk prefill: write the fresh chunk's
             # K/V straight into the pool (write_tables names each fresh
@@ -398,11 +421,7 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
     else:
         W = kv_cache["k"].shape[1]
         cdt = kv_cache["k"].dtype
-        if s > 1:
-            if per_slot:
-                raise NotImplementedError(
-                    "per-slot prefill goes through batch-1 prefill + "
-                    "scatter_cache_slot, not a vector cache_index")
+        if s > 1 and not per_slot:
             if attend_cache:
                 # ---- chunked-prefill continuation: the chunk's queries
                 # attend the cached tokens (ring rows at their absolute
@@ -436,8 +455,11 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
             new_cache = {"k": new_k, "v": new_v}
         elif per_slot:
             # ---- per-slot decode: each batch row writes its own cache
-            # row and attends under its own length mask (slots sit at
-            # different positions under continuous batching) ----
+            # row(s) and attends under its own length mask (slots sit at
+            # different positions under continuous batching).  s > 1 is
+            # the speculative-verify window: S rows land at the slot's
+            # own positions and the per-query causal mask scores each
+            # window position exactly as S sequential decodes would ----
             rows = pos_bs % W                                       # (B,S)
             bidx = jnp.arange(b)[:, None]
             new_k = kv_cache["k"].at[bidx, rows].set(k.astype(cdt))

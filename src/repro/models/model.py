@@ -321,11 +321,14 @@ class Model:
 
     def decode_step(self, params, cache, tokens, cache_index,
                     positions=None, block_tables=None):
-        """One decode step.  tokens: (B, 1).  Returns (logits, new_cache).
+        """One decode step.  tokens: (B, S) — S = 1 for plain decode, or
+        S = K+1 for a speculative-verify window (current token + K
+        drafted tokens per slot, scored in one step).  Returns
+        (logits, new_cache).
 
         ``cache_index`` is a scalar when all rows decode in lock-step, or a
         (B,) vector of per-slot positions for continuous batching (each
-        slot then writes its own cache row and attends under its own
+        slot then writes its own cache row(s) and attends under its own
         length mask — see ``layers.multi_head_attention``).
         ``block_tables`` maps logical to physical pages when ``cache`` is
         pool-backed (``transformer.make_paged_cache``)."""

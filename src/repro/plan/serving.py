@@ -164,6 +164,33 @@ def make_plan_decode_step(model, plan: ExecutionPlan) -> Callable:
     return step
 
 
+def make_plan_verify_step(model, plan: ExecutionPlan) -> Callable:
+    """verify(params, cache, tokens (B, S), positions (B,),
+    block_tables=None) -> (argmax_tokens (B, S), new_cache) — one
+    speculative-verify step for ONE replica.  Identical stage walk to
+    ``make_plan_decode_step`` except the S-token window per slot is
+    scored at every position (the engine accepts the longest agreeing
+    draft prefix and rolls the rest back)."""
+    cfg = model.cfg
+
+    def step(params, cache, tokens, positions, block_tables=None):
+        x = _embed(model, params, {"tokens": tokens})
+        x = T.shard_act(x)
+        new_slices = []
+        for s, st in enumerate(plan.stages):
+            stage_params = _stage_slice(params["stack"], plan, s)
+            cache_sl = T.slice_cache_groups(cache, st.first_group,
+                                            st.n_groups)
+            x, new_sl, _ = run_stage(
+                cfg, stage_params, x, cache=cache_sl, cache_index=positions,
+                collect_state=True, block_tables=block_tables)
+            new_slices.append(new_sl)
+        new_cache = T.concat_cache_groups(new_slices)
+        logits = _finish(model, params, x)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+    return step
+
+
 def place_params(params, plan: ExecutionPlan, devices=None):
     """Share one stage-sharded copy of the params across all decode
     replicas: the stacked (group-axis-leading) leaves go onto a
@@ -251,6 +278,7 @@ class PlanRuntime:
             (s, cont): make_stage_prefill_paged(model, plan, s, cont)
             for s in range(plan.n_stages) for cont in (False, True)}
         self.decode_step = jax.jit(make_plan_decode_step(model, plan))
+        self.verify_step = jax.jit(make_plan_verify_step(model, plan))
         # chunking exactness gates (mirrors the engine's bucketing gates):
         # MoE capacity is per-call, so chunk-local routing would diverge
         # from the one-shot prefill; a prompt that wraps a sliding-window

@@ -1,2 +1,3 @@
 from repro.serving.engine import (Request, ServingEngine, make_prefill_step,
-                                  make_prefill_slot_step, make_serve_step)
+                                  make_prefill_slot_step, make_serve_step,
+                                  make_verify_step, ngram_draft)

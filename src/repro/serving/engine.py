@@ -70,6 +70,39 @@ def make_serve_step(model: Model):
     return serve_step
 
 
+def make_verify_step(model: Model):
+    """verify_step(params, cache, tokens, cache_index, block_tables) ->
+    (argmax_tokens, new_cache) — one speculative-verify step.  ``tokens``
+    is the (B, K+1) window per slot (current token + K drafted tokens);
+    the returned (B, K+1) argmaxes score every window position in one
+    batched step, exactly as K+1 sequential greedy decodes would."""
+
+    def verify_step(params, cache, tokens, cache_index, block_tables=None):
+        logits, cache = model.decode_step(params, cache, tokens, cache_index,
+                                          block_tables=block_tables)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return verify_step
+
+
+def ngram_draft(ctx, k: int, max_ngram: int = 3) -> List[int]:
+    """Model-free prompt-lookup drafting: find the most recent earlier
+    occurrence of the context's trailing n-gram (longest n first) and
+    propose the up-to-``k`` tokens that followed it.  Returns [] when the
+    context never repeats — the tick then falls back to plain decode."""
+    L = len(ctx)
+    if k <= 0 or L < 2:
+        return []
+    for n in range(min(max_ngram, L - 1), 0, -1):
+        tail = ctx[L - n:]
+        for i in range(L - n - 1, -1, -1):
+            if np.array_equal(ctx[i:i + n], tail):
+                follow = ctx[i + n:i + n + k]
+                if len(follow):
+                    return [int(t) for t in follow]
+    return []
+
+
 def make_prefill_step(model: Model, max_seq: int):
     def prefill_step(params, batch):
         return model.prefill(params, batch, max_seq)
@@ -162,6 +195,11 @@ class ServingEngine:
     prefix_cache: bool = True        # paged only: registry lookups +
     #                                  block publication + suffix-only
     #                                  prefill on warm prefixes
+    speculate: int = 0               # propose up to K tokens per slot via
+    #                                  prompt-lookup n-gram drafting and
+    #                                  verify them in one batched step
+    #                                  (greedy verify: bit-identical to
+    #                                  one-shot decode); 0 = off
 
     def __post_init__(self):
         from repro.models import transformer as T
@@ -196,6 +234,17 @@ class ServingEngine:
         # MEMORY sharing stays on for every paged family regardless.
         self._suffix_reuse = (self.paged and self.prefix_cache
                               and T.supports_prefix_compute_reuse(self.cfg))
+        # speculative decode: same decomposability gate as suffix reuse —
+        # a verify window replays K+1 positions through the cache, which
+        # is exact only when every mixer is global attention and the FFN
+        # is dense (ring wraps lose overwritten rows, SSM state cannot
+        # rewind a rejected tail, MoE capacity couples window rows).
+        self._spec_k = (self.speculate
+                        if (self.speculate > 0
+                            and T.supports_prefix_compute_reuse(self.cfg))
+                        else 0)
+        if self._spec_k and self.plan is None:
+            self._verify_step = jax.jit(make_verify_step(self.model))
         if self.paged:
             if self.max_seq % self.page_size:
                 raise ValueError(
@@ -265,16 +314,33 @@ class ServingEngine:
         self._reserved = set()           # slots mid-(chunked)-prefill
         self.queue: List[Request] = []
         self.done: List[Request] = []
+        # CONCURRENT peak across the per-replica pools: per-pool peaks
+        # occur on different ticks, so summing them would overstate the
+        # true footprint (and understate effective_slots_gain)
+        from repro.cache import ConcurrentPeakTracker
+        self._peak_tracker = ConcurrentPeakTracker()
+        for pager in self._all_pagers():
+            self._peak_tracker.attach(pager.pool)
         # stats ------------------------------------------------------------
         self.decode_steps = 0
+        self.decode_tokens = 0            # tokens emitted by decode ticks
         self._occupied_step_sum = 0       # sum over steps of occupied slots
+        self._decode_slot_steps = 0       # active slots at decode DISPATCH:
+        #   each dispatched slot emits >= 1 token, so decode_tokens over
+        #   this is exactly 1.0 for plain decode and > 1 when speculative
+        #   verify accepts drafts ( _occupied_step_sum is sampled after
+        #   retirement, so it undercounts the step that finishes a slot)
         self.prefill_batch_sizes: List[int] = []  # always 1 per admission
         self.prefill_token_counts: List[int] = []
         self.prefill_chunk_counts: List[int] = []  # chunks per admission
         self.ticks = 0
+        self.spec_steps = 0               # decode ticks that ran a verify
+        self.spec_proposed = 0            # drafted tokens offered to verify
+        self.spec_accepted = 0            # drafted tokens accepted
         # host wall-clock per engine phase, accumulated across ticks
         self.phase_time = {"admission": 0.0, "prefill": 0.0, "decode": 0.0}
         self._prefill_window = 0.0        # prefill seconds inside _admit()
+        self._t_window = time.perf_counter()  # stats window start (reset_stats)
 
     # -- public API --------------------------------------------------------
     def submit(self, req: Request):
@@ -333,12 +399,22 @@ class ServingEngine:
         copy-on-write rates cover only the measured window."""
         self.done = []
         self.decode_steps = 0
+        self.decode_tokens = 0
         self._occupied_step_sum = 0
+        self._decode_slot_steps = 0
         self.prefill_batch_sizes = []
         self.prefill_token_counts = []
         self.prefill_chunk_counts = []
         self.ticks = 0
+        self.spec_steps = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
         self.phase_time = {"admission": 0.0, "prefill": 0.0, "decode": 0.0}
+        # requests already in flight keep their pre-reset t_submit; the
+        # stats() wall window clamps to this timestamp so the measured
+        # window never reaches back before the reset
+        self._t_window = time.perf_counter()
+        self._peak_tracker.reset()
         for pager in self._all_pagers():
             p = pager.pool
             p.prefix_queries = p.prefix_hits = 0
@@ -379,6 +455,9 @@ class ServingEngine:
             agg["prefill_hit_rate"] = (
                 agg["prefill_compute_hits"]
                 / max(agg["prefill_admissions"], 1))
+            # per-pool peaks occur on different ticks: report the tracked
+            # CONCURRENT peak, not the sum of per-pool maxima
+            agg["peak_blocks_in_use"] = self._peak_tracker.peak
             dense_blocks = self.slots * (self.max_seq // self.page_size)
             agg["effective_slots_gain"] = (
                 dense_blocks / max(agg["peak_blocks_in_use"], 1))
@@ -390,7 +469,11 @@ class ServingEngine:
         reqs = self.done
         gen = sum(len(r.out_tokens) for r in reqs)
         if reqs:
-            wall = max(r.t_done for r in reqs) - min(r.t_submit for r in reqs)
+            # clamp submits to the measurement-window start: a request
+            # active across reset_stats() keeps its pre-reset t_submit,
+            # which must not stretch the post-reset wall window
+            t0 = min(max(r.t_submit, self._t_window) for r in reqs)
+            wall = max(r.t_done for r in reqs) - t0
         else:
             wall = 0.0
         cap = max(self.decode_steps * self.slots, 1)
@@ -399,6 +482,16 @@ class ServingEngine:
             "requests": len(reqs),
             "gen_tokens": gen,
             "decode_steps": self.decode_steps,
+            "decode_tokens": self.decode_tokens,
+            # per-slot tokens per decode step: exactly 1.0 for plain
+            # decode, > 1 when speculation is accepting drafted tokens
+            "tokens_per_step": (self.decode_tokens
+                                / max(self._decode_slot_steps, 1)),
+            "spec_steps": self.spec_steps,
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
+            "acceptance_rate": (self.spec_accepted
+                                / max(self.spec_proposed, 1)),
             "slot_occupancy": self._occupied_step_sum / cap,
             "throughput_tok_s": gen / wall if wall > 0 else 0.0,
             "ttft_s": [r.t_first - r.t_submit for r in reqs],
@@ -472,7 +565,11 @@ class ServingEngine:
         are the reused=0 special case of the same path."""
         plen = len(req.prompt)
         if self._pager is not None:
-            ap = self._pager.admit(slot, req.prompt, req.max_new_tokens,
+            # speculation headroom: a verify window may write K positions
+            # past the plain-decode frontier before rolling back, so the
+            # growth reservation covers them
+            ap = self._pager.admit(slot, req.prompt,
+                                   req.max_new_tokens + self._spec_k,
                                    reuse_compute=self._suffix_reuse)
             if ap is None:
                 return False
@@ -500,7 +597,10 @@ class ServingEngine:
             tok = int(np.asarray(nxt)[0])  # host sync: prefill has run
             self._prefill_window += time.perf_counter() - t0
         self.prefill_batch_sizes.append(1)
-        self.prefill_token_counts.append(toks.shape[1])
+        # unpadded suffix tokens, same unit as plan-mode admission:
+        # bucket padding is a jit-shape artifact, not prefill work
+        self.prefill_token_counts.append(
+            slen if self._pager is not None else plen)
         self.prefill_chunk_counts.append(1)
         self._activate(req, slot, tok)
         return True
@@ -516,7 +616,7 @@ class ServingEngine:
         reused = 0
         if self._pagers is not None:
             ap = self._pagers[replica].admit(local, req.prompt,
-                                             req.max_new_tokens,
+                                             req.max_new_tokens + self._spec_k,
                                              reuse_compute=self._suffix_reuse)
             if ap is None:
                 return False
@@ -599,7 +699,21 @@ class ServingEngine:
         scatter replaces the whole slot; paged idle slots carry unmapped
         block tables, so their page writes drop).  Plan mode decodes each
         spatial replica independently (its slot partition, its stage
-        walk)."""
+        walk).
+
+        With speculation on, a tick whose drafter finds something runs a
+        batched VERIFY step instead: every slot scores a (K+1)-token
+        window (current token + drafts) in one step, commits the
+        accepted prefix, and rolls the rejected tail back."""
+        act = self.active                 # sampled at dispatch (see init)
+        if self._spec_k:
+            drafts = self._draft_all()
+            if drafts is not None:
+                self._decode_verify(drafts)
+                self.decode_steps += 1
+                self._decode_slot_steps += act
+                self._occupied_step_sum += self.active
+                return
         if self._pf is None:
             bt = None
             if self._pager is not None:
@@ -635,7 +749,144 @@ class ServingEngine:
             for arr, a, b in arrs:
                 self._collect_decoded(arr, a, b, now)
         self.decode_steps += 1
+        self._decode_slot_steps += act
         self._occupied_step_sum += self.active
+
+    # ---- speculative decode ----------------------------------------------
+    def _draft_all(self):
+        """Prompt-lookup drafts for every active slot, or None when this
+        tick should run plain decode instead (no slot drafted anything,
+        or some active slot's window would run past the slot cache).  A
+        slot's draft is clamped so accepted tokens can never overshoot
+        its remaining budget."""
+        K = self._spec_k
+        drafts: Dict[int, List[int]] = {}
+        any_draft = False
+        for slot in range(self.slots):
+            req = self._slot_req[slot]
+            if req is None:
+                continue
+            if int(self._pos[slot]) + K > self.max_seq - 2:
+                # the window would write past the last position the gold
+                # decode ever writes (max_seq - 2): plain-decode this tick
+                return None
+            # accepting all K drafts emits K+1 tokens: cap at the budget
+            budget = min(K, req.max_new_tokens - len(req.out_tokens) - 1)
+            ctx = np.concatenate([req.prompt,
+                                  np.asarray(req.out_tokens, np.int32)])
+            d = ngram_draft(ctx, budget)
+            drafts[slot] = d
+            any_draft = any_draft or bool(d)
+        return drafts if any_draft else None
+
+    def _prepare_verify_writes(self, pager, first: int, last: int, sw: int):
+        """Before a verify step: make every window position's block
+        writable for every active slot (boundary blocks allocate, a
+        shared or registered block copy-on-writes — only possible at the
+        first window position; the rest of the window grows fresh
+        blocks)."""
+        for slot in range(first, last):
+            if self._slot_req[slot] is None:
+                continue
+            pos = int(self._pos[slot])
+            for j in range(sw):
+                cow = pager.prepare_decode(slot - first, pos + j)
+                if cow is not None:
+                    src, dst = cow
+                    if self._pager is not None:
+                        self._cache = self._copy_pages(
+                            self._cache, jnp.int32(src), jnp.int32(dst))
+                    else:
+                        r, _ = self.plan.replica_of_slot(slot)
+                        self._caches[r] = self._copy_pages(
+                            self._caches[r], jnp.int32(src), jnp.int32(dst))
+
+    def _decode_verify(self, drafts: Dict[int, List[int]]):
+        """One speculative tick: write + score each slot's (K+1)-token
+        window in a single batched step, then accept the longest prefix
+        of drafts the target model agrees with (greedy verify), roll the
+        rejected tail back, and continue from the last accepted token.
+        Slots that drafted nothing degenerate to plain decode (their
+        window is just the current token plus ignored padding)."""
+        sw = self._spec_k + 1
+        window = np.zeros((self.slots, sw), np.int32)
+        window[:, 0] = self._cur[:, 0]
+        for slot, d in drafts.items():
+            if d:
+                window[slot, 1:1 + len(d)] = d
+        if self._pf is None:
+            bt = None
+            if self._pager is not None:
+                self._prepare_verify_writes(self._pager, 0, self.slots, sw)
+                bt = jnp.asarray(self._pager.table_matrix())
+            outs, self._cache = self._verify_step(
+                self.params, self._cache, jnp.asarray(window),
+                jnp.asarray(self._pos), bt)
+            now = time.perf_counter()
+            self._collect_verified(window, np.asarray(outs), drafts,
+                                   0, self.slots, now)
+        else:
+            pending = []
+            for r in range(self.plan.n_replicas):
+                a, b = self.plan.replica_range(r)
+                if not any(self._slot_req[s] is not None
+                           for s in range(a, b)):
+                    continue
+                bt = None
+                if self._pagers is not None:
+                    self._prepare_verify_writes(self._pagers[r], a, b, sw)
+                    bt = jnp.asarray(self._pagers[r].table_matrix())
+                outs, self._caches[r] = self._rt.verify_step(
+                    self.params, self._caches[r],
+                    jnp.asarray(window[a:b]),
+                    jnp.asarray(self._pos[a:b]), bt)
+                pending.append((outs, a, b))
+            arrs = [(np.asarray(o), a, b) for o, a, b in pending]
+            now = time.perf_counter()
+            for arr, a, b in arrs:
+                self._collect_verified(window, arr, drafts, a, b, now)
+        self.spec_steps += 1
+
+    def _collect_verified(self, window, outs, drafts, a: int, b: int,
+                          now: float):
+        """Greedy acceptance per slot: position j's argmax is what a
+        sequential decode would emit after consuming window[0..j], so the
+        emitted prefix extends exactly while each argmax equals the next
+        drafted token (and is not EOS) — accepted streams are therefore
+        bit-identical to the one-shot greedy stream."""
+        for slot in range(a, b):
+            req = self._slot_req[slot]
+            if req is None:
+                continue
+            d = drafts.get(slot, [])
+            pos = int(self._pos[slot])
+            row = outs[slot - a]
+            emitted: List[int] = []
+            j = 0
+            while True:
+                tok = int(row[j])
+                emitted.append(tok)
+                if req.eos_token is not None and tok == req.eos_token:
+                    break
+                if j < len(d) and int(window[slot, j + 1]) == tok:
+                    j += 1
+                else:
+                    break
+            m = len(emitted)
+            pager, local = self._pager_of(slot)
+            if pager is not None:
+                # the step wrote the window's K/V at pos..pos+K: keep the
+                # accepted inputs' chain, then roll the rejected tail back
+                for i in range(m):
+                    pager.note_written(local, int(window[slot, i]), pos + i)
+                pager.rollback(local, pos + m)
+            self._pos[slot] = pos + m    # dense engines just rewind here
+            req.out_tokens.extend(emitted)
+            self._cur[slot, 0] = emitted[-1]
+            self.decode_tokens += m
+            self.spec_proposed += len(d)
+            self.spec_accepted += m - 1
+            self._maybe_retire(slot, now)
 
     def _collect_decoded(self, arr, a: int, b: int, now: float):
         for slot in range(a, b):
@@ -652,6 +903,7 @@ class ServingEngine:
             tok = int(arr[slot - a, 0])
             req.out_tokens.append(tok)
             self._cur[slot, 0] = tok
+            self.decode_tokens += 1
             self._maybe_retire(slot, now)
 
     def _maybe_retire(self, slot: int, now: float):

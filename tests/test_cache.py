@@ -180,6 +180,75 @@ def test_deferred_admission_does_not_inflate_reuse_counters():
     assert m.pool.prefix_queries == 3 and m.pool.prefix_hits == 2
 
 
+def test_never_fits_raise_restores_reuse_counters():
+    """Regression: the PoolExhausted raise is still 'no admission
+    happened' — its registry lookups must not count, exactly like the
+    deferral path, or a never-fits request permanently skews the
+    reported reuse_hit_rate."""
+    m = _mgr(slots=2, max_seq=32, page=4, blocks=4)
+    m.admit(0, np.arange(1, 9), max_new_tokens=0)   # 2 full blocks
+    m.commit(0)
+    m.release_slot(0)                               # parked in the LRU
+    q0, h0 = m.pool.prefix_queries, m.pool.prefix_hits
+    with pytest.raises(PoolExhausted):
+        # same prefix: the lookup HITS both blocks before the raise
+        m.admit(1, np.arange(1, 9), max_new_tokens=9)
+    assert m.pool.prefix_queries == q0 and m.pool.prefix_hits == h0
+
+
+def test_rollback_releases_rejected_tail_blocks():
+    """Speculative reject path: rollback truncates the chain to the
+    accepted position, releases blocks wholly past it back to the pool,
+    and returns them to the slot's growth reservation — decode can
+    regrow over the same positions."""
+    m = _mgr(slots=1, max_seq=16, page=4, blocks=8)
+    m.admit(0, np.asarray([1, 2]), max_new_tokens=10)
+    m.commit(0)
+    # a verify window writes positions 2..5 (current token + 3 drafts):
+    # position 4 crosses into a fresh boundary block
+    for pos in range(2, 6):
+        m.prepare_decode(0, pos)
+    assert m.tables[0].n_mapped == 2
+    used = m.pool.blocks_in_use
+    reserved = m.tables[0].reserved
+    m.note_written(0, 7, 2)                  # one accepted input token
+    m.rollback(0, 3)                         # tail 3..5 rejected
+    tb = m.tables[0]
+    assert tb.chain == [1, 2, 7]
+    assert int(tb.blocks[0]) >= 0            # accepted block kept
+    assert int(tb.blocks[1]) == -1           # rejected boundary block freed
+    assert m.pool.blocks_in_use == used - 1
+    assert tb.reserved == reserved + 1       # growth returned to reserve
+    assert tb.hashes == []                   # no full block in the chain
+    # decode regrows over the rolled-back positions
+    for pos, tok in zip(range(3, 6), [8, 9, 10]):
+        m.prepare_decode(0, pos)
+        m.note_written(0, tok, pos)
+    assert int(m.tables[0].blocks[1]) >= 0
+    assert tb.chain == [1, 2, 7, 8, 9, 10]
+    assert len(tb.hashes) == 1               # block 0 filled and hashed
+
+
+def test_rollback_never_releases_accepted_or_shared_blocks():
+    """Rollback keeps every block at or below the accepted position —
+    including registered prompt blocks another slot still shares."""
+    m = _mgr(slots=2, max_seq=16, page=4, blocks=8)
+    m.admit(0, np.arange(1, 9))              # 2 full registered blocks
+    m.commit(0)
+    m.admit(1, np.arange(1, 9))              # shares both
+    m.commit(1)
+    shared = [int(b) for b in m.tables[1].blocks[:2]]
+    # slot 1 runs a verify window at 8..10 and rejects everything past 9
+    for pos in range(8, 11):
+        m.prepare_decode(1, pos)
+    m.note_written(1, 30, 8)
+    m.rollback(1, 9)
+    assert [int(b) for b in m.tables[1].blocks[:2]] == shared
+    assert all(m.pool.refcount[b] == 2 for b in shared)
+    assert int(m.tables[1].blocks[2]) >= 0   # holds accepted position 8
+    assert m.tables[1].chain == list(range(1, 9)) + [30]
+
+
 def test_admit_reuse_compute_reports_suffix_and_tables():
     """A warm admission with reuse_compute=True skips the matched prefix
     (keeping the last prompt token — its hidden state makes the first

@@ -174,6 +174,94 @@ def test_prefix_cache_flag_disables_reuse_end_to_end():
     assert st["blocks_cached"] == 0                  # no LRU parking
 
 
+def test_cache_stats_report_concurrent_peak_across_replicas():
+    """Regression: two replica pools peaking on DIFFERENT ticks must
+    report the concurrent maximum, not the sum of per-pool peaks (which
+    would overstate the footprint and understate the slots gain)."""
+    from repro.plan import lower_serving, uniform_plan
+    cfg4 = reduced(REGISTRY["yi-6b"], layers=4)
+    model = build_model(cfg4)
+    params = model.init(jax.random.key(0))
+    plan = uniform_plan(cfg4.num_groups, 2, n_microbatches=2)
+    eng = ServingEngine(model, params, slots=2, max_seq=32,
+                        plan=lower_serving(plan, slots=2, chunk=4),
+                        paged=True, page_size=4)
+    assert len(eng._pagers) == 2
+    p = np.arange(1, 9, dtype=np.int32)              # 2 blocks at page 4
+    # replica 0 peaks (2 blocks), then fully releases ...
+    eng._pagers[0].admit(0, p, max_new_tokens=0)
+    eng._pagers[0].commit(0)
+    eng._pagers[0].release_slot(0)
+    # ... and only afterwards does replica 1 peak (2 blocks)
+    eng._pagers[1].admit(0, np.arange(20, 28, dtype=np.int32),
+                         max_new_tokens=0)
+    eng._pagers[1].commit(0)
+    st = eng.cache_stats()
+    # concurrent peak is 2; summing the per-pool maxima would say 4
+    assert st["peak_blocks_in_use"] == 2
+    dense_blocks = eng.slots * (eng.max_seq // eng.page_size)
+    assert st["effective_slots_gain"] == pytest.approx(dense_blocks / 2)
+
+
+def test_reset_stats_clamps_wall_window_to_reset_time():
+    """Regression: a request still active across reset_stats() keeps its
+    pre-reset t_submit; the post-reset wall window must start at the
+    reset, or throughput_tok_s is understated by the whole warmup."""
+    cfg, model, params = setup()
+    eng = ServingEngine(model, params, slots=1, max_seq=48)
+    eng.submit(Request(0, np.array([5, 6, 7], np.int32), 8))
+    eng.tick()                                    # request is now active
+    eng._slot_req[0].t_submit -= 50.0             # pretend a long warmup
+    eng.reset_stats()
+    eng.run()
+    st = eng.stats()
+    # pre-fix the wall window spans the backdated 50 s: throughput would
+    # be ~gen/50; post-fix the window starts at the reset
+    assert st["throughput_tok_s"] > st["gen_tokens"] / 10.0
+
+
+def test_prefill_token_counts_unpadded_and_speculative_stats_keys():
+    """prefill_token_counts reports UNPADDED prompt tokens (bucket
+    padding is a jit-shape artifact, not work), and stats() carries the
+    speculative-decode keys: tokens_per_step is exactly 1.0 with
+    speculation off and > 1.0 when drafts are being accepted."""
+    cfg, model, params = setup()
+    prompt = np.array([4, 5, 4, 5, 4, 5, 4], np.int32)   # repetitive
+    off = ServingEngine(model, params, slots=2, max_seq=64)
+    off.submit(Request(0, prompt.copy(), 10))
+    off.run()
+    assert off.prefill_token_counts == [len(prompt)]     # not the bucket
+    st = off.stats()
+    assert st["tokens_per_step"] == 1.0
+    assert st["spec_steps"] == 0 and st["acceptance_rate"] == 0.0
+
+    on = ServingEngine(model, params, slots=2, max_seq=64, speculate=3)
+    on.submit(Request(0, prompt.copy(), 10))
+    on.run()
+    st = on.stats()
+    assert st["spec_steps"] > 0
+    assert st["spec_accepted"] > 0
+    assert st["tokens_per_step"] > 1.0
+    assert 0.0 < st["acceptance_rate"] <= 1.0
+    assert st["decode_tokens"] == st["gen_tokens"] - 1   # first token is
+    #                                                      prefill's
+    # same stream with and without speculation (greedy verify)
+    assert on.done[0].out_tokens == off.done[0].out_tokens
+
+
+def test_speculation_gates_off_for_non_decomposable_families():
+    """Families whose state cannot rewind a rejected tail (SSM mixers
+    here) silently disable speculation rather than corrupt state."""
+    cfg = reduced(REGISTRY["xlstm-125m"], layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    eng = ServingEngine(model, params, slots=1, max_seq=32, speculate=4)
+    assert eng._spec_k == 0
+    eng.submit(Request(0, np.array([1, 2, 1, 2, 1], np.int32), 5))
+    eng.run()
+    assert eng.stats()["spec_steps"] == 0
+
+
 def test_admission_does_not_change_active_slots_next_token():
     """Admitting a request mid-stream must not perturb the token stream of
     already-active slots (no full-batch re-prefill, no position reset)."""

@@ -651,3 +651,108 @@ def test_plan_parity_across_families(arch, layers):
     if any(b.ffn == "moe" for b in cfg.block_pattern):
         # MoE capacity is per-call: chunking must have auto-disabled
         assert eng.prefill_chunk_counts == [1] * len(STAGGERED)
+
+# ---------------------------------------------------------------------------
+# speculative decode (prompt-lookup drafting + batched greedy verify) —
+# same gold standard: speculation must be a pure latency optimisation
+# ---------------------------------------------------------------------------
+
+SPEC_PROMPTS = [  # repetitive prompts so the n-gram drafter engages
+    (np.array([5, 6, 7, 5, 6, 7, 5, 6], np.int32), 12, 0),
+    (np.array([1, 2, 1, 2, 1, 2, 1], np.int32), 12, 0),
+    (np.array([9, 8, 9, 8, 9, 8], np.int32), 10, 2),
+    (np.array([3, 3, 3, 3, 3], np.int32), 8, 3),
+]
+
+
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("speculate", [2, 4])
+def test_speculative_parity_monolithic(paged, speculate):
+    """Greedy verify accepts a drafted token only where it equals what
+    plain decode would emit, so every stream is bit-identical to the
+    one-shot gold decode — while covering >1 token per decode step."""
+    cfg, model, params = build()
+    golds = [gold_decode(model, params, p, mn, 64)
+             for p, mn, _ in SPEC_PROMPTS]
+    kw = {"paged": True, "page_size": 4} if paged else {}
+    eng = run_staggered(model, params, slots=2, plan=SPEC_PROMPTS,
+                        speculate=speculate, **kw)
+    got = {r.uid: r.out_tokens for r in eng.done}
+    for uid, gold in enumerate(golds):
+        assert got[uid] == gold, f"paged={paged} K={speculate} uid={uid}"
+    st = eng.stats()
+    assert st["spec_steps"] > 0                  # speculation engaged ...
+    assert st["spec_accepted"] > 0
+    assert st["tokens_per_step"] > 1.0           # ... and paid off
+    assert st["acceptance_rate"] > 0.0
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_speculative_parity_plan_replicas(paged):
+    """Plan-driven engines verify per spatial replica (each replica's
+    slot partition scores its own (K+1)-token window) and stay
+    gold-identical with speculation on."""
+    from repro.plan import uniform_plan
+    cfg, model, params = build(layers=4)
+    golds = [gold_decode(model, params, p, mn, 64)
+             for p, mn, _ in SPEC_PROMPTS]
+    plan = uniform_plan(cfg.num_groups, 2, n_microbatches=2)
+    kw = {"paged": True, "page_size": 4} if paged else {}
+    eng = run_plan_staggered(model, params, plan, slots=4, chunk=4,
+                             sched=SPEC_PROMPTS, speculate=3, **kw)
+    got = {r.uid: r.out_tokens for r in eng.done}
+    for uid, gold in enumerate(golds):
+        assert got[uid] == gold, f"paged={paged} uid={uid}"
+    st = eng.stats()
+    assert st["spec_steps"] > 0
+    assert st["tokens_per_step"] > 1.0
+
+
+def test_speculative_eos_mid_window_stops_stream():
+    """EOS emitted from inside an accepted window retires the request at
+    the EOS token: no accepted-but-past-EOS tokens leak into the output,
+    and the other slot's stream is unaffected."""
+    cfg, model, params = build()
+    p0, mn0 = SPEC_PROMPTS[0][0], SPEC_PROMPTS[0][1]
+    g0 = gold_decode(model, params, p0, mn0, 64)
+    eos = g0[3]                                  # force EOS four tokens in
+    g0_eos = gold_decode(model, params, p0, mn0, 64, eos=eos)
+    p1, mn1 = SPEC_PROMPTS[1][0], SPEC_PROMPTS[1][1]
+    g1 = gold_decode(model, params, p1, mn1, 64)
+    eng = ServingEngine(model, params, slots=2, max_seq=64, speculate=4,
+                        paged=True, page_size=4)
+    eng.submit(Request(0, p0, mn0, eos_token=eos))
+    eng.submit(Request(1, p1, mn1))
+    done = {r.uid: r.out_tokens for r in eng.run()}
+    assert done[0] == g0_eos and done[0][-1] == eos
+    assert done[1] == g1
+
+
+def test_speculative_rollback_keeps_pool_consistent():
+    """After a speculative run every rejected-tail block went back to the
+    pool: retiring all requests leaves zero blocks in use and the freed
+    capacity re-admits a fresh request that still decodes gold."""
+    cfg, model, params = build()
+    eng = run_staggered(model, params, slots=2, plan=SPEC_PROMPTS,
+                        speculate=4, paged=True, page_size=4)
+    assert eng.stats()["spec_steps"] > 0
+    pool = eng._pager.pool
+    assert pool.blocks_in_use == 0
+    p = np.array([7, 7, 7, 7], np.int32)
+    gold = gold_decode(model, params, p, 6, 64)
+    eng.submit(Request(9, p, 6))
+    eng.run()
+    assert {r.uid: r.out_tokens for r in eng.done}[9] == gold
+
+
+def test_prefill_token_counts_match_plan_engine_unpadded():
+    """Monolithic engines report UNPADDED prompt tokens per admission —
+    identical to the plan engine's per-chunk exact accounting over the
+    same schedule (the jit pad bucket is a shape artifact, not work)."""
+    from repro.plan import uniform_plan
+    cfg, model, params = build(layers=4)
+    mono = run_staggered(model, params, slots=2)
+    assert mono.prefill_token_counts == [3, 9, 5, 2]
+    plan = uniform_plan(cfg.num_groups, 2, n_microbatches=2)
+    peng = run_plan_staggered(model, params, plan, slots=2, chunk=4)
+    assert mono.prefill_token_counts == peng.prefill_token_counts
