@@ -158,6 +158,7 @@ def smoke_sections(sections, json_path: str = "", seed: int = 0) -> int:
             else os.getcwd(), "BENCH_serving.json")
         try:
             bench = serving_bench_summary(seed=seed)
+            os.makedirs(os.path.dirname(bench_path), exist_ok=True)
             with open(bench_path, "w") as f:
                 json.dump(bench, f, indent=2)
             print(f"[smoke] wrote {bench_path}")

@@ -389,14 +389,179 @@ def _spec_rows(s: dict) -> List[Tuple[str, float, str]]:
              f"step_reduction={s['step_reduction']:.2f}")]
 
 
+def overlap_sweep(arch: str = "yi-6b", *, slots: int = 2, requests: int = 2,
+                  new_tokens: int = 100, max_seq: int = 128,
+                  page_size: int = 4, repeats: int = 5,
+                  seed: int = 0) -> dict:
+    """Sync vs async (overlapped dispatch/drain) legs over one fixed
+    decode-heavy request set on paged engines.  Token parity between the
+    legs is ASSERTED (the delayed drain re-times the host readback, never
+    the streams); the payload reports each leg's throughput plus its
+    ``host_sync`` share of the phase clock — the host time the async leg
+    takes off the critical path.  CI gates ``async_speedup > 1`` — the
+    median of paired per-round sync/async wall ratios.
+
+    Defaults keep ``requests == slots``: with a queue, the async leg's
+    one-tick-late retirement delays the next admission, which measures
+    scheduling churn rather than the dispatch/drain overlap itself (and
+    drowns the win in re-admission noise on CPU CI)."""
+    import jax
+
+    from repro.configs import REGISTRY, reduced
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = reduced(REGISTRY[arch], layers=1)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(seed)
+    # short prompts, long generations: the decode loop dominates, which
+    # is exactly where dispatch/drain overlap pays
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(3, 8))).astype(np.int32)
+               for _ in range(requests)]
+
+    def run_leg(name, ov):
+        eng = ServingEngine(model, params, slots=slots, max_seq=max_seq,
+                            paged=True, page_size=page_size, overlap=ov)
+        # warmup: compile prefill + decode outside the measured window
+        eng.submit(Request(-1, np.arange(1, 6, dtype=np.int32), 2))
+        eng.run()
+        # best-of-2 drives per leg per round: a single ~0.1 s drive is
+        # exposed to scheduler hiccups bigger than the effect under test
+        best = None
+        for _ in range(2):
+            eng.reset_stats()
+            wall = _drive_submissions(eng, prompts, new_tokens)
+            if best is None or wall < best[0]:
+                best = (wall, {r.uid: list(r.out_tokens)
+                               for r in eng.done}, eng.stats())
+        wall, toks, st = best
+        streams[name] = toks
+        pt = st["phase_time_s"]
+        return {"wall_s": wall,
+                "throughput_tok_s": st["gen_tokens"] / wall,
+                "decode_s": pt["decode"],
+                "host_sync_s": pt["host_sync"],
+                "host_sync_frac": pt["host_sync"] / max(
+                    sum(v for k, v in pt.items() if k != "host_sync"),
+                    1e-9)}
+
+    legs = {}
+    streams = {}
+    ratios = []
+    # PAIRED rounds: each round runs sync then async back-to-back and
+    # contributes one wall ratio; the median ratio cancels machine-load
+    # drift on a shared CI runner far better than comparing two
+    # independently-noisy best-of walls.  Per-leg payloads keep the best
+    # wall across rounds.  Collect garbage up front so an in-process run
+    # after other sweeps doesn't eat collection pauses mid-drive.
+    import gc
+    gc.collect()
+    for _ in range(max(repeats, 1)):
+        round_walls = {}
+        for name, ov in (("sync", False), ("async", True)):
+            leg = run_leg(name, ov)
+            round_walls[name] = leg["wall_s"]
+            if name not in legs or leg["wall_s"] < legs[name]["wall_s"]:
+                legs[name] = leg
+        ratios.append(round_walls["sync"] / max(round_walls["async"], 1e-9))
+    speedup = float(np.median(ratios))
+    assert streams["async"] == streams["sync"], (
+        "overlapped runtime diverged from sync token streams")
+    return {
+        "arch": arch, "slots": slots, "requests": requests,
+        "new_tokens": new_tokens, "page_size": page_size, "parity": True,
+        "throughput_sync_tok_s": legs["sync"]["throughput_tok_s"],
+        "throughput_async_tok_s": legs["async"]["throughput_tok_s"],
+        "async_speedup": speedup,
+        "host_sync_sync_s": legs["sync"]["host_sync_s"],
+        "host_sync_async_s": legs["async"]["host_sync_s"],
+        "host_sync_frac_sync": legs["sync"]["host_sync_frac"],
+        "host_sync_frac_async": legs["async"]["host_sync_frac"],
+        "wall_sync_s": legs["sync"]["wall_s"],
+        "wall_async_s": legs["async"]["wall_s"],
+    }
+
+
+def _overlap_rows(s: dict) -> List[Tuple[str, float, str]]:
+    name = f"serving/overlap/{s['arch']}/slots{s['slots']}-p{s['page_size']}"
+    return [(name, s["wall_async_s"] * 1e6,
+             f"parity=Y tok_s_async={s['throughput_async_tok_s']:.1f} "
+             f"tok_s_sync={s['throughput_sync_tok_s']:.1f} "
+             f"speedup={s['async_speedup']:.2f}x "
+             f"host_sync_frac={s['host_sync_frac_async']:.2f}/"
+             f"{s['host_sync_frac_sync']:.2f}")]
+
+
+def int8_kv_sweep(arch: str = "yi-6b", *, slots: int = 2, requests: int = 6,
+                  new_tokens: int = 8, max_seq: int = 64,
+                  page_size: int = 4, seed: int = 0) -> dict:
+    """fp vs int8 block pools over one request set: reports the
+    effective-capacity multiplier from ``stats()["cache"]`` (int8 payload
+    + per-row f32 scale vs the fp row — CI gates ``>= 1.9``) and each
+    leg's throughput.  int8 legs complete every budget; token identity is
+    bounded-error, not bit-exact (see tests/test_kernels.py)."""
+    import jax
+
+    from repro.configs import REGISTRY, reduced
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = reduced(REGISTRY[arch], layers=1)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(3, 10))).astype(np.int32)
+               for _ in range(requests)]
+
+    legs = {}
+    for name in ("fp", "int8"):
+        eng = ServingEngine(model, params, slots=slots, max_seq=max_seq,
+                            paged=True, page_size=page_size, kv_dtype=name)
+        eng.submit(Request(-1, np.arange(1, 6, dtype=np.int32), 2))
+        eng.run()
+        eng.reset_stats()
+        wall = _drive_submissions(eng, prompts, new_tokens)
+        st = eng.stats()
+        assert all(len(r.out_tokens) == new_tokens for r in eng.done)
+        legs[name] = {"wall_s": wall,
+                      "throughput_tok_s": st["gen_tokens"] / wall,
+                      "kv_capacity_x": st["cache"]["kv_capacity_x"],
+                      "kv_dtype": st["cache"]["kv_dtype"]}
+    return {
+        "arch": arch, "slots": slots, "requests": requests,
+        "new_tokens": new_tokens, "page_size": page_size,
+        "kv_capacity_x": legs["int8"]["kv_capacity_x"],
+        "throughput_fp_tok_s": legs["fp"]["throughput_tok_s"],
+        "throughput_int8_tok_s": legs["int8"]["throughput_tok_s"],
+        "wall_fp_s": legs["fp"]["wall_s"],
+        "wall_int8_s": legs["int8"]["wall_s"],
+    }
+
+
+def _int8_rows(s: dict) -> List[Tuple[str, float, str]]:
+    name = f"serving/int8-kv/{s['arch']}/slots{s['slots']}-p{s['page_size']}"
+    return [(name, s["wall_int8_s"] * 1e6,
+             f"kv_capacity_x={s['kv_capacity_x']:.2f} "
+             f"tok_s_int8={s['throughput_int8_tok_s']:.1f} "
+             f"tok_s_fp={s['throughput_fp_tok_s']:.1f}")]
+
+
 def serving_bench_summary(seed: int = 0) -> dict:
     """The ``BENCH_serving.json`` payload: the headline serving numbers —
     throughput, cold vs warm TTFT, prefix-hit rate, block/token savings
     from the shared-prefix compute-reuse sweep — plus the speculative
     sweep under ``"speculative"`` (parity-asserted; CI gates
-    ``tokens_per_step_on > 1``)."""
+    ``tokens_per_step_on > 1``), the sync-vs-async runtime comparison
+    under ``"overlap"`` (parity-asserted; CI gates async throughput
+    strictly above sync), and the int8 block-pool figures under
+    ``"int8_kv"`` (CI gates ``kv_capacity_x >= 1.9``)."""
     return {**prefix_reuse_sweep(seed=seed),
-            "speculative": speculative_sweep(seed=seed)}
+            "speculative": speculative_sweep(seed=seed),
+            "overlap": overlap_sweep(seed=seed),
+            "int8_kv": int8_kv_sweep(seed=seed)}
 
 
 def _serving_plans(cfg, slots: int, chunk: int, seq: int, batch: int):
@@ -515,6 +680,8 @@ def rows(seed: int = 0) -> List[Tuple[str, float, str]]:
     out += _paged_rows(paged_serving_sweep(seed=seed))
     out += _prefix_rows(prefix_reuse_sweep(seed=seed))
     out += _spec_rows(speculative_sweep(seed=seed))
+    out += _overlap_rows(overlap_sweep(seed=seed))
+    out += _int8_rows(int8_kv_sweep(seed=seed))
     return out
 
 
@@ -531,4 +698,6 @@ def smoke_rows(seed: int = 0) -> List[Tuple[str, float, str]]:
         requests=6, new_tokens=4, slots=2, page_sizes=(4,), seed=seed))
     rows += _prefix_rows(prefix_reuse_sweep(requests=4, seed=seed))
     rows += _spec_rows(speculative_sweep(requests=4, seed=seed))
+    rows += _overlap_rows(overlap_sweep(seed=seed))
+    rows += _int8_rows(int8_kv_sweep(requests=4, seed=seed))
     return rows

@@ -209,6 +209,35 @@ def shard_map(f, *, mesh, in_specs, out_specs,
                   check_rep=False)
 
 
+def donating_jit(fun, *, donate_argnums=(), static_argnames=None):
+    """``jax.jit(fun, donate_argnums=...)`` that stays quiet on backends
+    where donation is unimplemented.
+
+    CPU jax (the 0.4.x floor) cannot donate input buffers and emits a
+    "Some donated buffers were not usable" UserWarning on every call; on
+    TPU the same donation halves the peak cache footprint of the serving
+    hot loop.  Callers treat donation as a hint: every donated argument is
+    rebound to the returned value, so the suppressed warning is the only
+    backend-visible difference."""
+    import warnings
+
+    kwargs = {}
+    if static_argnames is not None:
+        kwargs["static_argnames"] = static_argnames
+    jitted = jax.jit(fun, donate_argnums=tuple(donate_argnums), **kwargs)
+
+    @functools.wraps(fun)
+    def call(*args, **kw):
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message=".*[Dd]onated buffers.*",
+                category=UserWarning)
+            return jitted(*args, **kw)
+
+    call.lower = jitted.lower
+    return call
+
+
 def pcast_varying(x, axes):
     """``lax.pcast(x, axes, to="varying")`` where the varying-axes system
     exists; identity on older jax (full-manual shard_map has no replication
@@ -227,5 +256,5 @@ __all__ = [
     "prefetch_grid_spec",
     "make_mesh", "make_mesh_on", "use_mesh", "make_abstract_mesh",
     "mesh_axis_size",
-    "shard_map", "pcast_varying", "PartitionSpec",
+    "shard_map", "pcast_varying", "PartitionSpec", "donating_jit",
 ]

@@ -24,21 +24,48 @@ from repro.backend import compat
 
 _PATHS = ("pallas", "interpret", "ref")
 
+# every dispatchable kernel, by override name (REPRO_KERNELS=name=path)
+_KERNELS = ("matmul", "flash_attention", "paged_attention",
+            "paged_prefill_attention", "paged_verify_attention",
+            "fused_paged_decode", "layernorm", "linear_scan")
 
-def kernel_path() -> str:
-    """The active kernel path ("pallas" | "interpret" | "ref").
 
-    ``REPRO_KERNELS`` must be one of "auto" / "pallas" / "interpret" /
-    "ref"; anything else raises (a typo silently falling back to the jnp
-    oracle would fake a kernel benchmark)."""
-    mode = os.environ.get("REPRO_KERNELS", "auto")
-    if mode == "auto":
+def _resolve(path: str) -> str:
+    if path == "auto":
         return "pallas" if compat.on_tpu() else "ref"
-    if mode not in _PATHS:
-        raise ValueError(
-            f"REPRO_KERNELS={mode!r} is not a valid kernel path; choose "
-            f"one of {('auto',) + _PATHS}")
-    return mode
+    return path
+
+
+def kernel_path(kernel: str = None) -> str:
+    """The active path ("pallas" | "interpret" | "ref") for ``kernel``
+    (or the global default when ``kernel`` is None).
+
+    ``REPRO_KERNELS`` is a comma-separated list: one bare base path
+    ("auto" / "pallas" / "interpret" / "ref") plus optional per-kernel
+    overrides ``name=path`` (e.g. "ref,fused_paged_decode=interpret" runs
+    everything on the oracle but the fused decode kernel under the
+    interpreter).  Anything else raises (a typo silently falling back to
+    the jnp oracle would fake a kernel benchmark)."""
+    mode = os.environ.get("REPRO_KERNELS", "auto")
+    base, overrides = "auto", {}
+    for part in mode.split(","):
+        part = part.strip()
+        name, sep, val = part.partition("=")
+        if sep:
+            if name not in _KERNELS or val not in ("auto",) + _PATHS:
+                raise ValueError(
+                    f"REPRO_KERNELS override {part!r} is not valid; paths "
+                    f"are {('auto',) + _PATHS} and kernel names are "
+                    f"{_KERNELS}")
+            overrides[name] = val
+        else:
+            if part not in ("auto",) + _PATHS:
+                raise ValueError(
+                    f"REPRO_KERNELS={part!r} is not a valid kernel path; "
+                    f"choose one of {('auto',) + _PATHS}, or a per-kernel "
+                    f"override 'name=path' with name in {_KERNELS}")
+            base = part
+    return _resolve(overrides.get(kernel, base))
 
 
 # ---------------------------------------------------------------------------
@@ -49,7 +76,7 @@ def use_flash(cfg, q, k) -> bool:
     """Whether the model's attention should route to the fused kernel:
     only when shapes tile cleanly to the MXU and we're not on the oracle
     path.  (The jnp fallback is itself XLA-fused on CPU.)"""
-    if kernel_path() == "ref":
+    if kernel_path("flash_attention") == "ref":
         return False
     b, s, h, d = q.shape
     t = k.shape[1]
@@ -66,7 +93,7 @@ def dispatch_flash_attention(q, k, v, *, q_pos, k_pos, k_valid=None,
     vk = jnp.swapaxes(v, 1, 2)
     if k_valid is None:
         k_valid = jnp.ones((kk.shape[2],), jnp.int32)
-    path = kernel_path()
+    path = kernel_path("flash_attention")
     if path == "ref":
         out = R.flash_attention_ref(qk, kk, vk, q_pos, k_pos, k_valid,
                                     causal=causal, window=window,
@@ -85,13 +112,14 @@ def dispatch_flash_attention(q, k, v, *, q_pos, k_pos, k_valid=None,
 # ---------------------------------------------------------------------------
 
 def dispatch_paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
-                             softcap=0.0):
+                             softcap=0.0, k_scales=None, v_scales=None):
     """Decode attention through per-slot block tables over a physical
     page pool.  Layout adapter: q arrives in model layout (B, 1, H, D)
     and leaves as (B, 1, H*D); pages are (N, P, Hkv, D); block_tables
     (B, NB) int32 may carry out-of-range entries for unmapped logical
     blocks (clipped here — rows past ``lengths`` are masked regardless);
-    lengths (B,) counts each slot's valid tokens.
+    lengths (B,) counts each slot's valid tokens.  k_scales/v_scales:
+    (N, P, Hkv) f32 dequant scales on int8 pools (None on fp).
 
     The pallas path additionally requires MXU-friendly tiling (head_dim
     % 128, page % 8); off-tile shapes fall back to the jnp reference,
@@ -103,12 +131,13 @@ def dispatch_paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     qg = q[:, 0].reshape(b, hk, h // hk, d)
     n = k_pages.shape[0]
     bt = jnp.clip(block_tables, 0, n - 1)
-    path = kernel_path()
-    if path == "ref" or (path == "pallas"
-                         and not (d % 128 == 0
-                                  and k_pages.shape[1] % 8 == 0)):
+    path = kernel_path("paged_attention")
+    if path == "ref" or k_scales is not None \
+            or (path == "pallas" and not (d % 128 == 0
+                                          and k_pages.shape[1] % 8 == 0)):
         out = R.paged_attention_ref(qg, k_pages, v_pages, bt, lengths,
-                                    softcap=softcap)
+                                    softcap=softcap, k_scales=k_scales,
+                                    v_scales=v_scales)
     else:
         from repro.kernels.paged_attention import paged_attention_grouped
         out = paged_attention_grouped(qg, k_pages, v_pages, bt, lengths,
@@ -117,8 +146,51 @@ def dispatch_paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     return out.reshape(b, s, h * d)
 
 
+def dispatch_fused_paged_decode(q, k_new, v_new, k_pages, v_pages,
+                                block_tables, positions, *, theta,
+                                softcap=0.0, k_scales=None, v_scales=None):
+    """Fused RoPE + page-write + decode attention: one kernel, one HBM
+    round-trip over the pool instead of three (rope-write / gather /
+    attend).  Layout adapter: q arrives UN-roped in model layout
+    (B, 1, H, D), k_new/v_new as the slot's un-roped fresh projections
+    (B, 1, Hkv, D); positions (B,) is each slot's write position (tokens
+    already cached — the length mask runs at positions+1).  Returns
+    ``(out (B, 1, H*D), k_pages, v_pages, k_scales, v_scales)`` — the
+    pool buffers with the fresh (quantized, on int8 pools) row written.
+
+    The pallas path requires MXU-friendly tiling (head_dim % 128,
+    page % 8; int8 pools additionally page % 32 for the (32, 128) int8
+    tile); off-tile shapes fall back to the jnp reference, which the
+    parity tests pin the kernel against."""
+    from repro.kernels import ref as R
+    b, s, h, d = q.shape
+    assert s == 1, f"fused paged decode is a one-token path, got {s}"
+    hk = k_pages.shape[2]
+    qg = q[:, 0].reshape(b, hk, h // hk, d)
+    kn = k_new[:, 0]
+    vn = v_new[:, 0]
+    n = k_pages.shape[0]
+    bt = jnp.clip(block_tables, 0, n - 1)
+    page = k_pages.shape[1]
+    path = kernel_path("fused_paged_decode")
+    tiled = d % 128 == 0 and page % 8 == 0 \
+        and (k_scales is None or page % 32 == 0)
+    if path == "ref" or (path == "pallas" and not tiled):
+        out, kp, vp, ks, vs = R.fused_paged_decode_ref(
+            qg, kn, vn, k_pages, v_pages, bt, positions, theta=theta,
+            softcap=softcap, k_scales=k_scales, v_scales=v_scales)
+    else:
+        from repro.kernels.paged_attention import fused_paged_decode_grouped
+        out, kp, vp, ks, vs = fused_paged_decode_grouped(
+            qg, kn, vn, k_pages, v_pages, bt, positions, theta=theta,
+            softcap=softcap, k_scales=k_scales, v_scales=v_scales,
+            interpret=(path == "interpret"))
+    return out.reshape(b, s, h * d), kp, vp, ks, vs
+
+
 def dispatch_paged_prefill_attention(q, k_pages, v_pages, block_tables,
-                                     offset, *, softcap=0.0):
+                                     offset, *, softcap=0.0, k_scales=None,
+                                     v_scales=None):
     """Suffix/chunked prefill attention through per-slot block tables:
     the fresh chunk's K/V are already written into the pool, and every
     query attends the full mapped prefix (shared + fresh) under a causal
@@ -138,13 +210,15 @@ def dispatch_paged_prefill_attention(q, k_pages, v_pages, block_tables,
     qg = jnp.swapaxes(q, 1, 2).reshape(b, hk, g, s, d)
     n = k_pages.shape[0]
     bt = jnp.clip(block_tables, 0, n - 1)
-    path = kernel_path()
-    if path == "ref" or (path == "pallas"
-                         and not (d % 128 == 0
-                                  and k_pages.shape[1] % 8 == 0
-                                  and (g * s) % 8 == 0)):
+    path = kernel_path("paged_prefill_attention")
+    if path == "ref" or k_scales is not None \
+            or (path == "pallas" and not (d % 128 == 0
+                                          and k_pages.shape[1] % 8 == 0
+                                          and (g * s) % 8 == 0)):
         out = R.paged_prefill_attention_ref(qg, k_pages, v_pages, bt,
-                                            offset, softcap=softcap)
+                                            offset, softcap=softcap,
+                                            k_scales=k_scales,
+                                            v_scales=v_scales)
     else:
         from repro.kernels.paged_attention import (
             paged_prefill_attention_grouped)
@@ -156,7 +230,8 @@ def dispatch_paged_prefill_attention(q, k_pages, v_pages, block_tables,
 
 
 def dispatch_paged_verify_attention(q, k_pages, v_pages, block_tables,
-                                    offset, *, softcap=0.0):
+                                    offset, *, softcap=0.0, k_scales=None,
+                                    v_scales=None):
     """Speculative-verify attention through per-slot block tables: each
     slot's S-token verify window (current token + drafted tokens) is
     already written into the pool and attends its full mapped prefix
@@ -177,7 +252,8 @@ def dispatch_paged_verify_attention(q, k_pages, v_pages, block_tables,
     n = k_pages.shape[0]
     bt = jnp.clip(block_tables, 0, n - 1)
     out = R.paged_verify_attention_ref(qg, k_pages, v_pages, bt, offset,
-                                       softcap=softcap)
+                                       softcap=softcap, k_scales=k_scales,
+                                       v_scales=v_scales)
     return jnp.swapaxes(out.reshape(b, hk * g, s, d), 1, 2).reshape(
         b, s, h * d)
 
@@ -188,7 +264,7 @@ def dispatch_paged_verify_attention(q, k_pages, v_pages, block_tables,
 
 def dispatch_matmul(x, w, bias=None, *, activation="none", out_dtype=None):
     from repro.kernels import ref as R
-    path = kernel_path()
+    path = kernel_path("matmul")
     if path == "ref":
         return R.matmul_fused_ref(x, w, bias, activation=activation,
                                   out_dtype=out_dtype)
@@ -204,7 +280,7 @@ def dispatch_matmul(x, w, bias=None, *, activation="none", out_dtype=None):
 
 def dispatch_layernorm(x, scale, bias=None, *, kind="rmsnorm", eps=1e-6):
     from repro.kernels import ref as R
-    path = kernel_path()
+    path = kernel_path("layernorm")
     if path == "ref":
         return R.norm_onepass_ref(x, scale, bias, kind=kind, eps=eps)
     from repro.kernels.layernorm import norm_onepass
@@ -219,13 +295,13 @@ def dispatch_layernorm(x, scale, bias=None, *, kind="rmsnorm", eps=1e-6):
 def use_scan_kernel() -> bool:
     """Whether recurrent models should flatten into the Pallas linear-scan
     kernel (vs the model-side chunked associative scan on the ref path)."""
-    return kernel_path() != "ref"
+    return kernel_path("linear_scan") != "ref"
 
 
 def dispatch_linear_scan(a, b, h0=None):
     """a, b: (N, S, F).  Returns all states (N, S, F)."""
     from repro.kernels import ref as R
-    path = kernel_path()
+    path = kernel_path("linear_scan")
     if path == "ref":
         return R.linear_scan_ref(a, b, h0)
     from repro.kernels.linear_scan import linear_scan
@@ -235,6 +311,7 @@ def dispatch_linear_scan(a, b, h0=None):
 __all__ = [
     "kernel_path", "use_flash", "use_scan_kernel",
     "dispatch_flash_attention", "dispatch_paged_attention",
+    "dispatch_fused_paged_decode",
     "dispatch_paged_prefill_attention", "dispatch_paged_verify_attention",
     "dispatch_matmul", "dispatch_layernorm", "dispatch_linear_scan",
 ]

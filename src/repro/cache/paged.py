@@ -300,17 +300,27 @@ class PagedCacheManager:
     """
 
     def __init__(self, slots: int, max_seq: int, page_size: int,
-                 num_blocks: int, *, prefix_cache: bool = True):
+                 num_blocks: int, *, prefix_cache: bool = True,
+                 kv_dtype: str = "fp", kv_capacity_ratio: float = 1.0):
         if max_seq % page_size:
             raise ValueError(
                 f"max_seq={max_seq} must be a multiple of "
                 f"page_size={page_size} (block tables tile the sequence)")
+        if kv_dtype not in ("fp", "int8"):
+            raise ValueError(f"kv_dtype={kv_dtype!r} must be 'fp' or 'int8'")
         self.slots = slots
         self.max_seq = max_seq
         self.page_size = page_size
         self.blocks_per_slot = max_seq // page_size
         self.prefix_cache = prefix_cache  # False: no registry lookups, no
         #                                   registration, no LRU parking
+        # storage dtype of the device pool this manager fronts ("int8":
+        # quantized rows + per-row scales) and the tokens-per-byte
+        # multiplier over the fp layout it buys
+        # (``transformer.paged_kv_capacity_ratio``)
+        self.kv_dtype = kv_dtype
+        self.kv_capacity_ratio = (1.0 if kv_dtype == "fp"
+                                  else float(kv_capacity_ratio))
         self.pool = BlockPool(num_blocks, page_size)
         self.tables = [BlockTable(np.full((self.blocks_per_slot,), -1,
                                           np.int32))
@@ -620,4 +630,6 @@ class PagedCacheManager:
                                  / max(p.prefill_admissions, 1)),
             "reused_prefill_tokens": p.reused_prefill_tokens,
             "suffix_prefill_tokens": p.suffix_prefill_tokens,
+            "kv_dtype": self.kv_dtype,
+            "kv_capacity_x": self.kv_capacity_ratio,
         }

@@ -178,6 +178,218 @@ def paged_prefill_attention_grouped(q, k_pages, v_pages, block_tables,
       q, k_pages, v_pages)
 
 
+def _fused_decode_kernel(bt_ref, pos_ref, q_ref, kn_ref, vn_ref,
+                         kp_ref, vp_ref, *rest,
+                         scale, softcap, theta, page, nb, quantized):
+    """RoPE + page-write + decode attention, one pass over the pool.
+
+    Scalar-prefetch: block tables (B, NB) + write positions (B,).  The
+    pool blocks arrive through the same ``bt[b, j]`` index maps as the
+    unfused kernel; the OUTPUT pool blocks alias the inputs
+    (``input_output_aliases``) with a j-constant index map pinned to the
+    slot's write page ``bt[b, pos // page]`` — each (slot, head) writes
+    exactly one page (the input content with the fresh roped row
+    substituted) and every other page rides through the alias untouched.
+    RoPE runs in-kernel as ``x * cos + (x @ R) * sin`` with the
+    rotate-half matrix R built from 2D iotas, so the fresh K and the
+    query never round-trip HBM between rotation and attention.  On int8
+    pools (``quantized``) the page blocks carry per-row scales: pages
+    dequantize before the matmul and the fresh row quantizes in-kernel."""
+    if quantized:
+        (ks_ref, vs_ref, o_ref, ko_ref, vo_ref, kso_ref, vso_ref,
+         acc_ref, m_ref, l_ref) = rest
+    else:
+        o_ref, ko_ref, vo_ref, acc_ref, m_ref, l_ref = rest
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    pos = pos_ref[b]
+    jt = jnp.minimum(pos // page, nb - 1)
+    row_t = pos % page
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    d = q_ref.shape[-1]
+    half = d // 2
+    # RoPE tables, full-D layout: column c rotates at frequency
+    # theta^(-2*(c % half)/d) — the ref's inv_freq duplicated per half.
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, d), 1)
+    inv = jnp.exp((col % half).astype(jnp.float32)
+                  * jnp.float32(-2.0 * math.log(theta) / d))
+    ang = pos.astype(jnp.float32) * inv
+    cosf, sinf = jnp.cos(ang), jnp.sin(ang)
+    # rotate-half as a matmul: R[c+half, c] = -1, R[c-half, c] = +1
+    rr = jax.lax.broadcasted_iota(jnp.int32, (d, d), 0)
+    rc = jax.lax.broadcasted_iota(jnp.int32, (d, d), 1)
+    rot = jnp.where(rr == rc + half, -1.0, 0.0) \
+        + jnp.where(rr + half == rc, 1.0, 0.0)
+
+    def rope(x):
+        return x * cosf + jax.lax.dot_general(
+            x, rot, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * sinf
+
+    qr = rope(q_ref[0, 0].astype(jnp.float32))           # (G, D)
+    knr = rope(kn_ref[0].astype(jnp.float32))            # (1, D)
+    vn = vn_ref[0].astype(jnp.float32)                   # (1, D)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (page, 1), 0)
+    fresh = (j == jt) & (rows == row_t)                  # (page, 1)
+
+    if quantized:
+        k_amax = jnp.max(jnp.abs(knr), axis=1, keepdims=True)
+        v_amax = jnp.max(jnp.abs(vn), axis=1, keepdims=True)
+        k_sc = jnp.where(k_amax > 0.0, k_amax / 127.0, 1.0)   # (1, 1)
+        v_sc = jnp.where(v_amax > 0.0, v_amax / 127.0, 1.0)
+        knq = jnp.round(knr / k_sc).astype(jnp.int8)
+        vnq = jnp.round(vn / v_sc).astype(jnp.int8)
+        # attention reads what the cache will hold: the dequantized row
+        k = jnp.where(fresh, knq.astype(jnp.float32) * k_sc,
+                      kp_ref[0, :, 0].astype(jnp.float32) * ks_ref[0])
+        v = jnp.where(fresh, vnq.astype(jnp.float32) * v_sc,
+                      vp_ref[0, :, 0].astype(jnp.float32) * vs_ref[0])
+
+        @pl.when(j == jt)
+        def _write_q():
+            ko_ref[0, :, 0] = jnp.where(fresh, knq, kp_ref[0, :, 0])
+            vo_ref[0, :, 0] = jnp.where(fresh, vnq, vp_ref[0, :, 0])
+            kso_ref[0] = jnp.where(fresh, k_sc, ks_ref[0])
+            vso_ref[0] = jnp.where(fresh, v_sc, vs_ref[0])
+    else:
+        cdt = kp_ref.dtype
+        knc = knr.astype(cdt)
+        vnc = vn.astype(cdt)
+        k = jnp.where(fresh, knc.astype(jnp.float32),
+                      kp_ref[0, :, 0].astype(jnp.float32))
+        v = jnp.where(fresh, vnc.astype(jnp.float32),
+                      vp_ref[0, :, 0].astype(jnp.float32))
+
+        @pl.when(j == jt)
+        def _write():
+            ko_ref[0, :, 0] = jnp.where(fresh, knc, kp_ref[0, :, 0])
+            vo_ref[0, :, 0] = jnp.where(fresh, vnc, vp_ref[0, :, 0])
+
+    s = jax.lax.dot_general(qr, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    ok = kpos <= pos              # length mask at pos+1 (fresh row included)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _done():
+        l = l_ref[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0, ...] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("theta", "softcap", "interpret"))
+def fused_paged_decode_grouped(q, k_new, v_new, k_pages, v_pages,
+                               block_tables, positions, *, theta,
+                               softcap=0.0, k_scales=None, v_scales=None,
+                               interpret=False):
+    """Fused RoPE + page-write + decode attention over the paged pool.
+
+    q: (B, Hkv, G, D) un-roped; k_new/v_new: (B, Hkv, D) un-roped fresh
+    K/V; k_pages/v_pages: (N, P, Hkv, D); block_tables: (B, NB) int32
+    (in-range); positions: (B,) int32 write position per slot.
+    k_scales/v_scales: (N, P, Hkv) f32 on int8 pools (None on fp).
+    Returns (out (B, Hkv, G, D), k_pages, v_pages, k_scales, v_scales) —
+    the pool buffers are aliased in/out, so callers MUST rebind them.
+    """
+    b, hk, g, d = q.shape
+    n, page, _, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    quantized = k_scales is not None
+
+    def page_in(b_, h_, j, bt, ps):
+        return (bt[b_, j], 0, h_, 0)
+
+    def page_out(b_, h_, j, bt, ps):
+        return (bt[b_, jnp.minimum(ps[b_] // page, nb - 1)], 0, h_, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda b_, h_, j, bt, ps: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, 1, d), lambda b_, h_, j, bt, ps: (b_, h_, 0)),
+        pl.BlockSpec((1, 1, d), lambda b_, h_, j, bt, ps: (b_, h_, 0)),
+        pl.BlockSpec((1, page, 1, d), page_in),
+        pl.BlockSpec((1, page, 1, d), page_in),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda b_, h_, j, bt, ps: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, page, 1, d), page_out),
+        pl.BlockSpec((1, page, 1, d), page_out),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, hk, g, d), q.dtype),
+        jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+        jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+    ]
+    # alias indices count the two scalar-prefetch operands: inputs are
+    # (bt, positions, q, k_new, v_new, k_pages, v_pages[, ks, vs])
+    aliases = {5: 1, 6: 2}
+    operands = [q, k_new, v_new, k_pages, v_pages]
+    if quantized:
+        sspec_in = pl.BlockSpec((1, page, 1),
+                                lambda b_, h_, j, bt, ps: (bt[b_, j], 0, h_))
+        sspec_out = pl.BlockSpec(
+            (1, page, 1),
+            lambda b_, h_, j, bt, ps: (
+                bt[b_, jnp.minimum(ps[b_] // page, nb - 1)], 0, h_))
+        in_specs += [sspec_in, sspec_in]
+        out_specs += [sspec_out, sspec_out]
+        out_shape += [jax.ShapeDtypeStruct(k_scales.shape, k_scales.dtype),
+                      jax.ShapeDtypeStruct(v_scales.shape, v_scales.dtype)]
+        aliases.update({7: 3, 8: 4})
+        operands += [k_scales, v_scales]
+
+    grid_spec = compat.prefetch_grid_spec(
+        num_scalar_prefetch=2,           # block tables + positions
+        grid=(b, hk, nb),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            compat.vmem_scratch((g, d), jnp.float32),
+            compat.vmem_scratch((g, 1), jnp.float32),
+            compat.vmem_scratch((g, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_fused_decode_kernel, scale=scale,
+                               softcap=softcap, theta=theta, page=page,
+                               nb=nb, quantized=quantized)
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), positions.astype(jnp.int32),
+      *operands)
+    if quantized:
+        return outs
+    out, kp, vp = outs
+    return out, kp, vp, None, None
+
+
 @functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
 def paged_attention_grouped(q, k_pages, v_pages, block_tables, lengths, *,
                             softcap=0.0, interpret=False):

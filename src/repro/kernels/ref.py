@@ -10,6 +10,53 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def decode_rope_ref(x, positions, theta):
+    """Standard (non-M) RoPE, op-for-op the model layer's math.
+
+    x: (B, S, H, D); positions: (B, S).  This mirrors
+    ``layers.apply_rope``'s no-mrope branch exactly — same op order, same
+    f32 casts — so the fused decode path that ropes inside the kernel can
+    be pinned bit-identical to the layer-side rotation on fp paths.
+    """
+    b, s, h, d = x.shape
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    angles = positions.astype(jnp.float32)[..., None] * inv   # (B,S,d/2)
+    cos = jnp.cos(angles)[:, :, None, :]                      # (B,S,1,d/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def quantize_int8_rows(x):
+    """Symmetric per-row int8 quantization over the last axis.
+
+    x: (..., D) -> (q int8 (..., D), scale f32 (...,)).  Zero rows get
+    scale 1 so dequant is exact (all-zero stays all-zero)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+    q = jnp.round(xf / scale[..., None]).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    """Inverse of ``quantize_int8_rows``: (..., D) int8 + (...,) f32."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def _gather_pages(k_pages, v_pages, bt, k_scales, v_scales, b, nb, p, hk, d):
+    """Gather (and dequantize, when scales are given) pool pages through
+    clipped block tables into logical-ordered (B, NB*P, Hkv, D) f32."""
+    k = k_pages[bt].reshape(b, nb * p, hk, d).astype(jnp.float32)
+    v = v_pages[bt].reshape(b, nb * p, hk, d).astype(jnp.float32)
+    if k_scales is not None:
+        k = k * k_scales[bt].reshape(b, nb * p, hk)[..., None]
+        v = v * v_scales[bt].reshape(b, nb * p, hk)[..., None]
+    return k, v
+
+
 def flash_attention_ref(q, k, v, q_pos, k_pos, k_valid, *, causal=True,
                         window=0, softcap=0.0):
     """q: (B,H,Sq,D), k/v: (B,Hkv,Skv,D) -> (B,H,Sq,D).  Plain softmax."""
@@ -38,7 +85,7 @@ def flash_attention_ref(q, k, v, q_pos, k_pos, k_valid, *, causal=True,
 
 
 def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
-                        softcap=0.0):
+                        softcap=0.0, k_scales=None, v_scales=None):
     """Decode attention over a paged KV cache, pure jnp.
 
     q: (B, Hkv, G, D) — one query token per slot, q heads grouped per kv
@@ -46,6 +93,8 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
     block_tables: (B, NB) int32 logical->physical map (entries >= N are
     unmapped: clipped to a garbage page and masked); lengths: (B,) valid
     tokens per slot (the query sits at position lengths-1).
+    k_scales/v_scales: (N, P, Hkv) f32 per-row dequant scales when the
+    pool holds int8 blocks (None on fp pools).
     Returns (B, Hkv, G, D).
 
     The gathered layout is logical-ordered, so key position == gather row
@@ -58,8 +107,8 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
     nb = block_tables.shape[1]
     dt = q.dtype
     bt = jnp.clip(block_tables, 0, n - 1)
-    k = k_pages[bt].reshape(b, nb * p, hk, d)         # (B, T, Hkv, D)
-    v = v_pages[bt].reshape(b, nb * p, hk, d)
+    k, v = _gather_pages(k_pages, v_pages, bt, k_scales, v_scales,
+                         b, nb, p, hk, d)             # (B, T, Hkv, D)
     s = jnp.einsum("bhgd,bthd->bhgt", q.astype(jnp.float32),
                    k.astype(jnp.float32)) / math.sqrt(d)
     if softcap > 0:
@@ -71,8 +120,58 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
     return out.astype(dt)
 
 
+def fused_paged_decode_ref(q, k_new, v_new, k_pages, v_pages, block_tables,
+                           positions, *, theta, softcap=0.0,
+                           k_scales=None, v_scales=None):
+    """RoPE + page-write + decode attention in one step, pure jnp — the
+    oracle for the fused Pallas decode kernel.
+
+    q: (B, Hkv, G, D) UN-roped grouped queries; k_new/v_new: (B, Hkv, D)
+    the slot's un-roped fresh K/V projection; k_pages/v_pages:
+    (N, P, Hkv, D) pool; block_tables: (B, NB) int32 (in-range — the
+    manager's sentinel rows point at the sink page); positions: (B,)
+    int32 write position per slot (= tokens already cached).
+    k_scales/v_scales: (N, P, Hkv) f32 on int8 pools (None on fp).
+
+    Composes exactly the unfused model-layer sequence: rope q and k_new
+    at ``positions`` (``decode_rope_ref`` — bit-identical to
+    ``layers.apply_rope``), scatter the fresh row into its page
+    (quantizing on int8 pools), then run ``paged_attention_ref`` at
+    ``lengths = positions + 1``.  Returns
+    (out (B, Hkv, G, D), k_pages, v_pages, k_scales, v_scales).
+    """
+    b, hk, g, d = q.shape
+    n, page = k_pages.shape[:2]
+    nb = block_tables.shape[1]
+    cdt = k_pages.dtype
+    pos_bs = positions[:, None]                       # (B, 1)
+    qr = decode_rope_ref(q.reshape(b, 1, hk * g, d), pos_bs,
+                         theta).reshape(b, hk, g, d)
+    kr = decode_rope_ref(k_new[:, None], pos_bs, theta)[:, 0]  # (B,Hkv,D)
+
+    blk = jnp.clip(positions // page, 0, nb - 1)
+    pages = jnp.take_along_axis(block_tables, blk[:, None], axis=1)[:, 0]
+    rows = positions % page
+    if k_scales is not None:
+        kq, ks = quantize_int8_rows(kr)
+        vq, vs = quantize_int8_rows(v_new)
+        k_pages = k_pages.at[pages, rows].set(kq, mode="drop")
+        v_pages = v_pages.at[pages, rows].set(vq, mode="drop")
+        k_scales = k_scales.at[pages, rows].set(ks, mode="drop")
+        v_scales = v_scales.at[pages, rows].set(vs, mode="drop")
+    else:
+        k_pages = k_pages.at[pages, rows].set(kr.astype(cdt), mode="drop")
+        v_pages = v_pages.at[pages, rows].set(v_new.astype(cdt),
+                                              mode="drop")
+    out = paged_attention_ref(qr, k_pages, v_pages, block_tables,
+                              positions + 1, softcap=softcap,
+                              k_scales=k_scales, v_scales=v_scales)
+    return out, k_pages, v_pages, k_scales, v_scales
+
+
 def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, offset,
-                                *, softcap=0.0):
+                                *, softcap=0.0, k_scales=None,
+                                v_scales=None):
     """Suffix/chunked prefill attention over a paged KV cache, pure jnp.
 
     q: (B, Hkv, G, S, D) — S fresh query tokens per slot sitting at
@@ -97,8 +196,8 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, offset,
     nb = block_tables.shape[1]
     dt = q.dtype
     bt = jnp.clip(block_tables, 0, n - 1)
-    k = k_pages[bt].reshape(b, nb * p, hk, d)         # (B, T, Hkv, D)
-    v = v_pages[bt].reshape(b, nb * p, hk, d)
+    k, v = _gather_pages(k_pages, v_pages, bt, k_scales, v_scales,
+                         b, nb, p, hk, d)             # (B, T, Hkv, D)
     sc = jnp.einsum("bhgsd,bthd->bhgst", q.astype(jnp.float32),
                     k.astype(jnp.float32)) / math.sqrt(d)
     if softcap > 0:
@@ -113,7 +212,8 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, offset,
 
 
 def paged_verify_attention_ref(q, k_pages, v_pages, block_tables, offset,
-                               *, softcap=0.0):
+                               *, softcap=0.0, k_scales=None,
+                               v_scales=None):
     """Speculative-verify attention over a paged KV cache, pure jnp.
 
     Identical to ``paged_prefill_attention_ref`` except ``offset`` is a
@@ -138,8 +238,8 @@ def paged_verify_attention_ref(q, k_pages, v_pages, block_tables, offset,
     nb = block_tables.shape[1]
     dt = q.dtype
     bt = jnp.clip(block_tables, 0, n - 1)
-    k = k_pages[bt].reshape(b, nb * p, hk, d)         # (B, T, Hkv, D)
-    v = v_pages[bt].reshape(b, nb * p, hk, d)
+    k, v = _gather_pages(k_pages, v_pages, bt, k_scales, v_scales,
+                         b, nb, p, hk, d)             # (B, T, Hkv, D)
     sc = jnp.einsum("bhgsd,bthd->bhgst", q.astype(jnp.float32),
                     k.astype(jnp.float32)) / math.sqrt(d)
     if softcap > 0:

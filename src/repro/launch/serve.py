@@ -125,7 +125,20 @@ def main(argv=None):
                          "bit-identical (0: disabled)")
     ap.add_argument("--no-speculate", action="store_const", const=0,
                     dest="speculate", help="force speculation off")
+    ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="async overlapped runtime: dispatch decode step "
+                         "N+1 before draining step N's tokens (bit-exact; "
+                         "falls back to sync with effective --speculate)")
+    ap.add_argument("--kv-dtype", default="fp", choices=("fp", "int8"),
+                    help="with --paged: K/V block-pool storage dtype; int8 "
+                         "adds per-row scales for >= 1.9x effective "
+                         "capacity (bounded-error token streams)")
     args = ap.parse_args(argv)
+
+    if args.kv_dtype != "fp" and not args.paged:
+        raise SystemExit("--kv-dtype int8 requires --paged: quantized K/V "
+                         "blocks live in the paged block pool")
 
     if args.prefix_cache and not args.paged:
         raise SystemExit("--prefix-cache requires --paged: prefix blocks "
@@ -145,7 +158,8 @@ def main(argv=None):
                         page_size=args.page_size,
                         num_blocks=args.num_blocks,
                         prefix_cache=prefix_cache,
-                        speculate=args.speculate)
+                        speculate=args.speculate,
+                        overlap=args.overlap, kv_dtype=args.kv_dtype)
     eos = None if args.eos < 0 else args.eos
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -173,6 +187,11 @@ def main(argv=None):
                       f" blocks_hit={c['prefix_hits']}")
         else:
             extra += ", prefix: off"
+    if c["layout"] == "paged" and c.get("kv_dtype", "fp") != "fp":
+        extra += (f", kv={c['kv_dtype']}"
+                  f" capacity_x={c['kv_capacity_x']:.1f}")
+    if args.overlap:
+        extra += ", overlap=" + ("on" if eng._overlap else "sync(spec)")
     if st["spec_steps"]:
         extra += (f", spec k={args.speculate}: "
                   f"tok_per_step={st['tokens_per_step']:.2f}"

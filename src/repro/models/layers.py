@@ -227,6 +227,42 @@ def ring_k_positions(last, W: int):
     return k_pos, k_pos >= 0
 
 
+def _paged_write(kv_cache, pages, rows, k, v):
+    """Scatter fresh K/V rows into pool pages, quantizing on int8 pools.
+
+    ``pages``/``rows`` index physical (page, row) per fresh token —
+    shapes (B,), (B, S), or (S,) matching ``k``/``v``'s leading dims; the
+    trailing dims are (Hkv, D).  Out-of-range pages drop the write.
+    Returns the new pool-leaf dict (scale leaves updated alongside the
+    int8 rows so dequant always sees matching data)."""
+    cdt = kv_cache["k_pages"].dtype
+    if "k_scales" in kv_cache:
+        from repro.kernels import ref as R
+        kq, ks = R.quantize_int8_rows(k)
+        vq, vs = R.quantize_int8_rows(v)
+        return {
+            "k_pages": kv_cache["k_pages"].at[pages, rows].set(
+                kq, mode="drop"),
+            "v_pages": kv_cache["v_pages"].at[pages, rows].set(
+                vq, mode="drop"),
+            "k_scales": kv_cache["k_scales"].at[pages, rows].set(
+                ks, mode="drop"),
+            "v_scales": kv_cache["v_scales"].at[pages, rows].set(
+                vs, mode="drop"),
+        }
+    return {"k_pages": kv_cache["k_pages"].at[pages, rows].set(
+                k.astype(cdt), mode="drop"),
+            "v_pages": kv_cache["v_pages"].at[pages, rows].set(
+                v.astype(cdt), mode="drop")}
+
+
+def _scale_kw(cache):
+    """Dequant-scale kwargs for the paged dispatch calls (empty on fp)."""
+    if "k_scales" in cache:
+        return {"k_scales": cache["k_scales"], "v_scales": cache["v_scales"]}
+    return {}
+
+
 def cross_kv(p, enc_out, cfg: ModelConfig):
     """Precompute cross-attention K/V from encoder output (cached once at
     prefill so decode steps skip the projections)."""
@@ -310,13 +346,25 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
         and getattr(cache_index, "ndim", 0) == 1       # (B,) slot positions
     if per_slot:
         pos_bs = offset[:, None] + jnp.arange(s)[None, :]         # (B,S)
+    # fused paged decode: RoPE + page-write + attention run as ONE kernel
+    # (``dispatch_fused_paged_decode``) when the step is a plain per-slot
+    # paged decode rotating at its own cache position — the rotation then
+    # happens in-kernel, so the early apply_rope below is skipped and q/k
+    # reach the dispatch un-roped.  Anything fancier (M-RoPE, explicit
+    # positions, verify windows, rope-free families) keeps the unfused
+    # sequence.
+    fuse_decode = (kv_cache is not None and "k_pages" in kv_cache
+                   and s == 1 and per_slot and kv_source is None
+                   and use_rope and cfg.rope_theta > 0
+                   and not cfg.mrope_sections and positions is None
+                   and not window and block_tables is not None)
     if positions is None:
         if per_slot:
             positions = pos_bs
         else:
             base = offset + jnp.arange(s)[None, :]
             positions = jnp.broadcast_to(base, (b, s))
-    if use_rope and cfg.rope_theta > 0:
+    if use_rope and cfg.rope_theta > 0 and not fuse_decode:
         q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
         if kv_source is None:
             k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
@@ -338,9 +386,26 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
                 "paged KV caches are addressed through block_tables "
                 "(per-slot decode or batch-1 suffix/chunk prefill)")
         page = kv_cache["k_pages"].shape[1]
-        cdt = kv_cache["k_pages"].dtype
         from repro.backend import dispatch as kops
-        if s == 1 and per_slot:
+        if s == 1 and per_slot and fuse_decode:
+            # ---- fused paged decode: RoPE (q and fresh k), the page
+            # write, and the attention gather run as one dispatch — one
+            # HBM round-trip over the pool instead of three.  Same
+            # length-masked logical-ordered semantics as the unfused
+            # path below (the ref composes exactly that sequence), so fp
+            # parity stays bit-exact.
+            out, nkp, nvp, nks, nvs = kops.dispatch_fused_paged_decode(
+                q, k, v, kv_cache["k_pages"], kv_cache["v_pages"],
+                block_tables, offset, theta=cfg.rope_theta,
+                softcap=cfg.attn_logit_softcap,
+                k_scales=kv_cache.get("k_scales"),
+                v_scales=kv_cache.get("v_scales"))
+            new_cache = {"k_pages": nkp, "v_pages": nvp}
+            if nks is not None:
+                new_cache["k_scales"] = nks
+                new_cache["v_scales"] = nvs
+            out = out.astype(dt)
+        elif s == 1 and per_slot:
             # ---- paged decode: the slot's fresh K/V lands in its
             # current page row (table lookup; out-of-range pages drop the
             # write, so idle slots riding along at fixed shape touch
@@ -353,14 +418,11 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
             pages = jnp.take_along_axis(block_tables, blk_idx[:, None],
                                         axis=1)[:, 0]
             rows = offset % page
-            new_kp = kv_cache["k_pages"].at[pages, rows].set(
-                k[:, 0].astype(cdt), mode="drop")
-            new_vp = kv_cache["v_pages"].at[pages, rows].set(
-                v[:, 0].astype(cdt), mode="drop")
-            new_cache = {"k_pages": new_kp, "v_pages": new_vp}
+            new_cache = _paged_write(kv_cache, pages, rows, k[:, 0], v[:, 0])
             out = kops.dispatch_paged_attention(
-                q, new_kp, new_vp, block_tables, offset + 1,
-                softcap=cfg.attn_logit_softcap).astype(dt)
+                q, new_cache["k_pages"], new_cache["v_pages"],
+                block_tables, offset + 1, softcap=cfg.attn_logit_softcap,
+                **_scale_kw(new_cache)).astype(dt)
         elif per_slot:
             # ---- paged speculative verify: each slot writes an S-token
             # window (current token + drafted tokens) at its own
@@ -380,14 +442,11 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
                 jnp.take_along_axis(block_tables,
                                     jnp.clip(blk, 0, nb - 1), axis=1), n)
             rows = pos_bs % page
-            new_kp = kv_cache["k_pages"].at[pages, rows].set(
-                k.astype(cdt), mode="drop")
-            new_vp = kv_cache["v_pages"].at[pages, rows].set(
-                v.astype(cdt), mode="drop")
-            new_cache = {"k_pages": new_kp, "v_pages": new_vp}
+            new_cache = _paged_write(kv_cache, pages, rows, k, v)
             out = kops.dispatch_paged_verify_attention(
-                q, new_kp, new_vp, block_tables, offset,
-                softcap=cfg.attn_logit_softcap).astype(dt)
+                q, new_cache["k_pages"], new_cache["v_pages"],
+                block_tables, offset, softcap=cfg.attn_logit_softcap,
+                **_scale_kw(new_cache)).astype(dt)
         else:
             # ---- paged suffix/chunk prefill: write the fresh chunk's
             # K/V straight into the pool (write_tables names each fresh
@@ -410,14 +469,11 @@ def multi_head_attention(p, x, cfg: ModelConfig, *, positions=None,
             # alias them onto the last real block, so map them to the
             # drop sentinel explicitly.
             phys = jnp.where(blk < nb, wt[0, jnp.clip(blk, 0, nb - 1)], n)
-            new_kp = kv_cache["k_pages"].at[phys, rows].set(
-                k[0].astype(cdt), mode="drop")
-            new_vp = kv_cache["v_pages"].at[phys, rows].set(
-                v[0].astype(cdt), mode="drop")
-            new_cache = {"k_pages": new_kp, "v_pages": new_vp}
+            new_cache = _paged_write(kv_cache, phys, rows, k[0], v[0])
             out = kops.dispatch_paged_prefill_attention(
-                q, new_kp, new_vp, block_tables, offset,
-                softcap=cfg.attn_logit_softcap).astype(dt)
+                q, new_cache["k_pages"], new_cache["v_pages"],
+                block_tables, offset, softcap=cfg.attn_logit_softcap,
+                **_scale_kw(new_cache)).astype(dt)
     else:
         W = kv_cache["k"].shape[1]
         cdt = kv_cache["k"].dtype

@@ -205,12 +205,15 @@ class Model:
                             factory=factory)
 
     def init_paged_cache(self, batch: int, max_seq: int, *, page_size: int,
-                         num_blocks: int, factory=None):
-        """Pool-backed slot cache: global-attention KV as physical pages,
-        everything else dense (see ``transformer.make_paged_cache``)."""
+                         num_blocks: int, factory=None,
+                         kv_dtype: str = "fp"):
+        """Pool-backed slot cache: global-attention KV as physical pages
+        (int8 rows + per-row scales under ``kv_dtype="int8"``), everything
+        else dense (see ``transformer.make_paged_cache``)."""
         return T.make_paged_cache(self.cfg, batch, max_seq,
                                   page_size=page_size,
-                                  num_blocks=num_blocks, factory=factory)
+                                  num_blocks=num_blocks, factory=factory,
+                                  kv_dtype=kv_dtype)
 
     def prefill(self, params, batch, max_seq: int):
         """Process the prompt; returns (logits_last, cache)."""

@@ -255,35 +255,71 @@ def has_paged_layers(cfg: ModelConfig) -> bool:
 
 def make_paged_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
                      page_size: int, num_blocks: int, dtype=None,
-                     factory=None):
+                     factory=None, kv_dtype: str = "fp"):
     """Decode cache where global-attention KV lives in a physical block
     pool instead of a dense per-slot reservation.
 
     Global-attn leaves become page pools shaped
-    ``(num_groups, num_blocks, page_size, kv_heads, head_dim)`` shared by
-    all ``batch`` slots and addressed through per-slot block tables
-    (``repro.cache.PagedCacheManager``); every other leaf — local-window
-    rings, mamba/mlstm/slstm state — keeps the dense
+    ``(num_groups, num_blocks + 1, page_size, kv_heads, head_dim)``
+    shared by all ``batch`` slots and addressed through per-slot block
+    tables (``repro.cache.PagedCacheManager``); every other leaf —
+    local-window rings, mamba/mlstm/slstm state — keeps the dense
     ``(num_groups, batch, ...)`` slot layout of ``make_cache`` (paging
     auto-disables for them).  The group axis stays leading, so the plan
     runtime's ``slice_cache_groups`` stage slicing works unchanged on
-    paged caches."""
+    paged caches.
+
+    The extra physical page is the **write sink**: the manager's
+    unmapped-block sentinel is ``num_blocks``, which indexes it — an
+    in-range page no table ever maps for reads, so code paths that
+    cannot *drop* a sentinel write (Pallas output index maps have no
+    drop mode) land it there harmlessly instead.  Capacity accounting
+    stays in ``num_blocks`` (the sink is never allocatable).
+
+    kv_dtype: "fp" stores K/V at ``dtype``; "int8" stores int8 rows
+    plus per-(row, kv-head) f32 dequant scales (``k_scales``/
+    ``v_scales`` leaves, shaped pool[:-1]) — ~``head_dim *
+    itemsize / (head_dim + 4)``× more tokens per byte
+    (``paged_kv_capacity_ratio``)."""
     dt = jnp.dtype(dtype or cfg.dtype)
     factory = factory or jnp.zeros
     if max_seq % page_size:
         raise ValueError(f"max_seq={max_seq} must be a multiple of "
                          f"page_size={page_size}")
+    if kv_dtype not in ("fp", "int8"):
+        raise ValueError(f"kv_dtype={kv_dtype!r} must be 'fp' or 'int8'")
     cache = {}
     for j, blk in enumerate(cfg.block_pattern):
         if _is_global_attn(blk.mixer):
-            shp = (cfg.num_groups, num_blocks, page_size,
+            shp = (cfg.num_groups, num_blocks + 1, page_size,
                    cfg.num_kv_heads, cfg.head_dim)
-            cache[f"b{j}"] = {"kv": {"k_pages": factory(shp, dt),
-                                     "v_pages": factory(shp, dt)}}
+            if kv_dtype == "int8":
+                cache[f"b{j}"] = {"kv": {
+                    "k_pages": factory(shp, jnp.int8),
+                    "v_pages": factory(shp, jnp.int8),
+                    "k_scales": factory(shp[:-1], jnp.float32),
+                    "v_scales": factory(shp[:-1], jnp.float32),
+                }}
+            else:
+                cache[f"b{j}"] = {"kv": {"k_pages": factory(shp, dt),
+                                         "v_pages": factory(shp, dt)}}
         else:
             cache[f"b{j}"] = _dense_block_leaves(cfg, blk, batch, max_seq,
                                                  0, dt, factory)
     return cache
+
+
+def paged_kv_capacity_ratio(cfg: ModelConfig, kv_dtype: str,
+                            dtype=None) -> float:
+    """Tokens-per-byte multiplier of a ``kv_dtype`` pool over the fp
+    layout at the same byte budget: int8 rows cost ``head_dim`` bytes
+    plus one f32 scale vs ``head_dim * itemsize`` fp bytes — 3.88× for
+    f32 / 1.94× for bf16 pools at head_dim 128."""
+    if kv_dtype == "fp":
+        return 1.0
+    dt = jnp.dtype(dtype or cfg.dtype)
+    d = cfg.head_dim
+    return (d * dt.itemsize) / float(d + 4)
 
 
 def slice_cache_groups(cache, first_group: int, n_groups: int):

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backend import compat
 from repro.models import transformer as T
 from repro.pipeline.executor import run_stage
 from repro.plan.ir import ExecutionPlan, ServingPlan
@@ -86,7 +87,9 @@ def make_stage_prefill(model, plan: ExecutionPlan, s: int,
             cfg, stage_params, hidden, cache=cache_sl, cache_index=pos_base,
             collect_state=True, attend_cache=cont)
         return y, T.merge_cache_groups(part_cache, new_sl, st.first_group)
-    return jax.jit(f)
+    # the caller rebinds its part_cache to the output every stage-step,
+    # so the input cache is donated (in-place update where supported)
+    return compat.donating_jit(f, donate_argnums=(1,))
 
 
 def make_stage_prefill_paged(model, plan: ExecutionPlan, s: int,
@@ -118,7 +121,9 @@ def make_stage_prefill_paged(model, plan: ExecutionPlan, s: int,
         new_view = T.merge_cache_groups(view, new_sl, st.first_group)
         new_paged, new_part = T.split_prefill_parts(new_view, replica_cache)
         return y, new_paged, new_part
-    return jax.jit(f)
+    # both the replica pool and the request's dense part are rebound by
+    # the caller each stage-step: donate both
+    return compat.donating_jit(f, donate_argnums=(1, 2))
 
 
 def make_prefill_finish(model) -> Callable:
@@ -277,8 +282,12 @@ class PlanRuntime:
         self.stage_fns_paged = {
             (s, cont): make_stage_prefill_paged(model, plan, s, cont)
             for s in range(plan.n_stages) for cont in (False, True)}
-        self.decode_step = jax.jit(make_plan_decode_step(model, plan))
-        self.verify_step = jax.jit(make_plan_verify_step(model, plan))
+        # the engine rebinds its replica cache to each step's output, so
+        # the input cache buffers are donated (dead on return)
+        self.decode_step = compat.donating_jit(
+            make_plan_decode_step(model, plan), donate_argnums=(1,))
+        self.verify_step = compat.donating_jit(
+            make_plan_verify_step(model, plan), donate_argnums=(1,))
         # chunking exactness gates (mirrors the engine's bucketing gates):
         # MoE capacity is per-call, so chunk-local routing would diverge
         # from the one-shot prefill; a prompt that wraps a sliding-window

@@ -48,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.backend import dispatch
+from repro.backend import compat, dispatch
 from repro.models.model import Model
 
 
@@ -154,6 +154,20 @@ class Request:
     slot: int = -1
 
 
+@dataclass(eq=False)
+class _Inflight:
+    """One dispatched-but-undrained decode step (overlap mode).
+
+    ``in_toks[slot]`` is the token whose K/V the step wrote — host-known
+    at dispatch only right after activation (the prefill's first token);
+    otherwise it is the PREVIOUS step's output and is filled in when that
+    step drains (always before this record's own drain)."""
+    arrs: List[Any]                   # [(next_tokens_device, a, b)]
+    entries: List[Any]                # [(slot, req, pos_written)]
+    in_toks: Dict[int, Optional[int]]
+    act: int                          # active slots at dispatch
+
+
 @dataclass
 class ServingEngine:
     """Continuous batching over persistent slot-indexed caches.
@@ -200,6 +214,22 @@ class ServingEngine:
     #                                  verify them in one batched step
     #                                  (greedy verify: bit-identical to
     #                                  one-shot decode); 0 = off
+    overlap: bool = False            # async runtime: decode step N+1 is
+    #                                  dispatched before step N's tokens
+    #                                  are read back (one-step-delayed
+    #                                  drain).  Token streams stay
+    #                                  bit-identical to sync mode; the
+    #                                  only scheduling difference is that
+    #                                  EOS/budget retirement frees a slot
+    #                                  one tick later.  Speculation needs
+    #                                  the drafts on host each tick, so an
+    #                                  effective speculate > 0 forces sync.
+    kv_dtype: str = "fp"             # "int8": paged K/V pools store
+    #                                  per-row symmetric int8 + f32 scale
+    #                                  — ~1.9x (bf16) / ~3.9x (f32) the
+    #                                  tokens per byte of the fp layout
+    #                                  (see stats()["cache"]
+    #                                  ["kv_capacity_x"]); fp is bit-exact
 
     def __post_init__(self):
         from repro.models import transformer as T
@@ -208,9 +238,16 @@ class ServingEngine:
         # the dispatch front door (repro.backend.dispatch) inside the model;
         # record the resolved path so serving stats name what actually ran.
         self.kernel_path = dispatch.kernel_path()
-        self.serve_step = jax.jit(make_serve_step(self.model))
-        self._prefill_slot = jax.jit(
-            make_prefill_slot_step(self.model, self.max_seq))
+        # every step that consumes the engine's cache donates it: the
+        # engine always rebinds ``self._cache``/``self._caches[r]`` to the
+        # step's output, so the input buffers are dead on return and the
+        # runtime may update pages in place (a no-op where the backend
+        # ignores donation — compat suppresses the advisory warning)
+        self.serve_step = compat.donating_jit(make_serve_step(self.model),
+                                              donate_argnums=(1,))
+        self._prefill_slot = compat.donating_jit(
+            make_prefill_slot_step(self.model, self.max_seq),
+            donate_argnums=(1,))
         if any(not b.mixer.startswith("attn") or b.ffn == "moe"
                for b in self.cfg.block_pattern):
             # pad tokens are only exactly neutral under causal attention +
@@ -244,16 +281,28 @@ class ServingEngine:
                             and T.supports_prefix_compute_reuse(self.cfg))
                         else 0)
         if self._spec_k and self.plan is None:
-            self._verify_step = jax.jit(make_verify_step(self.model))
+            self._verify_step = compat.donating_jit(
+                make_verify_step(self.model), donate_argnums=(1,))
+        if self.kv_dtype not in ("fp", "int8"):
+            raise ValueError(
+                f"kv_dtype={self.kv_dtype!r} must be 'fp' or 'int8'")
+        if self.kv_dtype != "fp" and not self.paged:
+            raise ValueError(
+                "kv_dtype='int8' quantizes paged K/V pools — pass "
+                "paged=True (and use a model with global-attention "
+                "layers to page)")
         if self.paged:
             if self.max_seq % self.page_size:
                 raise ValueError(
                     f"paged serving needs max_seq ({self.max_seq}) "
                     f"divisible by page_size ({self.page_size})")
-            self._prefill_suffix_paged = jax.jit(
-                make_prefill_suffix_paged_step(self.model, self.max_seq))
-            self._copy_pages = jax.jit(T.copy_cache_pages)
-            self._scatter_paged = jax.jit(T.scatter_prefill_part)
+            self._prefill_suffix_paged = compat.donating_jit(
+                make_prefill_suffix_paged_step(self.model, self.max_seq),
+                donate_argnums=(1,))
+            self._copy_pages = compat.donating_jit(T.copy_cache_pages,
+                                                   donate_argnums=(0,))
+            self._scatter_paged = compat.donating_jit(T.scatter_prefill_part,
+                                                      donate_argnums=(0,))
         # engine-lifetime state -------------------------------------------
         self._pf = None
         self._pager = None               # monolithic PagedCacheManager
@@ -283,14 +332,17 @@ class ServingEngine:
                       for n in self.plan.replica_slots]
                 for i in range(total - sum(nb)):
                     nb[i] += 1
+                ratio = T.paged_kv_capacity_ratio(self.cfg, self.kv_dtype)
                 self._pagers = [
                     PagedCacheManager(n, self.max_seq, self.page_size, b,
-                                      prefix_cache=self.prefix_cache)
+                                      prefix_cache=self.prefix_cache,
+                                      kv_dtype=self.kv_dtype,
+                                      kv_capacity_ratio=ratio)
                     for n, b in zip(self.plan.replica_slots, nb)]
                 self._caches = [
                     self.model.init_paged_cache(
                         n, self.max_seq, page_size=self.page_size,
-                        num_blocks=b)
+                        num_blocks=b, kv_dtype=self.kv_dtype)
                     for n, b in zip(self.plan.replica_slots, nb)]
             else:
                 self._caches = [self.model.init_cache(n, self.max_seq)
@@ -300,16 +352,27 @@ class ServingEngine:
         elif self.paged:
             from repro.cache import PagedCacheManager
             nb = self.num_blocks or self.slots * bps
-            self._pager = PagedCacheManager(self.slots, self.max_seq,
-                                            self.page_size, nb,
-                                            prefix_cache=self.prefix_cache)
+            self._pager = PagedCacheManager(
+                self.slots, self.max_seq, self.page_size, nb,
+                prefix_cache=self.prefix_cache, kv_dtype=self.kv_dtype,
+                kv_capacity_ratio=T.paged_kv_capacity_ratio(
+                    self.cfg, self.kv_dtype))
             self._cache = self.model.init_paged_cache(
                 self.slots, self.max_seq, page_size=self.page_size,
-                num_blocks=nb)
+                num_blocks=nb, kv_dtype=self.kv_dtype)
         else:
             self._cache = self.model.init_cache(self.slots, self.max_seq)
         self._pos = np.zeros((self.slots,), np.int32)    # tokens in cache
         self._cur = np.zeros((self.slots, 1), np.int32)  # next input token
+        # overlap (async) runtime state: an effective speculate forces
+        # sync, plan-less and plan-driven engines both support overlap
+        self._overlap = bool(self.overlap) and self._spec_k == 0
+        self._inflight: List[_Inflight] = []   # dispatched, undrained steps
+        self._cur_dev = None             # device-side token chain: the last
+        #                                  dispatched step's output array
+        #                                  (so step N+1's inputs never
+        #                                  round-trip through the host)
+        self._cur_known = np.ones((self.slots,), bool)  # _cur[s] current?
         self._slot_req: List[Optional[Request]] = [None] * self.slots
         self._reserved = set()           # slots mid-(chunked)-prefill
         self.queue: List[Request] = []
@@ -337,8 +400,13 @@ class ServingEngine:
         self.spec_steps = 0               # decode ticks that ran a verify
         self.spec_proposed = 0            # drafted tokens offered to verify
         self.spec_accepted = 0            # drafted tokens accepted
-        # host wall-clock per engine phase, accumulated across ticks
-        self.phase_time = {"admission": 0.0, "prefill": 0.0, "decode": 0.0}
+        # host wall-clock per engine phase, accumulated across ticks.
+        # "host_sync" is an OVERLAY bucket, not a fourth partition: it
+        # accrues inside whichever phase window is open and measures how
+        # much of that phase the host spent blocked on device readback
+        # (the quantity the async runtime shrinks) — see _sync().
+        self.phase_time = {"admission": 0.0, "prefill": 0.0, "decode": 0.0,
+                           "host_sync": 0.0}
         self._prefill_window = 0.0        # prefill seconds inside _admit()
         self._t_window = time.perf_counter()  # stats window start (reset_stats)
 
@@ -363,7 +431,15 @@ class ServingEngine:
         Each phase's host wall-clock accrues in ``phase_time`` (the
         prefill compute launched inside admission is credited to
         "prefill", so "admission" is pure bookkeeping — block matching,
-        allocation, padding)."""
+        allocation, padding).
+
+        Overlap mode reorders the decode phase: this tick's step is
+        DISPATCHED first (its inputs are the previous step's output array,
+        still on device), and only then is the previous step's result
+        read back — so the device computes step N while the host drains
+        step N-1 and runs the next tick's admission bookkeeping.  The
+        drained tokens retire slots exactly as sync mode does, one tick
+        later; the per-request token streams are identical."""
         t0 = time.perf_counter()
         self._prefill_window = 0.0
         self._admit()
@@ -377,12 +453,23 @@ class ServingEngine:
                     on_chunk=self._chunk_committed):
                 self._finish_prefill(item)
             self.phase_time["prefill"] += time.perf_counter() - t1
-        if self.active:
+        if self.active or self._inflight:
             t2 = time.perf_counter()
-            self._decode_once()
+            dispatched = False
+            if self.active:
+                if self._overlap:
+                    self._dispatch_decode()
+                    dispatched = True
+                else:
+                    self._decode_once()
+            # one-step-delayed drain: the newest dispatch stays in flight
+            # while its predecessor's tokens come back; once nothing new
+            # dispatches, drain everything so the last slots retire.
+            while len(self._inflight) > (1 if dispatched else 0):
+                self._drain_one()
             self.phase_time["decode"] += time.perf_counter() - t2
         self.ticks += 1
-        return bool(self.active or self.queue
+        return bool(self.active or self.queue or self._inflight
                     or (self._pf is not None and self._pf.busy))
 
     def run(self, max_steps: int = 10_000):
@@ -409,7 +496,8 @@ class ServingEngine:
         self.spec_steps = 0
         self.spec_proposed = 0
         self.spec_accepted = 0
-        self.phase_time = {"admission": 0.0, "prefill": 0.0, "decode": 0.0}
+        self.phase_time = {"admission": 0.0, "prefill": 0.0, "decode": 0.0,
+                           "host_sync": 0.0}
         # requests already in flight keep their pre-reset t_submit; the
         # stats() wall window clamps to this timestamp so the measured
         # window never reaches back before the reset
@@ -445,8 +533,13 @@ class ServingEngine:
         }
         pagers = self._all_pagers()
         if pagers:
+            # kv layout keys are properties of the (shared) pool dtype,
+            # not additive counters — every replica pool carries the same
             agg = {k: sum(p.stats()[k] for p in pagers)
-                   for k in pagers[0].stats()}
+                   for k in pagers[0].stats()
+                   if k not in ("kv_dtype", "kv_capacity_x")}
+            agg["kv_dtype"] = pagers[0].kv_dtype
+            agg["kv_capacity_x"] = pagers[0].kv_capacity_ratio
             agg["page_size"] = self.page_size
             agg["reuse_hit_rate"] = (
                 agg["prefix_hits"] / max(agg["prefix_queries"], 1))
@@ -507,6 +600,18 @@ class ServingEngine:
         return out
 
     # -- internals ---------------------------------------------------------
+    def _sync(self, x) -> np.ndarray:
+        """Block on a device value and charge the wait to the
+        ``host_sync`` phase bucket.  The bucket overlays the phase
+        windows (the wait also sits inside whichever phase is open): it
+        measures how much host wall-clock was spent blocked on device
+        readback — the quantity the overlap runtime removes from the
+        critical path by dispatching the next step first."""
+        t0 = time.perf_counter()
+        arr = np.asarray(x)
+        self.phase_time["host_sync"] += time.perf_counter() - t0
+        return arr
+
     def _padded_len(self, n: int) -> int:
         b = max(self.prefill_bucket, 1)
         pp = min(-(-n // b) * b, self.max_seq - 1)
@@ -585,7 +690,7 @@ class ServingEngine:
                 jnp.asarray(ap.block_table)[None],
                 jnp.asarray(ap.write_table)[None])
             self._pager.commit(slot)      # pages landed: publish for reuse
-            tok = int(np.asarray(nxt)[0])  # host sync: prefill has run
+            tok = int(self._sync(nxt)[0])  # host sync: prefill has run
             self._prefill_window += time.perf_counter() - t0
         else:
             toks = np.zeros((1, self._padded_len(plen)), np.int32)
@@ -594,7 +699,7 @@ class ServingEngine:
             nxt, self._cache = self._prefill_slot(
                 self.params, self._cache, jnp.asarray(toks),
                 jnp.int32(slot), jnp.int32(plen))
-            tok = int(np.asarray(nxt)[0])  # host sync: prefill has run
+            tok = int(self._sync(nxt)[0])  # host sync: prefill has run
             self._prefill_window += time.perf_counter() - t0
         self.prefill_batch_sizes.append(1)
         # unpadded suffix tokens, same unit as plan-mode admission:
@@ -648,7 +753,7 @@ class ServingEngine:
         its replica's slot partition — the paged K/V already streamed
         into the pool as the chunks ran — and start decoding."""
         nxt, _ = self._rt.finish(self.params, item.final_hidden)
-        tok = int(np.asarray(nxt)[0])     # host sync: prefill has run
+        tok = int(self._sync(nxt)[0])     # host sync: prefill has run
         from repro.models import transformer as T
         if self._pagers is not None:
             self._admit_plans.pop(item.slot, None)
@@ -671,6 +776,13 @@ class ServingEngine:
         self._slot_req[slot] = req
         self._pos[slot] = len(req.prompt)
         self._cur[slot, 0] = req.out_tokens[-1]
+        self._cur_known[slot] = True
+        if self._overlap and self._cur_dev is not None:
+            # patch the fresh slot's input token into the device-side
+            # token chain (the other slots' entries are the undrained
+            # previous step's outputs — they must not round-trip here)
+            self._cur_dev = self._cur_dev.at[slot, 0].set(
+                jnp.int32(first_token))
         self._maybe_retire(slot, req.t_first)
 
     # ---- decode ----------------------------------------------------------
@@ -722,7 +834,7 @@ class ServingEngine:
             nxt, _, self._cache = self.serve_step(
                 self.params, self._cache, jnp.asarray(self._cur),
                 jnp.asarray(self._pos), None, bt)
-            arr = np.asarray(nxt)
+            arr = self._sync(nxt)
             now = time.perf_counter()
             self._collect_decoded(arr, 0, self.slots, now)
         else:
@@ -744,12 +856,115 @@ class ServingEngine:
                     jnp.asarray(self._cur[a:b]),
                     jnp.asarray(self._pos[a:b]), bt)
                 pending.append((nxt, a, b))
-            arrs = [(np.asarray(nxt), a, b) for nxt, a, b in pending]
+            arrs = [(self._sync(nxt), a, b) for nxt, a, b in pending]
             now = time.perf_counter()
             for arr, a, b in arrs:
                 self._collect_decoded(arr, a, b, now)
         self.decode_steps += 1
         self._decode_slot_steps += act
+        self._occupied_step_sum += self.active
+
+    # ---- overlapped (async) decode ---------------------------------------
+    def _dispatch_decode(self):
+        """Overlap mode: dispatch one batched decode step WITHOUT reading
+        its result back.  Inputs come from ``_cur_dev`` — the previous
+        step's output array, still on device — so the host never blocks
+        between steps; positions and page bookkeeping advance at
+        dispatch.
+
+        A slot the pending drain is about to retire (EOS/budget known
+        only once step N is read back) rides along one extra step.  That
+        garbage write is safe: ``prepare_decode`` made its target block
+        exclusively owned, a retired slot's blocks free only AFTER this
+        dispatch (so nothing else maps them yet), and every later cache
+        op is serialized behind this step by the cache's data dependency
+        — any re-used page is re-written by its new owner's prefill or
+        masked until its new owner's own frontier reaches it.  The
+        record entry is skipped as stale at drain."""
+        act = self.active
+        if self._cur_dev is None:
+            self._cur_dev = jnp.asarray(self._cur)
+        arrs = []
+        rng = []
+        if self._pf is None:
+            bt = None
+            if self._pager is not None:
+                self._prepare_paged_writes(self._pager, 0, self.slots)
+                bt = jnp.asarray(self._pager.table_matrix())
+            nxt, _, self._cache = self.serve_step(
+                self.params, self._cache, self._cur_dev,
+                jnp.asarray(self._pos), None, bt)
+            self._cur_dev = nxt
+            arrs.append((nxt, 0, self.slots))
+            rng.append((0, self.slots))
+        else:
+            for r in range(self.plan.n_replicas):
+                a, b = self.plan.replica_range(r)
+                if not any(self._slot_req[s] is not None
+                           for s in range(a, b)):
+                    continue
+                bt = None
+                if self._pagers is not None:
+                    self._prepare_paged_writes(self._pagers[r], a, b)
+                    bt = jnp.asarray(self._pagers[r].table_matrix())
+                nxt, self._caches[r] = self._rt.decode_step(
+                    self.params, self._caches[r], self._cur_dev[a:b],
+                    jnp.asarray(self._pos[a:b]), bt)
+                self._cur_dev = self._cur_dev.at[a:b].set(nxt)
+                arrs.append((nxt, a, b))
+                rng.append((a, b))
+        entries = []
+        in_toks: Dict[int, Optional[int]] = {}
+        for a, b in rng:
+            for slot in range(a, b):
+                req = self._slot_req[slot]
+                if req is None:
+                    continue
+                entries.append((slot, req, int(self._pos[slot])))
+                # the step's input token: host-known right after
+                # activation, else it is the undrained previous step's
+                # output — filled at that step's drain
+                in_toks[slot] = (int(self._cur[slot, 0])
+                                 if self._cur_known[slot] else None)
+                self._cur_known[slot] = False
+                self._pos[slot] += 1
+        self._inflight.append(_Inflight(arrs=arrs, entries=entries,
+                                        in_toks=in_toks, act=act))
+        self.decode_steps += 1
+        self._decode_slot_steps += act
+
+    def _drain_one(self):
+        """Read back the OLDEST in-flight step and do everything the sync
+        path does after a step: extend block chains with the step's input
+        tokens, append the output tokens, retire EOS/budget slots (one
+        tick later than sync mode — the per-request token STREAMS are
+        identical), and hand each drained token to the next in-flight
+        record, whose input it is."""
+        rec = self._inflight.pop(0)
+        arrs = [(self._sync(nxt), a, b) for nxt, a, b in rec.arrs]
+        now = time.perf_counter()
+        nxt_rec = self._inflight[0] if self._inflight else None
+        nxt_req = ({s: r for s, r, _ in nxt_rec.entries}
+                   if nxt_rec is not None else {})
+        for arr, a, b in arrs:
+            for slot, req, pos_snap in rec.entries:
+                if not (a <= slot < b):
+                    continue
+                if self._slot_req[slot] is not req:
+                    continue      # slot retired mid-flight: garbage step
+                pager, local = self._pager_of(slot)
+                if pager is not None:
+                    tok_in = rec.in_toks[slot]
+                    assert tok_in is not None, slot
+                    pager.note_written(local, tok_in, pos_snap)
+                tok = int(arr[slot - a, 0])
+                req.out_tokens.append(tok)
+                self._cur[slot, 0] = tok
+                self._cur_known[slot] = True
+                if nxt_req.get(slot) is req:
+                    nxt_rec.in_toks[slot] = tok
+                self.decode_tokens += 1
+                self._maybe_retire(slot, now, pos=pos_snap + 1)
         self._occupied_step_sum += self.active
 
     # ---- speculative decode ----------------------------------------------
@@ -823,7 +1038,7 @@ class ServingEngine:
                 self.params, self._cache, jnp.asarray(window),
                 jnp.asarray(self._pos), bt)
             now = time.perf_counter()
-            self._collect_verified(window, np.asarray(outs), drafts,
+            self._collect_verified(window, self._sync(outs), drafts,
                                    0, self.slots, now)
         else:
             pending = []
@@ -841,7 +1056,7 @@ class ServingEngine:
                     jnp.asarray(window[a:b]),
                     jnp.asarray(self._pos[a:b]), bt)
                 pending.append((outs, a, b))
-            arrs = [(np.asarray(o), a, b) for o, a, b in pending]
+            arrs = [(self._sync(o), a, b) for o, a, b in pending]
             now = time.perf_counter()
             for arr, a, b in arrs:
                 self._collect_verified(window, arr, drafts, a, b, now)
@@ -906,16 +1121,24 @@ class ServingEngine:
             self.decode_tokens += 1
             self._maybe_retire(slot, now)
 
-    def _maybe_retire(self, slot: int, now: float):
+    def _maybe_retire(self, slot: int, now: float,
+                      pos: Optional[int] = None):
         """Slot-level retirement: EOS, token budget, or a full slot cache.
         Only this slot frees — every other slot keeps decoding.  Paged
         engines release the slot's blocks; fully-released registered
-        blocks park in the pool's LRU for prefix reuse."""
+        blocks park in the pool's LRU for prefix reuse.
+
+        ``pos``: the slot's written-token count as of the step being
+        accounted — overlap drains pass it explicitly because
+        ``self._pos`` has already advanced past it for the next,
+        still-in-flight dispatch."""
+        if pos is None:
+            pos = int(self._pos[slot])
         req = self._slot_req[slot]
         if (len(req.out_tokens) >= req.max_new_tokens
                 or (req.eos_token is not None
                     and req.out_tokens[-1] == req.eos_token)
-                or self._pos[slot] >= self.max_seq - 1):
+                or pos >= self.max_seq - 1):
             req.t_done = now
             self.done.append(req)
             self._slot_req[slot] = None

@@ -450,7 +450,9 @@ def test_make_paged_cache_layer_layout_mixed_family():
         sub = cache[f"b{j}"]
         if mix == "attn":
             assert set(sub["kv"]) == {"k_pages", "v_pages"}
-            assert sub["kv"]["k_pages"].shape[1:3] == (12, 4)
+            # num_blocks + 1: the pool carries a trailing sink page the
+            # fused decode kernel parks unmapped-slot writes in
+            assert sub["kv"]["k_pages"].shape[1:3] == (13, 4)
         else:
             assert "ssm_state" in sub
             leaf = jax.tree.leaves(sub["ssm_state"])[0]
@@ -538,4 +540,4 @@ def test_slice_cache_groups_works_on_paged_leaves():
     cache = model.init_paged_cache(2, 16, page_size=4, num_blocks=8)
     sl = T.slice_cache_groups(cache, 1, 2)
     assert sl["b0"]["kv"]["k_pages"].shape[0] == 2
-    assert sl["b0"]["kv"]["k_pages"].shape[1:3] == (8, 4)
+    assert sl["b0"]["kv"]["k_pages"].shape[1:3] == (9, 4)   # +1 sink page

@@ -99,10 +99,35 @@ def test_kernel_path_env_override(monkeypatch):
 
 def test_kernel_path_rejects_unknown_value_listing_choices(monkeypatch):
     """A typo'd REPRO_KERNELS must fail loudly (silently falling back to
-    the jnp oracle would fake a kernel benchmark), naming the choices."""
+    the jnp oracle would fake a kernel benchmark), naming the choices —
+    paths AND the per-kernel override names."""
     monkeypatch.setenv("REPRO_KERNELS", "garbage")
     with pytest.raises(ValueError, match=r"garbage.*auto.*pallas.*"
-                                         r"interpret.*ref"):
+                                         r"interpret.*ref.*"
+                                         r"fused_paged_decode"):
+        dispatch.kernel_path()
+
+
+def test_kernel_path_per_kernel_override(monkeypatch):
+    """REPRO_KERNELS is a comma-separated list: one base path plus
+    per-kernel 'name=path' overrides routed by kernel name."""
+    monkeypatch.setenv("REPRO_KERNELS",
+                       "ref,fused_paged_decode=interpret,matmul=pallas")
+    assert dispatch.kernel_path() == "ref"
+    assert dispatch.kernel_path("paged_attention") == "ref"
+    assert dispatch.kernel_path("fused_paged_decode") == "interpret"
+    assert dispatch.kernel_path("matmul") == "pallas"
+    # override-only form: base stays auto
+    monkeypatch.setenv("REPRO_KERNELS", "fused_paged_decode=ref")
+    assert dispatch.kernel_path("fused_paged_decode") == "ref"
+
+
+def test_kernel_path_rejects_bad_override(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "ref,not_a_kernel=ref")
+    with pytest.raises(ValueError, match=r"not_a_kernel.*fused_paged"):
+        dispatch.kernel_path()
+    monkeypatch.setenv("REPRO_KERNELS", "ref,matmul=fast")
+    with pytest.raises(ValueError, match=r"matmul=fast"):
         dispatch.kernel_path()
 
 
@@ -259,3 +284,58 @@ def test_no_version_probes_outside_compat():
                 if pat in line:
                     offenders.append(f"{rel}:{i}: {why}: {line.strip()}")
     assert not offenders, "\n".join(offenders)
+
+
+@pytest.mark.parametrize("path", ["ref", "interpret"])
+def test_dispatch_fused_paged_decode_ref_parity(path, force_path):
+    """The fused RoPE+write+attend decode kernel matches the jnp oracle
+    through the dispatch front door — output AND the written pools.
+    Tables are disjoint per slot (the engine's ownership invariant the
+    in-place kernel writes rely on)."""
+    force_path(path)
+    r = np.random.default_rng(6)
+    b, h, hk, d = 2, 4, 2, 128
+    page, nb = 32, 2
+    n = b * nb + 1                                   # + sink page
+    q = jnp.asarray(r.standard_normal((b, 1, h, d)), jnp.float32)
+    kn = jnp.asarray(r.standard_normal((b, 1, hk, d)), jnp.float32)
+    vn = jnp.asarray(r.standard_normal((b, 1, hk, d)), jnp.float32)
+    kp = jnp.asarray(r.standard_normal((n, page, hk, d)), jnp.float32)
+    vp = jnp.asarray(r.standard_normal((n, page, hk, d)), jnp.float32)
+    bt = jnp.asarray(r.permutation(b * nb).reshape(b, nb), jnp.int32)
+    pos = jnp.asarray([page - 1, page + 7], jnp.int32)
+    out, nkp, nvp, ks, vs = dispatch.dispatch_fused_paged_decode(
+        q, kn, vn, kp, vp, bt, pos, theta=10000.0)
+    assert ks is None and vs is None
+    qg = q[:, 0].reshape(b, hk, h // hk, d)
+    ro, rkp, rvp, _, _ = R.fused_paged_decode_ref(
+        qg, kn[:, 0], vn[:, 0], kp, vp, bt, pos, theta=10000.0)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ro.reshape(b, 1, h * d)),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(nkp), np.asarray(rkp),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(nvp), np.asarray(rvp),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_dispatch_paged_attention_int8_dequant_parity(force_path):
+    """int8 pools route through the dequantizing oracle on every path
+    and match an fp pool holding the dequantized values exactly."""
+    force_path("interpret")     # int8 still forces the ref fallback here
+    r = np.random.default_rng(7)
+    b, h, hk, d = 2, 4, 2, 128
+    n, page, nb = 5, 16, 2
+    q = jnp.asarray(r.standard_normal((b, 1, h, d)), jnp.float32)
+    kf = jnp.asarray(r.standard_normal((n, page, hk, d)), jnp.float32)
+    vf = jnp.asarray(r.standard_normal((n, page, hk, d)), jnp.float32)
+    kq, ks = R.quantize_int8_rows(kf)
+    vq, vs = R.quantize_int8_rows(vf)
+    bt = jnp.asarray([[3, 1], [0, 2]], jnp.int32)
+    lens = jnp.asarray([20, 9], jnp.int32)
+    out = dispatch.dispatch_paged_attention(q, kq, vq, bt, lens,
+                                            k_scales=ks, v_scales=vs)
+    deq = dispatch.dispatch_paged_attention(
+        q, R.dequantize_int8(kq, ks), R.dequantize_int8(vq, vs), bt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(deq),
+                               atol=2e-6, rtol=2e-6)

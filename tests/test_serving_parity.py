@@ -756,3 +756,102 @@ def test_prefill_token_counts_match_plan_engine_unpadded():
     plan = uniform_plan(cfg.num_groups, 2, n_microbatches=2)
     peng = run_plan_staggered(model, params, plan, slots=2, chunk=4)
     assert mono.prefill_token_counts == peng.prefill_token_counts
+
+
+# ---------------------------------------------------------------------------
+# async overlapped runtime (one-step-delayed drain) — same gold standard:
+# overlap changes WHEN the host reads tokens back, never WHICH tokens
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_overlap_staggered_parity_monolithic(paged):
+    """Async engine ≡ sync engine ≡ isolated one-shot gold, dense and
+    paged: dispatching step N+1 before draining step N only re-times the
+    host readback (the device-side token chain feeds each next step)."""
+    cfg, model, params = build()
+    golds = [gold_decode(model, params, p, mn, 64) for p, mn, _ in STAGGERED]
+    kw = {"paged": True, "page_size": 4} if paged else {}
+    sync = run_staggered(model, params, slots=2, **kw)
+    eng = run_staggered(model, params, slots=2, overlap=True, **kw)
+    assert eng._overlap                          # overlap really engaged
+    got = {r.uid: r.out_tokens for r in eng.done}
+    ref = {r.uid: r.out_tokens for r in sync.done}
+    assert len(got) == len(STAGGERED)
+    for uid, gold in enumerate(golds):
+        assert ref[uid] == gold, f"sync paged={paged} uid={uid}"
+        assert got[uid] == gold, f"async paged={paged} uid={uid}"
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_overlap_staggered_parity_plan(paged):
+    """Async ≡ sync ≡ gold through plan-driven engines: per-replica
+    decode dispatch chains on-device while chunked prefill streams the
+    stages, dense and paged replica caches alike."""
+    from repro.plan import uniform_plan
+    cfg, model, params = build(layers=4)
+    golds = [gold_decode(model, params, p, mn, 64) for p, mn, _ in STAGGERED]
+    plan = uniform_plan(cfg.num_groups, 2, n_microbatches=2)
+    kw = {"paged": True, "page_size": 4} if paged else {}
+    sync = run_plan_staggered(model, params, plan, slots=3, chunk=4, **kw)
+    eng = run_plan_staggered(model, params, plan, slots=3, chunk=4,
+                             overlap=True, **kw)
+    assert eng._overlap
+    got = {r.uid: r.out_tokens for r in eng.done}
+    ref = {r.uid: r.out_tokens for r in sync.done}
+    for uid, gold in enumerate(golds):
+        assert ref[uid] == gold, f"sync paged={paged} uid={uid}"
+        assert got[uid] == gold, f"async paged={paged} uid={uid}"
+
+
+def test_overlap_eos_and_budget_retire_exact():
+    """Delayed drain retires slots at most one tick late but never emits
+    past EOS or past the token budget: streams match the sync engine's
+    EOS-truncated gold exactly."""
+    cfg, model, params = build()
+    p0 = np.arange(1, 4, dtype=np.int32)
+    p1 = np.arange(5, 10, dtype=np.int32)
+    g0 = gold_decode(model, params, p0, 8, 64)
+    eos = g0[2]                                  # force EOS three tokens in
+    g0_eos = gold_decode(model, params, p0, 8, 64, eos=eos)
+    g1 = gold_decode(model, params, p1, 8, 64)
+    eng = ServingEngine(model, params, slots=2, max_seq=64, overlap=True,
+                        paged=True, page_size=4)
+    eng.submit(Request(0, p0, 8, eos_token=eos))
+    eng.submit(Request(1, p1, 8))
+    done = {r.uid: r.out_tokens for r in eng.run()}
+    assert done[0] == g0_eos and done[0][-1] == eos and len(done[0]) == 3
+    assert done[1] == g1
+
+
+def test_overlap_retirement_and_readmission():
+    """A slot freed by a delayed drain re-admits correctly: the next
+    occupant's stream ignores any garbage in-flight step the retired
+    request left behind (exclusively-owned pages, then a full admission
+    re-map)."""
+    cfg, model, params = build()
+    prompts = [np.arange(1, 4 + i, dtype=np.int32) for i in range(5)]
+    golds = [gold_decode(model, params, p, 4, 48) for p in prompts]
+    for kw in ({}, {"paged": True, "page_size": 4}):
+        eng = ServingEngine(model, params, slots=2, max_seq=48,
+                            overlap=True, **kw)
+        for uid, p in enumerate(prompts):       # 5 requests through 2 slots
+            eng.submit(Request(uid, p, 4))
+        done = {r.uid: r.out_tokens for r in eng.run()}
+        for uid, gold in enumerate(golds):
+            assert done[uid] == gold, f"kw={kw} uid={uid}"
+
+
+def test_overlap_with_speculation_falls_back_to_sync():
+    """Speculative verify needs drafted tokens on the host before the
+    next dispatch, so overlap=True + speculate>0 degrades to the sync
+    path — and stays gold-identical."""
+    cfg, model, params = build()
+    golds = [gold_decode(model, params, p, mn, 64)
+             for p, mn, _ in SPEC_PROMPTS]
+    eng = run_staggered(model, params, slots=2, plan=SPEC_PROMPTS,
+                        overlap=True, speculate=3, paged=True, page_size=4)
+    assert not eng._overlap                      # forced sync
+    assert eng.stats()["spec_steps"] > 0
+    got = {r.uid: r.out_tokens for r in eng.done}
+    for uid, gold in enumerate(golds):
+        assert got[uid] == gold, f"uid={uid}"
