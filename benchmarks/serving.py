@@ -27,7 +27,15 @@ gain (``paged_design_points``, also ``source="served"``).
 long warm prefix admit suffix-only (the registry supplies the prefix
 K/V), so their TTFT drops below cold same-length requests — the sweep
 reports cold vs warm TTFT medians, prefill hit rate, and block/token
-savings.  ``serving_bench_summary`` packages it (plus throughput) as the
+savings.
+
+``adaptive_sweep`` replays ONE time-varying trace (calm -> spike ->
+long-prompt burst) through every static candidate engine AND through an
+adaptive engine carrying the same candidates (``AdaptiveConfig``): token
+parity across all legs is asserted (re-planning is scheduling-only), the
+adaptive leg's paged migrations must be zero-copy, and CI gates its
+throughput / p50 TTFT against the best static leg.
+``serving_bench_summary`` packages everything as the
 ``BENCH_serving.json`` payload the smoke run archives.
 
     PYTHONPATH=src python benchmarks/run.py serving
@@ -549,6 +557,178 @@ def _int8_rows(s: dict) -> List[Tuple[str, float, str]]:
              f"tok_s_fp={s['throughput_fp_tok_s']:.1f}")]
 
 
+def _adaptive_candidates(cfg, slots: int, chunk: int):
+    """The controller's candidate ladder: monolithic (``None``) plus one
+    searched stage cut at two spatial decode widths (narrow and wide),
+    built via ``rereplicate_serving`` — the stage slices are shared, only
+    the traffic-dependent replica knob differs."""
+    from repro.plan import lower_serving, rereplicate_serving, uniform_plan
+
+    G = cfg.num_groups
+    stages = 2 if G % 2 == 0 else 1
+    narrow = lower_serving(uniform_plan(G, stages, n_microbatches=1),
+                           slots=slots, chunk=chunk)
+    cands = [None, narrow]
+    if slots > 1:
+        cands.append(rereplicate_serving(narrow, slots))
+    return cands
+
+
+def _adaptive_trace(rng, cfg, *, phases=None):
+    """A deterministic time-varying trace: calm low-rate short prompts,
+    then a high-rate spike, then a long-prompt burst — the regime changes
+    the controller is supposed to navigate.  Returns (arrivals, prompts);
+    every leg replays the identical trace."""
+    phases = phases or [(3, 4.0, 3, 8),      # calm: sparse short prompts
+                        (14, 150.0, 3, 8),   # spike: same prompts, ~40x rate
+                        (5, 15.0, 20, 28)]   # burst: long prompts
+    arrivals, prompts, t = [], [], 0.0
+    for n, rate_rps, lo, hi in phases:
+        for _ in range(n):
+            t += rng.exponential(1.0 / rate_rps)
+            arrivals.append(t)
+            prompts.append(rng.integers(1, cfg.vocab_size,
+                                        size=int(rng.integers(lo, hi))
+                                        ).astype(np.int32))
+    return np.asarray(arrivals), prompts
+
+
+def _drive_trace(eng, arrivals, prompts, new_tokens: int) -> float:
+    """Replay a precomputed (arrivals, prompts) trace against the wall
+    clock while ticking the engine (same loop as ``_drive_poisson`` but
+    with the trace fixed, so every leg sees identical traffic)."""
+    from repro.serving import Request
+
+    n = len(prompts)
+    t0 = time.perf_counter()
+    nxt = 0
+    busy = True
+    while busy or nxt < n:
+        now = time.perf_counter() - t0
+        while nxt < n and arrivals[nxt] <= now:
+            eng.submit(Request(nxt, prompts[nxt], new_tokens))
+            nxt += 1
+        busy = eng.tick()
+        if not busy and nxt < n:
+            wait = arrivals[nxt] - (time.perf_counter() - t0)
+            time.sleep(min(max(wait, 0.0), 0.01))
+    return time.perf_counter() - t0
+
+
+def adaptive_sweep(arch: str = "yi-6b", *, layers: int = 4, slots: int = 4,
+                   chunk: int = 4, new_tokens: int = 10, max_seq: int = 96,
+                   page_size: int = 4, rounds: int = 2,
+                   seed: int = 0) -> dict:
+    """Adaptive re-planning vs every static candidate on one time-varying
+    trace (calm -> spike -> long-prompt burst), all on paged engines.
+
+    One leg per static candidate (mono / narrow plan / wide plan) plus
+    the adaptive leg (same candidates handed to the controller, warmed
+    via ``warm_replans()`` so candidate compiles stay off the clock).
+    Token parity across ALL legs is ASSERTED — re-planning is a pure
+    scheduling optimisation — and the adaptive leg's paged migrations
+    must be zero-copy (``migration_copies == 0``: block-table handoffs in
+    the shared global pool, never KV copies).  Each leg keeps its best
+    wall over ``rounds`` drives (CPU-CI noise).  CI gates the adaptive
+    leg's throughput and p50 TTFT against the best static leg."""
+    import jax
+
+    from repro.configs import REGISTRY, reduced
+    from repro.models import build_model
+    from repro.serving import AdaptiveConfig, Request, ServingEngine
+
+    cfg = reduced(REGISTRY[arch], layers=layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(seed)
+    arrivals, prompts = _adaptive_trace(rng, cfg)
+    cands = _adaptive_candidates(cfg, slots, chunk)
+
+    def leg_stats(eng):
+        # best wall AND best TTFT-median over rounds, independently: both
+        # are ~ms quantities on this trace, so a single round's scheduler
+        # hiccup would otherwise dominate the cross-leg ratios CI gates
+        best, ttfts = None, []
+        for _ in range(max(rounds, 1)):
+            eng.reset_stats()
+            wall = _drive_trace(eng, arrivals, prompts, new_tokens)
+            st = eng.stats()
+            ttfts.append(float(np.percentile(st["ttft_s"], 50)))
+            if best is None or wall < best[0]:
+                st["wall_s"] = wall
+                best = (wall, st,
+                        {r.uid: list(r.out_tokens)
+                         for r in eng.done if r.uid >= 0})
+        _, st, toks = best
+        return ({"wall_s": st["wall_s"],
+                 "throughput_tok_s": st["gen_tokens"] / st["wall_s"],
+                 "ttft_p50_s": min(ttfts),
+                 "lat_p50_s": float(np.percentile(st["latency_s"], 50))},
+                toks, st)
+
+    legs = {}
+    streams = {}
+    for cand in cands:
+        label = cand.label if cand is not None else "mono"
+        eng = ServingEngine(model, params, slots=slots, max_seq=max_seq,
+                            paged=True, page_size=page_size, plan=cand)
+        # warmup: compile the prefill/decode (or stage) walks off the clock
+        eng.submit(Request(-1, np.arange(1, 6, dtype=np.int32), 2))
+        eng.run()
+        legs[label], streams[label], _ = leg_stats(eng)
+
+    # responsive controller: short decision interval / cooldown so the
+    # spike and the burst are each long enough (in ticks) to react to;
+    # generous SLOs keep the cost model from trading TTFT for throughput
+    # (the same tradeoff the CI gate checks)
+    eng = ServingEngine(model, params, slots=slots, max_seq=max_seq,
+                        paged=True, page_size=page_size,
+                        adapt=AdaptiveConfig(plans=cands, interval_ticks=4,
+                                             cooldown_ticks=8, window_s=1.0,
+                                             slo_ttft_s=0.05,
+                                             slo_tpot_s=0.02))
+    eng.warm_replans()               # compile every candidate off the clock
+    adaptive, streams["adaptive"], ast = leg_stats(eng)
+    adaptive.update(replans=ast["replans"], migrations=ast["migrations"],
+                    migration_copies=ast["migration_copies"],
+                    final_plan=ast["plan_label"],
+                    decisions=[list(d) for d in eng._ctl.decisions])
+
+    gold_label = next(iter(streams))
+    gold = streams[gold_label]
+    for name, toks in streams.items():
+        assert toks == gold, (
+            f"adaptive-sweep leg {name} diverged from {gold_label} "
+            f"token streams — re-planning must be scheduling-only")
+
+    best_label = max(legs, key=lambda k: legs[k]["throughput_tok_s"])
+    best = legs[best_label]
+    return {
+        "arch": arch, "slots": slots, "chunk": chunk,
+        "requests": len(prompts), "new_tokens": new_tokens,
+        "page_size": page_size, "parity": True,
+        "zero_copy": adaptive["migration_copies"] == 0,
+        "legs": legs, "adaptive": adaptive,
+        "best_static": best_label,
+        "tok_s_ratio": (adaptive["throughput_tok_s"]
+                        / max(best["throughput_tok_s"], 1e-9)),
+        "ttft_ratio": (adaptive["ttft_p50_s"]
+                       / max(best["ttft_p50_s"], 1e-9)),
+    }
+
+
+def _adaptive_rows(s: dict) -> List[Tuple[str, float, str]]:
+    a = s["adaptive"]
+    name = f"serving/adaptive/{s['arch']}/slots{s['slots']}-c{s['chunk']}"
+    return [(name, a["wall_s"] * 1e6,
+             f"parity=Y zero_copy={'Y' if s['zero_copy'] else 'N'} "
+             f"tok_s={a['throughput_tok_s']:.1f} "
+             f"vs_best={s['best_static']}@{s['tok_s_ratio']:.2f}x "
+             f"ttft_ratio={s['ttft_ratio']:.2f} "
+             f"replans={a['replans']} migrations={a['migrations']} "
+             f"final={a['final_plan']}")]
+
+
 def serving_bench_summary(seed: int = 0) -> dict:
     """The ``BENCH_serving.json`` payload: the headline serving numbers —
     throughput, cold vs warm TTFT, prefix-hit rate, block/token savings
@@ -556,12 +736,16 @@ def serving_bench_summary(seed: int = 0) -> dict:
     sweep under ``"speculative"`` (parity-asserted; CI gates
     ``tokens_per_step_on > 1``), the sync-vs-async runtime comparison
     under ``"overlap"`` (parity-asserted; CI gates async throughput
-    strictly above sync), and the int8 block-pool figures under
-    ``"int8_kv"`` (CI gates ``kv_capacity_x >= 1.9``)."""
+    strictly above sync), the int8 block-pool figures under
+    ``"int8_kv"`` (CI gates ``kv_capacity_x >= 1.9``), and the adaptive
+    re-planning comparison under ``"adaptive"`` (parity- and
+    zero-copy-asserted; CI gates adaptive throughput and p50 TTFT
+    against the best static leg)."""
     return {**prefix_reuse_sweep(seed=seed),
             "speculative": speculative_sweep(seed=seed),
             "overlap": overlap_sweep(seed=seed),
-            "int8_kv": int8_kv_sweep(seed=seed)}
+            "int8_kv": int8_kv_sweep(seed=seed),
+            "adaptive": adaptive_sweep(layers=2, seed=seed)}
 
 
 def _serving_plans(cfg, slots: int, chunk: int, seq: int, batch: int):
@@ -682,6 +866,7 @@ def rows(seed: int = 0) -> List[Tuple[str, float, str]]:
     out += _spec_rows(speculative_sweep(seed=seed))
     out += _overlap_rows(overlap_sweep(seed=seed))
     out += _int8_rows(int8_kv_sweep(seed=seed))
+    out += _adaptive_rows(adaptive_sweep(seed=seed))
     return out
 
 
@@ -700,4 +885,5 @@ def smoke_rows(seed: int = 0) -> List[Tuple[str, float, str]]:
     rows += _spec_rows(speculative_sweep(requests=4, seed=seed))
     rows += _overlap_rows(overlap_sweep(seed=seed))
     rows += _int8_rows(int8_kv_sweep(requests=4, seed=seed))
+    rows += _adaptive_rows(adaptive_sweep(layers=2, seed=seed))
     return rows

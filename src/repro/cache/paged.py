@@ -80,7 +80,12 @@ class ConcurrentPeakTracker:
         self.peak = 0
 
     def attach(self, pool: "BlockPool"):
-        self.pools.append(pool)
+        # Idempotent: re-planning re-attaches the surviving pools of the
+        # new replica layout to the engine-lifetime tracker; a pool that
+        # is already tracked must not be appended again (it would be
+        # summed twice in every subsequent ``note`` and inflate the peak).
+        if pool not in self.pools:
+            self.pools.append(pool)
         pool.tracker = self
         self.note()
 
@@ -329,6 +334,7 @@ class PagedCacheManager:
                                             np.ndarray]]] = {}
         self._pending_map: Dict[int, np.ndarray] = {}
         self._reserved = 0                # sum of per-slot growth reserves
+        self.migrations = 0               # zero-copy slot handoffs served
 
     # -- views -------------------------------------------------------------
     def table_matrix(self) -> np.ndarray:
@@ -591,6 +597,36 @@ class PagedCacheManager:
         del tb.chain[pos:]
         del tb.hashes[pos // P:]
 
+    # -- migration ---------------------------------------------------------
+    def migrate_slot(self, src: int, dst: int):
+        """Hand a slot's entire paged state to another slot row: block
+        table, token chain, per-block hash spine, and growth reservation
+        move wholesale.  ZERO device work and zero net refcount traffic —
+        the physical pool is shared, no block moves, and the number of
+        references per block is unchanged (each reference merely changes
+        which table row holds it).  This is the primitive behind
+        cross-replica work stealing and traffic-adaptive re-planning
+        (``ServingEngine.replan``): on the paged path a request IS its
+        block-table row, so migration is pure host bookkeeping.
+
+        ``src`` must be committed (the engine never migrates a slot whose
+        chunked prefill is still streaming — its mapping is pending) and
+        ``dst`` must be empty."""
+        if src == dst:
+            return
+        assert src not in self._pending and src not in self._pending_map, \
+            f"slot {src} is mid-prefill (mapping pending commit)"
+        assert dst not in self._pending and dst not in self._pending_map, \
+            f"slot {dst} has a pending admission"
+        s, d = self.tables[src], self.tables[dst]
+        assert d.n_mapped == 0 and not d.chain and d.reserved == 0, \
+            f"destination slot {dst} is not empty"
+        d.blocks[:] = s.blocks
+        d.chain, d.hashes, d.reserved = s.chain, s.hashes, s.reserved
+        s.blocks[:] = -1
+        s.chain, s.hashes, s.reserved = [], [], 0
+        self.migrations += 1
+
     # -- retirement --------------------------------------------------------
     def release_slot(self, slot: int):
         tb = self.tables[slot]
@@ -623,6 +659,7 @@ class PagedCacheManager:
             "reuse_hit_rate": p.prefix_hits / max(p.prefix_queries, 1),
             "cow_copies": p.cow_copies,
             "evictions": p.evictions,
+            "migrations": self.migrations,
             "prefix_cache": self.prefix_cache,
             "prefill_admissions": p.prefill_admissions,
             "prefill_compute_hits": p.prefill_compute_hits,

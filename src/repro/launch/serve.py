@@ -37,6 +37,15 @@ every stream bit-identical to plain decode, so the stats line's
 tokens-per-step and acceptance rate are pure latency wins.  Families
 whose verify step is not decomposable (SSM mixers, local-window rings,
 MoE) gate speculation off automatically.
+
+``--adapt`` / ``--no-adapt`` (default off) turns on online Pareto
+navigation: a re-plan controller watches the rolling traffic window and
+swaps the engine between the monolithic point, the requested strategy's
+plan, and its re-replicated variants at runtime — without dropping
+requests, zero-copy on the paged path (slot migration is a block-table
+handoff).  ``--slo-ttft S`` / ``--slo-tpot S`` set the controller's SLO
+targets in seconds (both require ``--adapt`` and must be positive); the
+stats line then adds the swap count and the final design point.
 """
 from __future__ import annotations
 
@@ -89,6 +98,28 @@ def _build_serving_plan(cfg, strategy: str, slots: int, replicas: int,
     return lower_serving(plan, slots=slots, chunk=chunk)
 
 
+def _adaptive_ladder(cfg, splan, slots: int, chunk: int):
+    """Candidate design points for the re-plan controller: mono, the
+    requested plan (or a default 2-stage cut when serving started mono),
+    and its re-replicated spatial-width variants — one searched stage
+    cut, several Pareto points."""
+    from repro.plan import lower_serving, rereplicate_serving, uniform_plan
+    if splan is None:
+        n_stages = 2 if cfg.num_groups % 2 == 0 else 1
+        base = lower_serving(
+            uniform_plan(cfg.num_groups, n_stages,
+                         n_microbatches=min(2, slots)),
+            slots=slots, chunk=chunk)
+    else:
+        base = splan
+    cands = [None, base]
+    for r in sorted({1, min(2, slots), slots}):
+        cand = rereplicate_serving(base, r)
+        if all(cand != c for c in cands):
+            cands.append(cand)
+    return cands
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
@@ -134,11 +165,33 @@ def main(argv=None):
                     help="with --paged: K/V block-pool storage dtype; int8 "
                          "adds per-row scales for >= 1.9x effective "
                          "capacity (bounded-error token streams)")
+    ap.add_argument("--adapt", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="online Pareto navigation: re-plan the engine "
+                         "between mono / the requested plan / its "
+                         "re-replicated variants as traffic shifts "
+                         "(zero-copy slot migration on --paged)")
+    ap.add_argument("--slo-ttft", type=float, default=0.0, metavar="S",
+                    help="with --adapt: target time-to-first-token in "
+                         "seconds the controller penalizes against "
+                         "(0: no TTFT SLO)")
+    ap.add_argument("--slo-tpot", type=float, default=0.0, metavar="S",
+                    help="with --adapt: target time-per-output-token in "
+                         "seconds the controller penalizes against "
+                         "(0: no TPOT SLO)")
     args = ap.parse_args(argv)
 
     if args.kv_dtype != "fp" and not args.paged:
         raise SystemExit("--kv-dtype int8 requires --paged: quantized K/V "
                          "blocks live in the paged block pool")
+
+    if (args.slo_ttft or args.slo_tpot) and not args.adapt:
+        raise SystemExit("--slo-ttft/--slo-tpot set SLO targets for the "
+                         "adaptive re-plan controller: pass --adapt (a "
+                         "static engine has no controller to penalize)")
+    if args.slo_ttft < 0 or args.slo_tpot < 0:
+        raise SystemExit("--slo-ttft/--slo-tpot are seconds and must be "
+                         ">= 0 (0 disables that SLO term)")
 
     if args.prefix_cache and not args.paged:
         raise SystemExit("--prefix-cache requires --paged: prefix blocks "
@@ -153,13 +206,23 @@ def main(argv=None):
         print(splan.describe())
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
+    adapt = None
+    if args.adapt:
+        from repro.serving import AdaptiveConfig
+        adapt = AdaptiveConfig(
+            plans=_adaptive_ladder(cfg, splan, args.slots, args.chunk),
+            slo_ttft_s=args.slo_ttft, slo_tpot_s=args.slo_tpot)
     eng = ServingEngine(model, params, slots=args.slots,
                         max_seq=args.max_seq, plan=splan, paged=args.paged,
                         page_size=args.page_size,
                         num_blocks=args.num_blocks,
                         prefix_cache=prefix_cache,
                         speculate=args.speculate,
-                        overlap=args.overlap, kv_dtype=args.kv_dtype)
+                        overlap=args.overlap, kv_dtype=args.kv_dtype,
+                        adapt=adapt)
+    if args.adapt:
+        eng.warm_replans()                # compile candidates off the clock
+        eng.reset_stats()
     eos = None if args.eos < 0 else args.eos
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -198,6 +261,11 @@ def main(argv=None):
                   f" accept={st['acceptance_rate']:.2f}")
     elif args.speculate:
         extra += ", spec: gated off (family not verify-decomposable)"
+    if args.adapt:
+        extra += (f", adapt: replans={st['replans']}"
+                  f" migrations={st['migrations']}"
+                  f" (copies={st['migration_copies']})"
+                  f" final={st['plan_label']}")
     print(f"[serve] {len(done)} requests, {st['gen_tokens']} tokens, "
           f"{st['gen_tokens']/wall:.1f} tok/s, "
           f"occupancy={st['slot_occupancy']:.2f}, "

@@ -449,6 +449,63 @@ def copy_cache_pages(full_cache, src, dst):
             for bk, s in full_cache.items()}
 
 
+def rebind_pool_leaves(cache, src):
+    """Rebind a cache view's paged pool leaves to ``src``'s, keeping its
+    own dense slot leaves.  Pure pytree restructuring — no device work.
+    This is what lets every decode replica front ONE shared physical
+    pool: after a step updates the pool through one replica's cache
+    (donating the input buffers), the other replicas' views re-alias the
+    fresh pool arrays here instead of copying pages."""
+    return {bk: (src[bk] if _block_is_paged(sub) else sub)
+            for bk, sub in cache.items()}
+
+
+def has_dense_slot_leaves(cache) -> bool:
+    """Whether the cache keeps any per-slot dense state (SSM state,
+    local-window rings).  False for all-global-attention paged caches —
+    a slot's entire state then lives behind its block table, so moving a
+    request between slots/replicas/plans is pure host bookkeeping."""
+    return any(not _block_is_paged(sub) for sub in cache.values())
+
+
+def slice_cache_slots(cache, first: int, n: int):
+    """Slot-axis slice [first, first + n) of a cache: dense leaves slice
+    their batch axis (axis 1), paged pool leaves pass through untouched
+    (they are slot-agnostic — a slot's paged state is its block-table
+    row, not a pool region)."""
+    return {bk: (sub if _block_is_paged(sub)
+                 else jax.tree.map(lambda l: l[:, first:first + n], sub))
+            for bk, sub in cache.items()}
+
+
+def concat_cache_slots(caches):
+    """Inverse of per-replica slot partitioning: concatenate dense leaves
+    on the slot axis (axis 1).  Paged pool leaves are SHARED physical
+    arrays across the per-replica views, so the first view's are taken
+    as-is — re-planning between replica layouts never copies a page."""
+    out = {}
+    for bk, sub in caches[0].items():
+        if _block_is_paged(sub):
+            out[bk] = sub
+        else:
+            out[bk] = jax.tree.map(
+                lambda *ls: jnp.concatenate(ls, axis=1),
+                *[c[bk] for c in caches])
+    return out
+
+
+def extract_dense_slot(cache, slot):
+    """Batch row ``slot`` of the cache's DENSE leaves only, as a part
+    cache ({} when the model is all-global-attention paged).  Paged
+    blocks are omitted entirely — the result is safe to pass alongside a
+    *donated* full cache (``scatter_cache_slot`` / the paged scatter),
+    where including shared pool leaves would alias freed buffers.  This
+    is the slot-migration read: a slot's paged state moves by block-table
+    handoff, only its dense row rides the device."""
+    return {bk: jax.tree.map(lambda l: l[:, slot:slot + 1], sub)
+            for bk, sub in cache.items() if not _block_is_paged(sub)}
+
+
 def scatter_cache_slot(full_cache, part_cache, slot):
     """Write a small-batch cache into batch rows [slot, slot+b) of a
     persistent slot-indexed cache, leaving every other slot untouched.

@@ -5,15 +5,16 @@ chunked prefill as plan stages — see ``repro.plan.serving``)."""
 from repro.plan.ir import (ExecutionPlan, ServingPlan, StagePlan, fit_dp_tp,
                            uniform_plan)
 from repro.plan.lower import (group_acc_map, lower, lower_serving,
-                              realized_assignment)
+                              realized_assignment, rereplicate_serving)
 from repro.plan.validate import (auto_spatial_width, check_roundtrip,
-                                 measure_plan, measured_design_points,
-                                 predict_plan, stage_forward)
+                                 measure_plan, measure_serving_stage_times,
+                                 measured_design_points, predict_plan,
+                                 stage_forward)
 
 __all__ = [
     "ExecutionPlan", "ServingPlan", "StagePlan", "uniform_plan",
     "fit_dp_tp", "lower", "lower_serving", "group_acc_map",
-    "realized_assignment", "auto_spatial_width", "check_roundtrip",
-    "measure_plan", "measured_design_points", "predict_plan",
-    "stage_forward",
+    "realized_assignment", "rereplicate_serving", "auto_spatial_width",
+    "check_roundtrip", "measure_plan", "measure_serving_stage_times",
+    "measured_design_points", "predict_plan", "stage_forward",
 ]

@@ -211,6 +211,13 @@ class ServingPlan:
     def n_stages(self) -> int:
         return self.plan.n_stages
 
+    @property
+    def label(self) -> str:
+        """Compact design-point tag ("3s x 2r c16") for controller logs,
+        bench rows, and the serve CLI; the monolithic point (no plan) is
+        conventionally labelled "mono"."""
+        return f"{self.n_stages}s x {self.n_replicas}r c{self.chunk}"
+
     def replica_of_slot(self, slot: int) -> Tuple[int, int]:
         """Global slot id -> (replica index, slot index inside it)."""
         start = 0

@@ -161,6 +161,23 @@ def lower_serving(plan: ExecutionPlan, slots: int,
                        replica_slots=replica_slots)
 
 
+def rereplicate_serving(splan: ServingPlan, n_replicas: int, *,
+                        chunk: Optional[int] = None) -> ServingPlan:
+    """A new design point on the same stage slices with a different
+    spatial decode width: re-lower ``splan`` with ``n_replicas`` replicas
+    (the underlying ``ExecutionPlan``'s ``n_microbatches``), keeping the
+    engine's slot count.  This is how the adaptive controller's candidate
+    ladder is built from one searched plan — the stage cut is the searched
+    artifact; the spatial width is the traffic-dependent knob."""
+    import dataclasses
+    if n_replicas < 1:
+        raise ValueError(
+            f"rereplicate_serving: n_replicas={n_replicas} must be >= 1")
+    plan = dataclasses.replace(splan.plan, n_microbatches=n_replicas)
+    return lower_serving(plan, splan.slots,
+                         chunk=splan.chunk if chunk is None else chunk)
+
+
 def realized_assignment(plan: ExecutionPlan, graph: Graph) -> Assignment:
     """Map a plan back onto the graph as an ``Assignment`` with the
     *realized* per-stage submeshes (uniform slot width, re-fit dp/tp) —

@@ -257,6 +257,14 @@ class _PrefillItem:
     #                                 skipped (chunks cover the suffix)
     bt: Any = None                  # (1, max_blocks) gather table (paged)
     wt: Any = None                  # (1, max_blocks) fresh-write table
+    rt: Any = None                  # the PlanRuntime this item was admitted
+    #                                 under.  Drain-and-rebind: a re-plan
+    #                                 (``ServingEngine.replan``) never
+    #                                 re-slices an in-flight chunk's stage
+    #                                 walk — its remaining chunks finish on
+    #                                 the runtime that started them, while
+    #                                 new admissions (and decode) bind the
+    #                                 new plan.
 
 
 class PlanRuntime:
@@ -352,19 +360,38 @@ class PrefillPipeline:
         self.items.append(_PrefillItem(
             req=req, slot=slot, replica=replica, local_slot=local_slot,
             chunks=chunks, part_cache=part_cache, reused=reused,
-            bt=bt, wt=wt))
+            bt=bt, wt=wt, rt=self.rt))
+
+    def adopt(self, items: List[_PrefillItem]):
+        """Transplant in-flight items from a prior pipeline (re-plan
+        drain-and-rebind).  Each item keeps its own ``rt``: its remaining
+        chunks walk the stage slices it was admitted under — only the
+        replica-cache routing (``item.replica``) is remapped by the
+        engine before adoption."""
+        self.items.extend(items)
 
     def _run_stage(self, it: _PrefillItem, si: int, cont: bool, hidden,
                    pos_base: int, caches):
         """Execute one stage for one chunk, routing paged items through
         the replica-cache-threading stage fns."""
+        rt = it.rt or self.rt
         if it.bt is not None:
-            fn = self.rt.stage_fns_paged[(si, cont)]
-            hidden, caches[it.replica], it.part_cache = fn(
+            fn = rt.stage_fns_paged[(si, cont)]
+            hidden, new_cache, it.part_cache = fn(
                 self.params, caches[it.replica], it.part_cache, hidden,
                 jnp.int32(pos_base), it.bt, it.wt)
+            caches[it.replica] = new_cache
+            # every replica cache fronts ONE shared physical pool; the
+            # stage step consumed (donated) the pool buffers through this
+            # replica's view, so re-alias the fresh pool leaves into the
+            # other replicas' views before anything else touches them
+            if len(caches) > 1:
+                for r in range(len(caches)):
+                    if r != it.replica:
+                        caches[r] = T.rebind_pool_leaves(caches[r],
+                                                         new_cache)
         else:
-            fn = self.rt.stage_fns[(si, cont)]
+            fn = rt.stage_fns[(si, cont)]
             hidden, it.part_cache = fn(
                 self.params, it.part_cache, hidden, jnp.int32(pos_base))
         return hidden
@@ -390,7 +417,11 @@ class PrefillPipeline:
         items are in flight (their stage steps rebind
         ``caches[replica]``); on_chunk(slot, tokens_done) fires each time
         a paged chunk clears the last stage."""
-        S = self.rt.splan.n_stages
+        # per-item stage counts: after a re-plan, drained items still walk
+        # the (possibly deeper/shallower) stage ladder they started on
+        def n_stages(it):
+            return (it.rt or self.rt).splan.n_stages
+
         occupied = set()
         finished: List[_PrefillItem] = []
 
@@ -407,7 +438,7 @@ class PrefillPipeline:
                 it, fl.si, fl.ci > 0 or it.reused > 0, fl.hidden,
                 fl.pos_base, caches)
             fl.si += 1
-            if fl.si == S:
+            if fl.si == n_stages(it):
                 it.flight.remove(fl)
                 self._chunk_exited(it, fl, finished, on_chunk)
 
@@ -428,7 +459,7 @@ class PrefillPipeline:
             fl = _Flight(ci=it.next_chunk, si=1, hidden=hidden,
                          pos_base=pos_base)
             it.next_chunk += 1
-            if fl.si == S:
+            if fl.si == n_stages(it):
                 self._chunk_exited(it, fl, finished, on_chunk)
             else:
                 it.flight.append(fl)

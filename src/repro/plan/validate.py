@@ -158,6 +158,73 @@ def measure_plan(model, params, batch, plan: ExecutionPlan, *,
     return res
 
 
+def measure_serving_stage_times(model, params, splan, max_seq: int, *,
+                                runtime=None, repeat: int = 3) -> Dict:
+    """Measured wall seconds of one ServingPlan's serving-side jitted
+    units, the inputs to the adaptive re-plan controller's windowed cost
+    model (``serving.adaptive``):
+
+      * ``stage_s[s]`` — one chunk-prefill stage-step of stage ``s``
+        (batch 1, ``splan.chunk`` tokens), i.e. the per-tick cost the
+        ``PrefillPipeline`` adds while a prompt is streaming;
+      * ``decode_step_s[r]`` — one batched decode step of replica ``r``
+        (batch = its slot-partition width).
+
+    Compile time is excluded (one warmup call per fn).  Pass the engine's
+    cached ``PlanRuntime`` as ``runtime`` to reuse its compiled stage fns;
+    timing uses throwaway dense caches, never live engine state."""
+    from repro.plan.serving import PlanRuntime   # local: serving imports us
+    rt = runtime if runtime is not None else PlanRuntime(model, splan,
+                                                         max_seq)
+
+    def _timed(fn):
+        # fn() must consume/produce its own donated state and return
+        # something blockable
+        jax.block_until_ready(fn())               # compile outside the clock
+        t0 = time.perf_counter()
+        for _ in range(repeat):
+            out = jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) / repeat
+
+    chunk = min(splan.chunk, max_seq)
+    tokens = jnp.zeros((1, chunk), jnp.int32)
+    hidden = rt.embed(params, tokens)
+    stage_s = []
+    state = {"part": model.init_cache(1, max_seq), "h": hidden}
+    for s in range(splan.n_stages):
+        fn = rt.stage_fns[(s, False)]
+        h_in = state["h"]
+
+        def run(fn=fn, h_in=h_in):
+            h, state["part"] = fn(params, state["part"], h_in, jnp.int32(0))
+            return h
+        stage_s.append(_timed(run))
+        state["h"] = run()
+
+    decode_step_s = []
+    per_width: Dict[int, float] = {}
+    for n in splan.replica_slots:
+        if n not in per_width:
+            st = {"cache": model.init_cache(n, max_seq)}
+            toks = jnp.zeros((n, 1), jnp.int32)
+            pos = jnp.zeros((n,), jnp.int32)
+
+            def run_dec():
+                nxt, st["cache"] = rt.decode_step(params, st["cache"],
+                                                  toks, pos)
+                return nxt
+            per_width[n] = _timed(run_dec)
+        decode_step_s.append(per_width[n])
+    return {
+        "stage_s": stage_s,
+        "decode_step_s": decode_step_s,
+        "chunk": splan.chunk,
+        "n_stages": splan.n_stages,
+        "n_replicas": splan.n_replicas,
+        "backend": _backend_name(),
+    }
+
+
 def predict_plan(plan: ExecutionPlan, graph: Graph, *, hw: Chip = TPU_V5E,
                  feats: Features = Features()) -> Dict:
     """Analytic prediction for the realized plan: the scheduler prices the

@@ -1,3 +1,5 @@
+from repro.serving.adaptive import (AdaptiveConfig, PlanProfile,
+                                    ReplanController)
 from repro.serving.engine import (Request, ServingEngine, make_prefill_step,
                                   make_prefill_slot_step, make_serve_step,
                                   make_verify_step, ngram_draft)

@@ -29,10 +29,21 @@ refcounted, copy-on-write on first divergent write) and LRU reuse of
 released blocks — see ``repro.cache`` and ``docs/serving.md``.  SSM state
 and sliding-window rings stay dense; the parity guarantee is unchanged.
 
+**Adaptive mode** (``adapt=AdaptiveConfig(...)``) makes the searched
+Pareto front *live*: a re-plan controller (``repro.serving.adaptive``)
+watches rolling-window arrival rate, queue depth and TTFT/TPOT against
+SLO targets and calls ``replan()`` when a different design point
+dominates — swapping between monolithic and plan-driven bindings (or
+between plans) WITHOUT dropping requests.  One ``PagedCacheManager``
+(global slot ids, one physical pool shared by every decode replica)
+makes the swap zero-copy on the paged path: a slot's state is its
+block-table row, so migration is a table handoff, never a KV copy.
+
 Guarantee (tested by ``tests/test_serving_parity.py``): the token stream
 of every request is exactly equal to an isolated one-shot greedy decode
 of that request, regardless of arrival order, prompt-length mix, slot
-count — or ServingPlan, or cache layout (dense / paged).
+count — or ServingPlan, or cache layout (dense / paged), or any
+sequence of live re-plans.
 
 ``serve_step`` — the function the decode-shape dry-runs lower — is one
 batched decode step over a fixed slot set and keeps accepting a scalar
@@ -195,7 +206,11 @@ class ServingEngine:
     paging entirely.  ``num_blocks=0`` sizes the pool to the dense
     reservation (sharing then only *frees* blocks); smaller pools admit
     more slots than dense could — admission defers while the pool is
-    full.  In plan mode each decode replica owns its own pool partition.
+    full.  Plan mode shares ONE pool (and one manager, keyed by global
+    slot ids) across all decode replicas: each replica's cache is a view
+    whose paged leaves alias the same physical arrays, so prefix blocks
+    are shared engine-wide and slot migration between replicas or plans
+    (``replan``) is a block-table handoff, never a KV copy.
     """
     model: Model
     params: Any
@@ -230,6 +245,11 @@ class ServingEngine:
     #                                  tokens per byte of the fp layout
     #                                  (see stats()["cache"]
     #                                  ["kv_capacity_x"]); fp is bit-exact
+    adapt: Optional[Any] = None      # repro.serving.adaptive.AdaptiveConfig:
+    #                                  traffic-adaptive re-planning — a
+    #                                  controller scores the candidate
+    #                                  design points each tick window and
+    #                                  calls replan() when one dominates
 
     def __post_init__(self):
         from repro.models import transformer as T
@@ -280,7 +300,10 @@ class ServingEngine:
                         if (self.speculate > 0
                             and T.supports_prefix_compute_reuse(self.cfg))
                         else 0)
-        if self._spec_k and self.plan is None:
+        if self._spec_k:
+            # built regardless of plan mode: a re-plan to monolithic must
+            # be able to verify without mid-traffic setup (jit compiles
+            # lazily, so an unused wrapper costs nothing)
             self._verify_step = compat.donating_jit(
                 make_verify_step(self.model), donate_argnums=(1,))
         if self.kv_dtype not in ("fp", "int8"):
@@ -305,63 +328,48 @@ class ServingEngine:
                                                       donate_argnums=(0,))
         # engine-lifetime state -------------------------------------------
         self._pf = None
-        self._pager = None               # monolithic PagedCacheManager
-        self._pagers = None              # one per plan decode replica
+        self._pager = None               # ONE PagedCacheManager for the
+        #                                  whole engine, monolithic AND
+        #                                  plan mode: rows are global slot
+        #                                  ids and every decode replica's
+        #                                  cache fronts the same physical
+        #                                  pool, so prefix blocks share
+        #                                  engine-wide and slot migration
+        #                                  (replan / work stealing) is a
+        #                                  table handoff, never a KV copy
         self._admit_plans = {}           # slot -> AdmitPlan (mid-prefill)
+        self._rt = None
+        self._rt_cache = {}              # ServingPlan -> PlanRuntime: a
+        #                                  re-plan returning to a seen
+        #                                  point reuses its compiled fns
+        self._caches = None
         bps = self.max_seq // self.page_size if self.paged else 0
+        self._total_blocks = (self.num_blocks or self.slots * bps
+                              if self.paged else 0)
+        if self.paged:
+            from repro.cache import PagedCacheManager
+            self._pager = PagedCacheManager(
+                self.slots, self.max_seq, self.page_size,
+                self._total_blocks,
+                prefix_cache=self.prefix_cache, kv_dtype=self.kv_dtype,
+                kv_capacity_ratio=T.paged_kv_capacity_ratio(
+                    self.cfg, self.kv_dtype))
         if self.plan is not None:
-            from repro.plan.serving import PlanRuntime, PrefillPipeline
+            from repro.plan.serving import PrefillPipeline
             if self.plan.slots != self.slots:
                 raise ValueError(
                     f"ServingPlan was lowered for {self.plan.slots} slots "
                     f"but the engine has {self.slots}; re-lower via "
                     f"lower_serving(plan, slots={self.slots})")
-            self._rt = PlanRuntime(self.model, self.plan, self.max_seq)
+            self._rt = self._runtime_for(self.plan)
             self._pf = PrefillPipeline(self._rt, self.params)
-            # one engine-lifetime cache per decode replica (its slot
-            # partition is the batch axis); paged replicas each own a
-            # partition of the block pool
-            if self.paged:
-                from repro.cache import PagedCacheManager
-                total = self.num_blocks or self.slots * bps
-                # exact proportional split (sums to the requested total —
-                # an explicit num_blocks is a memory cap, never inflated);
-                # a partition too small for a request raises PoolExhausted
-                # at admission with a sizing message
-                nb = [total * n // self.slots
-                      for n in self.plan.replica_slots]
-                for i in range(total - sum(nb)):
-                    nb[i] += 1
-                ratio = T.paged_kv_capacity_ratio(self.cfg, self.kv_dtype)
-                self._pagers = [
-                    PagedCacheManager(n, self.max_seq, self.page_size, b,
-                                      prefix_cache=self.prefix_cache,
-                                      kv_dtype=self.kv_dtype,
-                                      kv_capacity_ratio=ratio)
-                    for n, b in zip(self.plan.replica_slots, nb)]
-                self._caches = [
-                    self.model.init_paged_cache(
-                        n, self.max_seq, page_size=self.page_size,
-                        num_blocks=b, kv_dtype=self.kv_dtype)
-                    for n, b in zip(self.plan.replica_slots, nb)]
-            else:
-                self._caches = [self.model.init_cache(n, self.max_seq)
-                                for n in self.plan.replica_slots]
+            # one cache VIEW per decode replica (its slot partition is
+            # the dense batch axis); paged views alias one shared pool
+            self._caches = self._replica_views(self.plan, self._full_init())
             self._cache = None
             self.prefill_bucket = 1       # chunks run at exact lengths
-        elif self.paged:
-            from repro.cache import PagedCacheManager
-            nb = self.num_blocks or self.slots * bps
-            self._pager = PagedCacheManager(
-                self.slots, self.max_seq, self.page_size, nb,
-                prefix_cache=self.prefix_cache, kv_dtype=self.kv_dtype,
-                kv_capacity_ratio=T.paged_kv_capacity_ratio(
-                    self.cfg, self.kv_dtype))
-            self._cache = self.model.init_paged_cache(
-                self.slots, self.max_seq, page_size=self.page_size,
-                num_blocks=nb, kv_dtype=self.kv_dtype)
         else:
-            self._cache = self.model.init_cache(self.slots, self.max_seq)
+            self._cache = self._full_init()
         self._pos = np.zeros((self.slots,), np.int32)    # tokens in cache
         self._cur = np.zeros((self.slots, 1), np.int32)  # next input token
         # overlap (async) runtime state: an effective speculate forces
@@ -400,15 +408,31 @@ class ServingEngine:
         self.spec_steps = 0               # decode ticks that ran a verify
         self.spec_proposed = 0            # drafted tokens offered to verify
         self.spec_accepted = 0            # drafted tokens accepted
+        self.replans = 0                  # live plan swaps this window
+        self.migrations = 0               # slots moved (work stealing)
+        self.migration_copies = 0         # device row moves those cost —
+        #                                  stays 0 on the paged path for
+        #                                  models with no dense slot
+        #                                  leaves (the zero-copy claim)
         # host wall-clock per engine phase, accumulated across ticks.
-        # "host_sync" is an OVERLAY bucket, not a fourth partition: it
+        # "host_sync" is an OVERLAY bucket, not a partition member: it
         # accrues inside whichever phase window is open and measures how
         # much of that phase the host spent blocked on device readback
         # (the quantity the async runtime shrinks) — see _sync().
+        # "replan" charges controller decisions + live swaps, so the
+        # migration interval is accounted, never lost or double-counted.
         self.phase_time = {"admission": 0.0, "prefill": 0.0, "decode": 0.0,
-                           "host_sync": 0.0}
+                           "replan": 0.0, "host_sync": 0.0}
         self._prefill_window = 0.0        # prefill seconds inside _admit()
         self._t_window = time.perf_counter()  # stats window start (reset_stats)
+        self.submitted = 0                # lifetime submissions (monotonic)
+        self._arrival_log = []            # (t_submit, prompt_len, max_new)
+        #                                  ring consumed by the controller
+        self._ctl = None
+        if self.adapt is not None:
+            from repro.serving.adaptive import ReplanController
+            self._ctl = ReplanController(self.adapt)
+            self._ctl.validate(self)
 
     # -- public API --------------------------------------------------------
     def submit(self, req: Request):
@@ -418,6 +442,11 @@ class ServingEngine:
                 f"max_seq={self.max_seq} slot cache")
         req.t_submit = time.perf_counter()
         self.queue.append(req)
+        self.submitted += 1
+        self._arrival_log.append((req.t_submit, len(req.prompt),
+                                  req.max_new_tokens))
+        if len(self._arrival_log) > 4 * self.slots + 256:
+            del self._arrival_log[:len(self._arrival_log) // 2]
 
     @property
     def active(self) -> int:
@@ -440,6 +469,12 @@ class ServingEngine:
         step N-1 and runs the next tick's admission bookkeeping.  The
         drained tokens retire slots exactly as sync mode does, one tick
         later; the per-request token streams are identical."""
+        if self._ctl is not None and not self._ctl.paused:
+            tc = time.perf_counter()
+            decision = self._ctl.observe(self)  # None = keep, (plan,) = swap
+            self.phase_time["replan"] += time.perf_counter() - tc
+            if decision is not None:
+                self.replan(decision[0])
         t0 = time.perf_counter()
         self._prefill_window = 0.0
         self._admit()
@@ -447,12 +482,23 @@ class ServingEngine:
         self.phase_time["admission"] += (t1 - t0) - self._prefill_window
         self.phase_time["prefill"] += self._prefill_window
         if self._pf is not None and self._pf.busy:
-            for item in self._pf.step(
-                    caches=self._caches if self._pagers is not None
-                    else None,
-                    on_chunk=self._chunk_committed):
+            # paged stage steps thread the replica caches; after a re-plan
+            # to monolithic the drained items route through a one-entry
+            # list wrapping the monolithic cache (item.replica remapped 0)
+            if self.paged:
+                clist = self._caches if self.plan is not None \
+                    else [self._cache]
+            else:
+                clist = self._caches if self.plan is not None else None
+            finished = self._pf.step(caches=clist,
+                                     on_chunk=self._chunk_committed)
+            if self.paged and self.plan is None:
+                self._cache = clist[0]
+            for item in finished:
                 self._finish_prefill(item)
             self.phase_time["prefill"] += time.perf_counter() - t1
+        if self._pf is not None and self.plan is None and not self._pf.busy:
+            self._pf = None       # old pipeline fully drained post-re-plan
         if self.active or self._inflight:
             t2 = time.perf_counter()
             dispatched = False
@@ -479,6 +525,192 @@ class ServingEngine:
             steps += 1
         return self.done
 
+    def replan(self, plan, *, rebalance: bool = True):
+        """Swap the engine onto a different ``ServingPlan`` (None =
+        monolithic) WITHOUT dropping requests — the online Pareto move.
+
+        What moves, and what does not:
+          * paged K/V: never.  Every replica fronts ONE physical pool and
+            ONE ``PagedCacheManager`` whose rows are global slot ids, so
+            a slot's paged state is plan-independent — re-binding decode
+            to a new replica partition is pure pytree restructuring
+            (``slice_cache_slots`` / ``concat_cache_slots`` pass pool
+            leaves through untouched).  ``migration_copies`` stays 0.
+          * dense slot leaves (SSM state, local-window rings; every leaf
+            on a dense engine): re-layout between partitions by slot-axis
+            concat/slice.  All-global-attention paged models have none —
+            their swap does no device work at all.
+          * in-flight chunked prefills: drain-and-rebind — remaining
+            chunks finish on the runtime they were admitted under
+            (bit-exact stage walk), only their replica-cache routing is
+            remapped; decode re-binds to the new plan immediately.
+          * overlap mode: the undrained steps land first (the same drain
+            the final ticks run — token streams are unaffected).
+
+        Stats windows are CONTINUOUS across the swap: no counter resets,
+        the swap's own wall time accrues in ``phase_time["replan"]``, and
+        the surviving pool re-attaches to the engine-lifetime peak
+        tracker (idempotent), so the concurrent peak spans the swap.
+
+        ``replan(current_plan)`` degenerates to pure cross-replica work
+        stealing: re-balance the active slots over the replicas with
+        zero-copy migrations (``rebalance=False`` suppresses it)."""
+        from repro.models import transformer as T
+        t0 = time.perf_counter()
+        if plan is not None and plan.slots != self.slots:
+            raise ValueError(
+                f"ServingPlan was lowered for {plan.slots} slots "
+                f"but the engine has {self.slots}; re-lower via "
+                f"lower_serving(plan, slots={self.slots})")
+        if plan == self.plan:
+            if rebalance and self.plan is not None:
+                self._drain_inflight()
+                self._rebalance_slots()
+            self.phase_time["replan"] += time.perf_counter() - t0
+            return
+        # 1. land everything in flight on the old binding
+        self._drain_inflight()
+        # 2. collect the full slot-axis cache (dense leaves concat in
+        #    replica order — partitions are contiguous ascending slot
+        #    ranges; shared paged pool leaves pass through as-is)
+        if self.plan is not None:
+            full = T.concat_cache_slots(self._caches)
+        else:
+            full = self._cache
+        # 3. drain-and-rebind the prefill pipeline: in-flight items keep
+        #    their admission runtime (item.rt); only the replica-cache
+        #    routing is remapped to wherever their slot lives now
+        items = list(self._pf.items) if self._pf is not None else []
+        if plan is not None:
+            from repro.plan.serving import PrefillPipeline
+            self._rt = self._runtime_for(plan)
+            pf = PrefillPipeline(self._rt, self.params)
+            pf.adopt(items)
+            self._pf = pf
+        else:
+            self._rt = None
+            if not items:
+                self._pf = None
+            # else: the old pipeline survives solely to drain its items
+            # (tick() routes it the monolithic cache and drops it dry)
+        for it in items:
+            it.replica, it.local_slot = ((0, it.slot) if plan is None
+                                         else plan.replica_of_slot(it.slot))
+        # 4. re-bind decode to the new replica partition
+        self.plan = plan
+        if plan is not None:
+            self._caches = self._replica_views(plan, full)
+            self._cache = None
+        else:
+            self._cache = full
+            self._caches = None
+        # 5. the pool and its manager survive verbatim (rows are global
+        #    slot ids) — re-attach to the engine-lifetime peak tracker
+        for pager in self._all_pagers():
+            self._peak_tracker.attach(pager.pool)
+        # 6. spread the surviving decode slots over the new replicas
+        if rebalance and plan is not None:
+            self._rebalance_slots()
+        self.replans += 1
+        self.phase_time["replan"] += time.perf_counter() - t0
+
+    def warm_replans(self):
+        """Exercise every adaptive candidate once (measured profiles,
+        runtimes, and a tiny end-to-end request per candidate) so jitted
+        paths compile outside the measured window, then restore the
+        initial binding.  Call before ``reset_stats()`` in benchmarks."""
+        if self._ctl is None:
+            return
+        initial = self.plan
+        self._ctl.paused = True
+        try:
+            self._ctl.warm(self)
+            uid = -1
+            for cand in self._ctl.cfg.plans:
+                self.replan(cand, rebalance=False)
+                chunk = cand.chunk if cand is not None else 4
+                prompt = np.ones((max(2 * chunk, 4),), np.int32)
+                self.submit(Request(uid=uid, prompt=prompt,
+                                    max_new_tokens=3))
+                uid -= 1
+                self.run()
+            self.replan(initial, rebalance=False)
+        finally:
+            self._ctl.paused = False
+
+    def _drain_inflight(self):
+        """Retire the async runtime's undrained steps (overlap mode): a
+        re-plan re-binds the decode caches, so every dispatched step must
+        land first.  The same drain the final ticks run — token streams
+        are unaffected."""
+        while self._inflight:
+            self._drain_one()
+        self._cur_dev = None
+
+    def _rebalance_slots(self):
+        """Cross-replica work stealing: migrate active decode slots from
+        overloaded replicas onto free slots of underloaded ones until no
+        replica holds 2+ more than another.  Mid-prefill (reserved) slots
+        stay put — their chunks are still streaming.  Paged moves are
+        block-table handoffs (zero KV copies)."""
+        plan = self.plan
+        R = plan.n_replicas
+        while True:
+            load = [0] * R
+            for s in range(self.slots):
+                if self._slot_req[s] is not None or s in self._reserved:
+                    load[plan.replica_of_slot(s)[0]] += 1
+            hi = max(range(R), key=lambda r: load[r])
+            lo = min(range(R), key=lambda r: load[r])
+            if load[hi] - load[lo] <= 1:
+                return
+            a, b = plan.replica_range(hi)
+            movable = [s for s in range(a, b)
+                       if self._slot_req[s] is not None
+                       and s not in self._reserved]
+            la, lb = plan.replica_range(lo)
+            dsts = [s for s in range(la, lb)
+                    if self._slot_req[s] is None
+                    and s not in self._reserved]
+            if not movable or not dsts:
+                return        # surplus is all mid-prefill: nothing to steal
+            self._migrate_slot(movable[-1], dsts[0])
+
+    def _migrate_slot(self, src: int, dst: int):
+        """Move one ACTIVE decode request between slots (and thus
+        replicas).  Paged path: the slot's state IS its block-table row —
+        ``PagedCacheManager.migrate_slot`` hands the row over and no KV
+        moves.  Dense slot leaves (SSM state, rings; all leaves on a
+        dense engine) move one batch row on device; ``migration_copies``
+        counts those and stays 0 for all-global-attention paged models."""
+        from repro.models import transformer as T
+        assert self._slot_req[dst] is None and dst not in self._reserved
+        assert src not in self._reserved
+        req = self._slot_req[src]
+        if self._pager is not None:
+            self._pager.migrate_slot(src, dst)
+        rs, ls = self.plan.replica_of_slot(src)
+        rd, ld = self.plan.replica_of_slot(dst)
+        part = T.extract_dense_slot(self._caches[rs], ls)
+        if part:
+            if self.paged:
+                self._caches[rd] = self._scatter_paged(
+                    self._caches[rd], part, jnp.int32(ld))
+                self._share_pool(rd)
+            else:
+                self._caches[rd] = T.scatter_cache_slot(
+                    self._caches[rd], part, jnp.int32(ld))
+            self.migration_copies += 1
+        self._slot_req[dst] = req
+        self._slot_req[src] = None
+        req.slot = dst
+        self._pos[dst] = self._pos[src]
+        self._pos[src] = 0
+        self._cur[dst] = self._cur[src]
+        self._cur_known[dst] = self._cur_known[src]
+        self._cur_known[src] = True
+        self.migrations += 1
+
     def reset_stats(self):
         """Zero the counters (e.g. after a compile-warmup run) so stats()
         reports only the measured window.  Active slots (and the blocks
@@ -496,8 +728,11 @@ class ServingEngine:
         self.spec_steps = 0
         self.spec_proposed = 0
         self.spec_accepted = 0
+        self.replans = 0
+        self.migrations = 0
+        self.migration_copies = 0
         self.phase_time = {"admission": 0.0, "prefill": 0.0, "decode": 0.0,
-                           "host_sync": 0.0}
+                           "replan": 0.0, "host_sync": 0.0}
         # requests already in flight keep their pre-reset t_submit; the
         # stats() wall window clamps to this timestamp so the measured
         # window never reaches back before the reset
@@ -510,11 +745,10 @@ class ServingEngine:
             p.peak_in_use = p.blocks_in_use
             p.prefill_admissions = p.prefill_compute_hits = 0
             p.reused_prefill_tokens = p.suffix_prefill_tokens = 0
+            pager.migrations = 0
 
     def _all_pagers(self):
-        if self._pager is not None:
-            return [self._pager]
-        return list(self._pagers) if self._pagers is not None else []
+        return [self._pager] if self._pager is not None else []
 
     def cache_stats(self) -> Dict[str, Any]:
         """Cache memory utilization: live vs reserved tokens, and for
@@ -586,6 +820,9 @@ class ServingEngine:
             "acceptance_rate": (self.spec_accepted
                                 / max(self.spec_proposed, 1)),
             "slot_occupancy": self._occupied_step_sum / cap,
+            "replans": self.replans,
+            "migrations": self.migrations,
+            "migration_copies": self.migration_copies,
             "throughput_tok_s": gen / wall if wall > 0 else 0.0,
             "ttft_s": [r.t_first - r.t_submit for r in reqs],
             "latency_s": [r.t_done - r.t_submit for r in reqs],
@@ -593,6 +830,8 @@ class ServingEngine:
             "phase_time_s": dict(self.phase_time),
             "cache": self.cache_stats(),
         }
+        out["plan_label"] = (self.plan.label if self.plan is not None
+                             else "mono")
         if self.plan is not None:
             out["plan_stages"] = self.plan.n_stages
             out["decode_replicas"] = self.plan.n_replicas
@@ -627,32 +866,79 @@ class ServingEngine:
                 if self._slot_req[s] is None and s not in self._reserved]
 
     def _pager_of(self, slot: int):
-        """(PagedCacheManager, manager-local slot) for an engine slot —
-        (None, slot) when the engine is dense."""
-        if self._pager is not None:
-            return self._pager, slot
-        if self._pagers is not None:
-            replica, local = self.plan.replica_of_slot(slot)
-            return self._pagers[replica], local
-        return None, slot
+        """(PagedCacheManager, manager row) for an engine slot — (None,
+        slot) when the engine is dense.  The manager is engine-global
+        (rows = global slot ids) in BOTH monolithic and plan mode."""
+        return self._pager, slot
+
+    def _full_init(self):
+        """A fresh full-width cache (batch axis = all slots): the paged
+        pool sized to the engine-global total (one physical pool,
+        whatever the replica layout)."""
+        if self.paged:
+            return self.model.init_paged_cache(
+                self.slots, self.max_seq, page_size=self.page_size,
+                num_blocks=self._total_blocks, kv_dtype=self.kv_dtype)
+        return self.model.init_cache(self.slots, self.max_seq)
+
+    def _replica_views(self, plan, full):
+        """Split a full-width cache into per-replica views: dense leaves
+        slice on the slot axis, paged pool leaves pass through — every
+        view fronts the SAME physical pool."""
+        from repro.models import transformer as T
+        return [T.slice_cache_slots(full, a, b - a)
+                for a, b in (plan.replica_range(r)
+                             for r in range(plan.n_replicas))]
+
+    def _share_pool(self, r: int):
+        """Re-alias every other replica cache's pool leaves to replica
+        ``r``'s, which a step just rebound (the step donated the shared
+        pool buffers it consumed).  Host-side pytree restructuring only —
+        this is what keeps N replica views fronting one physical pool."""
+        if not self.paged or self.plan is None:
+            return
+        from repro.models import transformer as T
+        src = self._caches[r]
+        for i in range(len(self._caches)):
+            if i != r:
+                self._caches[i] = T.rebind_pool_leaves(self._caches[i], src)
+
+    def _runtime_for(self, splan):
+        """The (cached) PlanRuntime for a ServingPlan — re-planning back
+        to a previously-seen design point reuses its compiled fns."""
+        rt = self._rt_cache.get(splan)
+        if rt is None:
+            from repro.plan.serving import PlanRuntime
+            rt = PlanRuntime(self.model, splan, self.max_seq)
+            self._rt_cache[splan] = rt
+        return rt
+
+    def _pick_slot(self, free):
+        """Admission slot choice.  Monolithic engines take the first free
+        slot; plan mode picks a free slot on the least-loaded replica so
+        admissions spread over the spatial decode replicas (the same
+        balance objective ``_rebalance_slots`` restores after a
+        re-plan).  The shared pool makes the outcome otherwise
+        slot-independent."""
+        if self.plan is None:
+            return free[0]
+        load = [0] * self.plan.n_replicas
+        for s in range(self.slots):
+            if self._slot_req[s] is not None or s in self._reserved:
+                load[self.plan.replica_of_slot(s)[0]] += 1
+        return min(free,
+                   key=lambda s: (load[self.plan.replica_of_slot(s)[0]], s))
 
     def _admit(self):
         while self.queue:
             req = self.queue[0]
-            admitted = False
-            # a plan-paged admission can fail on its slot's pool partition
-            # while another replica still has blocks: try every free slot.
-            # Everywhere else the outcome is slot-independent (dense
-            # always admits, the monolithic pool is shared) — first slot.
             free = self._free_slots()
-            if self._pagers is None:
-                free = free[:1]
-            for slot in free:
-                if (self._admit_one_plan(req, slot) if self._pf is not None
-                        else self._admit_one(req, slot)):
-                    admitted = True
-                    break
-            if not admitted:
+            if not free:
+                return
+            slot = self._pick_slot(free)
+            ok = (self._admit_one_plan(req, slot)
+                  if self.plan is not None else self._admit_one(req, slot))
+            if not ok:
                 return    # head-of-line waits for pool blocks (stays FIFO)
             self.queue.pop(0)
 
@@ -719,10 +1005,10 @@ class ServingEngine:
         scatter at finish must not fail mid-flight)."""
         replica, local = self.plan.replica_of_slot(slot)
         reused = 0
-        if self._pagers is not None:
-            ap = self._pagers[replica].admit(local, req.prompt,
-                                             req.max_new_tokens + self._spec_k,
-                                             reuse_compute=self._suffix_reuse)
+        if self._pager is not None:
+            ap = self._pager.admit(slot, req.prompt,
+                                   req.max_new_tokens + self._spec_k,
+                                   reuse_compute=self._suffix_reuse)
             if ap is None:
                 return False
             self._admit_plans[slot] = ap
@@ -751,21 +1037,36 @@ class ServingEngine:
         """Last chunk left the last stage: bank the first token, scatter
         the request's batch-1 DENSE leaves (SSM state, ring caches) into
         its replica's slot partition — the paged K/V already streamed
-        into the pool as the chunks ran — and start decoding."""
-        nxt, _ = self._rt.finish(self.params, item.final_hidden)
+        into the shared pool as the chunks ran — and start decoding.
+
+        The scatter targets the CURRENT binding: after a re-plan the
+        drained item's chunks ran on its admission runtime
+        (drain-and-rebind), but the finished slot lands wherever the slot
+        lives now (a new replica partition, or the monolithic cache)."""
+        nxt, _ = (item.rt or self._rt).finish(self.params, item.final_hidden)
         tok = int(self._sync(nxt)[0])     # host sync: prefill has run
         from repro.models import transformer as T
-        if self._pagers is not None:
+        if self.plan is not None:
+            replica, local = self.plan.replica_of_slot(item.slot)
+            if self.paged:
+                self._admit_plans.pop(item.slot, None)
+                self._caches[replica] = self._scatter_paged(
+                    self._caches[replica], item.part_cache,
+                    jnp.int32(local))
+                self._share_pool(replica)
+                self._pager.commit(item.slot)
+            else:
+                self._caches[replica] = T.scatter_cache_slot(
+                    self._caches[replica], item.part_cache,
+                    jnp.int32(local))
+        elif self.paged:
             self._admit_plans.pop(item.slot, None)
-            pager = self._pagers[item.replica]
-            self._caches[item.replica] = self._scatter_paged(
-                self._caches[item.replica], item.part_cache,
-                jnp.int32(item.local_slot))
-            pager.commit(item.local_slot)
+            self._cache = self._scatter_paged(
+                self._cache, item.part_cache, jnp.int32(item.slot))
+            self._pager.commit(item.slot)
         else:
-            self._caches[item.replica] = T.scatter_cache_slot(
-                self._caches[item.replica], item.part_cache,
-                jnp.int32(item.local_slot))
+            self._cache = T.scatter_cache_slot(
+                self._cache, item.part_cache, jnp.int32(item.slot))
         self._reserved.discard(item.slot)
         self._activate(item.req, item.slot, tok)
 
@@ -786,7 +1087,7 @@ class ServingEngine:
         self._maybe_retire(slot, req.t_first)
 
     # ---- decode ----------------------------------------------------------
-    def _prepare_paged_writes(self, pager, first: int, last: int):
+    def _prepare_paged_writes(self, first: int, last: int):
         """Before a decode step: make every active slot's target block
         writable — allocate at page boundaries, copy-on-write shared or
         registered blocks (the device page copy runs here, before the
@@ -794,16 +1095,17 @@ class ServingEngine:
         for slot in range(first, last):
             if self._slot_req[slot] is None:
                 continue
-            cow = pager.prepare_decode(slot - first, int(self._pos[slot]))
+            cow = self._pager.prepare_decode(slot, int(self._pos[slot]))
             if cow is not None:
                 src, dst = cow
-                if self._pager is not None:
+                if self.plan is None:
                     self._cache = self._copy_pages(
                         self._cache, jnp.int32(src), jnp.int32(dst))
                 else:
                     r, _ = self.plan.replica_of_slot(slot)
                     self._caches[r] = self._copy_pages(
                         self._caches[r], jnp.int32(src), jnp.int32(dst))
+                    self._share_pool(r)
 
     def _decode_once(self):
         """One batched decode step at per-slot positions.  Idle slots ride
@@ -826,10 +1128,10 @@ class ServingEngine:
                 self._decode_slot_steps += act
                 self._occupied_step_sum += self.active
                 return
-        if self._pf is None:
+        if self.plan is None:
             bt = None
             if self._pager is not None:
-                self._prepare_paged_writes(self._pager, 0, self.slots)
+                self._prepare_paged_writes(0, self.slots)
                 bt = jnp.asarray(self._pager.table_matrix())
             nxt, _, self._cache = self.serve_step(
                 self.params, self._cache, jnp.asarray(self._cur),
@@ -841,6 +1143,9 @@ class ServingEngine:
             # dispatch every replica's step before syncing any result —
             # the replicas are independent, so their device computations
             # may overlap; only then round-trip the tokens to the host.
+            # (Paged replicas chain through the shared pool: each step
+            # consumes the pool leaves the previous one produced — the
+            # rebinding in _share_pool, serialized by data dependency.)
             pending = []
             for r in range(self.plan.n_replicas):
                 a, b = self.plan.replica_range(r)
@@ -848,13 +1153,14 @@ class ServingEngine:
                            for s in range(a, b)):
                     continue
                 bt = None
-                if self._pagers is not None:
-                    self._prepare_paged_writes(self._pagers[r], a, b)
-                    bt = jnp.asarray(self._pagers[r].table_matrix())
+                if self.paged:
+                    self._prepare_paged_writes(a, b)
+                    bt = jnp.asarray(self._pager.table_matrix()[a:b])
                 nxt, self._caches[r] = self._rt.decode_step(
                     self.params, self._caches[r],
                     jnp.asarray(self._cur[a:b]),
                     jnp.asarray(self._pos[a:b]), bt)
+                self._share_pool(r)
                 pending.append((nxt, a, b))
             arrs = [(self._sync(nxt), a, b) for nxt, a, b in pending]
             now = time.perf_counter()
@@ -886,10 +1192,10 @@ class ServingEngine:
             self._cur_dev = jnp.asarray(self._cur)
         arrs = []
         rng = []
-        if self._pf is None:
+        if self.plan is None:
             bt = None
             if self._pager is not None:
-                self._prepare_paged_writes(self._pager, 0, self.slots)
+                self._prepare_paged_writes(0, self.slots)
                 bt = jnp.asarray(self._pager.table_matrix())
             nxt, _, self._cache = self.serve_step(
                 self.params, self._cache, self._cur_dev,
@@ -904,12 +1210,13 @@ class ServingEngine:
                            for s in range(a, b)):
                     continue
                 bt = None
-                if self._pagers is not None:
-                    self._prepare_paged_writes(self._pagers[r], a, b)
-                    bt = jnp.asarray(self._pagers[r].table_matrix())
+                if self.paged:
+                    self._prepare_paged_writes(a, b)
+                    bt = jnp.asarray(self._pager.table_matrix()[a:b])
                 nxt, self._caches[r] = self._rt.decode_step(
                     self.params, self._caches[r], self._cur_dev[a:b],
                     jnp.asarray(self._pos[a:b]), bt)
+                self._share_pool(r)
                 self._cur_dev = self._cur_dev.at[a:b].set(nxt)
                 arrs.append((nxt, a, b))
                 rng.append((a, b))
@@ -994,7 +1301,7 @@ class ServingEngine:
             any_draft = any_draft or bool(d)
         return drafts if any_draft else None
 
-    def _prepare_verify_writes(self, pager, first: int, last: int, sw: int):
+    def _prepare_verify_writes(self, first: int, last: int, sw: int):
         """Before a verify step: make every window position's block
         writable for every active slot (boundary blocks allocate, a
         shared or registered block copy-on-writes — only possible at the
@@ -1005,16 +1312,17 @@ class ServingEngine:
                 continue
             pos = int(self._pos[slot])
             for j in range(sw):
-                cow = pager.prepare_decode(slot - first, pos + j)
+                cow = self._pager.prepare_decode(slot, pos + j)
                 if cow is not None:
                     src, dst = cow
-                    if self._pager is not None:
+                    if self.plan is None:
                         self._cache = self._copy_pages(
                             self._cache, jnp.int32(src), jnp.int32(dst))
                     else:
                         r, _ = self.plan.replica_of_slot(slot)
                         self._caches[r] = self._copy_pages(
                             self._caches[r], jnp.int32(src), jnp.int32(dst))
+                        self._share_pool(r)
 
     def _decode_verify(self, drafts: Dict[int, List[int]]):
         """One speculative tick: write + score each slot's (K+1)-token
@@ -1029,10 +1337,10 @@ class ServingEngine:
         for slot, d in drafts.items():
             if d:
                 window[slot, 1:1 + len(d)] = d
-        if self._pf is None:
+        if self.plan is None:
             bt = None
             if self._pager is not None:
-                self._prepare_verify_writes(self._pager, 0, self.slots, sw)
+                self._prepare_verify_writes(0, self.slots, sw)
                 bt = jnp.asarray(self._pager.table_matrix())
             outs, self._cache = self._verify_step(
                 self.params, self._cache, jnp.asarray(window),
@@ -1048,13 +1356,14 @@ class ServingEngine:
                            for s in range(a, b)):
                     continue
                 bt = None
-                if self._pagers is not None:
-                    self._prepare_verify_writes(self._pagers[r], a, b, sw)
-                    bt = jnp.asarray(self._pagers[r].table_matrix())
+                if self.paged:
+                    self._prepare_verify_writes(a, b, sw)
+                    bt = jnp.asarray(self._pager.table_matrix()[a:b])
                 outs, self._caches[r] = self._rt.verify_step(
                     self.params, self._caches[r],
                     jnp.asarray(window[a:b]),
                     jnp.asarray(self._pos[a:b]), bt)
+                self._share_pool(r)
                 pending.append((outs, a, b))
             arrs = [(self._sync(o), a, b) for o, a, b in pending]
             now = time.perf_counter()

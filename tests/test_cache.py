@@ -378,6 +378,72 @@ def test_release_parks_registered_blocks_for_reuse():
 
 
 # ---------------------------------------------------------------------------
+# slot migration (re-plan / work stealing) + peak-tracker re-attach
+# ---------------------------------------------------------------------------
+
+def test_migrate_slot_hands_over_table_row_without_touching_pool():
+    """Zero-copy slot migration: the whole move is a block-table row
+    handoff — same physical blocks, same refcounts, no allocation, no
+    release, no COW.  The destination row then decodes exactly as the
+    source would have."""
+    m = _mgr(slots=3)
+    m.admit(0, np.arange(1, 10))          # 9 tokens: 2 full + 1 tail block
+    m.commit(0)
+    blocks = list(m.tables[0].blocks)
+    chain = list(m.tables[0].chain)
+    in_use = m.pool.blocks_in_use
+    refs = list(m.pool.refcount)
+
+    m.migrate_slot(0, 2)
+    assert m.migrations == 1 and m.stats()["migrations"] == 1
+    assert list(m.tables[2].blocks) == blocks
+    assert m.tables[2].chain == chain
+    assert m.tables[0].n_mapped == 0 and m.tables[0].chain == []
+    assert all(b == -1 for b in m.tables[0].blocks)
+    # the pool never noticed: no alloc/free/COW/refcount churn
+    assert m.pool.blocks_in_use == in_use
+    assert list(m.pool.refcount) == refs
+    assert m.pool.cow_copies == 0 and m.pool.evictions == 0
+    # decode continues seamlessly on the new row (pos 9 is mid-block 2)
+    assert m.prepare_decode(2, 9) is None
+    m.note_written(2, 99, 9)
+    # the vacated source row is immediately admittable
+    assert m.admit(0, np.arange(20, 26)) is not None
+
+    m.migrate_slot(2, 2)                  # self-move is a no-op
+    assert m.migrations == 1
+
+
+def test_migrate_slot_refuses_occupied_or_pending_rows():
+    m = _mgr(slots=3)
+    m.admit(0, np.arange(1, 9))
+    m.commit(0)
+    m.admit(1, np.arange(20, 28))
+    m.commit(1)
+    with pytest.raises(AssertionError):   # destination row is occupied
+        m.migrate_slot(0, 1)
+    m.admit(2, np.arange(30, 36))         # slot 2 mid-prefill (uncommitted)
+    with pytest.raises(AssertionError):   # pending slots must not move
+        m.migrate_slot(2, 0)
+
+
+def test_concurrent_peak_tracker_reattach_is_idempotent():
+    """Regression: re-planning re-attaches the SURVIVING pool to the
+    engine-lifetime tracker.  Pre-fix, attach() appended the pool again,
+    so every subsequent note() summed it twice and the reported
+    concurrent peak doubled."""
+    from repro.cache import ConcurrentPeakTracker
+    pool = BlockPool(8, page_size=2)
+    tr = ConcurrentPeakTracker()
+    tr.attach(pool)
+    pool.allocate()
+    tr.attach(pool)                       # a re-plan re-attaches
+    pool.allocate()                       # 2 blocks in use
+    assert len(tr.pools) == 1
+    assert tr.peak == 2                   # pre-fix: 4 (pool counted twice)
+
+
+# ---------------------------------------------------------------------------
 # device helpers: paged scatter, page copy
 # ---------------------------------------------------------------------------
 

@@ -117,7 +117,8 @@ def test_stats_report_per_phase_host_timing():
     st = eng.stats()
     assert st["ticks"] > 0
     pt = st["phase_time_s"]
-    assert set(pt) == {"admission", "prefill", "decode", "host_sync"}
+    assert set(pt) == {"admission", "prefill", "decode", "replan",
+                       "host_sync"}
     assert all(v >= 0.0 for v in pt.values())
     assert pt["prefill"] > 0.0 and pt["decode"] > 0.0
     # host_sync overlays the phase windows: every tick blocks on at
@@ -180,9 +181,11 @@ def test_prefix_cache_flag_disables_reuse_end_to_end():
 
 
 def test_cache_stats_report_concurrent_peak_across_replicas():
-    """Regression: two replica pools peaking on DIFFERENT ticks must
-    report the concurrent maximum, not the sum of per-pool peaks (which
-    would overstate the footprint and understate the slots gain)."""
+    """Regression: slots peaking on DIFFERENT ticks must report the
+    concurrent maximum, not the sum of per-slot peaks (which would
+    overstate the footprint and understate the slots gain).  Both decode
+    replicas front ONE engine-global manager (rows = global slot ids) —
+    the precondition for zero-copy slot migration."""
     from repro.plan import lower_serving, uniform_plan
     cfg4 = reduced(REGISTRY["yi-6b"], layers=4)
     model = build_model(cfg4)
@@ -191,18 +194,18 @@ def test_cache_stats_report_concurrent_peak_across_replicas():
     eng = ServingEngine(model, params, slots=2, max_seq=32,
                         plan=lower_serving(plan, slots=2, chunk=4),
                         paged=True, page_size=4)
-    assert len(eng._pagers) == 2
+    assert len(eng._all_pagers()) == 1 and eng._pager.slots == 2
     p = np.arange(1, 9, dtype=np.int32)              # 2 blocks at page 4
-    # replica 0 peaks (2 blocks), then fully releases ...
-    eng._pagers[0].admit(0, p, max_new_tokens=0)
-    eng._pagers[0].commit(0)
-    eng._pagers[0].release_slot(0)
-    # ... and only afterwards does replica 1 peak (2 blocks)
-    eng._pagers[1].admit(0, np.arange(20, 28, dtype=np.int32),
-                         max_new_tokens=0)
-    eng._pagers[1].commit(0)
+    # replica 0's slot peaks (2 blocks), then fully releases ...
+    eng._pager.admit(0, p, max_new_tokens=0)
+    eng._pager.commit(0)
+    eng._pager.release_slot(0)
+    # ... and only afterwards does replica 1's slot peak (2 blocks)
+    eng._pager.admit(1, np.arange(20, 28, dtype=np.int32),
+                     max_new_tokens=0)
+    eng._pager.commit(1)
     st = eng.cache_stats()
-    # concurrent peak is 2; summing the per-pool maxima would say 4
+    # concurrent peak is 2; summing per-slot maxima would say 4
     assert st["peak_blocks_in_use"] == 2
     dense_blocks = eng.slots * (eng.max_seq // eng.page_size)
     assert st["effective_slots_gain"] == pytest.approx(dense_blocks / 2)
@@ -370,8 +373,114 @@ def test_overlap_reduces_host_sync_share_and_keeps_stats_coherent():
     st = eng.stats()
     assert st["ticks"] > 0 and st["gen_tokens"] == 18
     pt = st["phase_time_s"]
-    assert set(pt) == {"admission", "prefill", "decode", "host_sync"}
+    assert set(pt) == {"admission", "prefill", "decode", "replan",
+                       "host_sync"}
     assert pt["host_sync"] > 0.0
     assert pt["host_sync"] <= pt["admission"] + pt["prefill"] + pt["decode"]
     for r in done:
         assert r.t_submit <= r.t_first <= r.t_done
+
+
+# ---------------------------------------------------------------------------
+# adaptive re-planning: stats continuity + controller
+# ---------------------------------------------------------------------------
+
+def _plan_setup(layers=4):
+    cfg = reduced(REGISTRY["yi-6b"], layers=layers)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.key(0))
+
+
+def test_stats_window_continuity_across_mid_window_swap():
+    """Regression (stats-window continuity): a live plan swap mid-window
+    must neither lose nor double-count anything — requests finished on
+    either side of the swap all land in one window, decode token
+    accounting stays exact, the swap's own wall time is charged to the
+    "replan" phase bucket, and the wall window spans the swap instead of
+    restarting at it."""
+    from repro.plan import lower_serving, uniform_plan
+    cfg, model, params = _plan_setup()
+    plan = lower_serving(uniform_plan(cfg.num_groups, 2, n_microbatches=2),
+                         slots=2, chunk=4)
+    eng = ServingEngine(model, params, slots=2, max_seq=48,
+                        paged=True, page_size=4)
+    eng.submit(Request(0, np.arange(1, 5, dtype=np.int32), 8))
+    for _ in range(4):
+        eng.tick()                        # request 0 mid-decode
+    r0 = eng._slot_req[0]
+    pre_swap = list(r0.out_tokens)
+    assert pre_swap and not eng.done
+    eng.replan(plan)                      # mid-window, mid-request
+    eng.submit(Request(1, np.arange(10, 16, dtype=np.int32), 6))
+    eng.run()
+    st = eng.stats()
+    # no loss, no double count: every generated token is either the one
+    # prefill-emitted first token or exactly one decode-tick token
+    assert st["requests"] == 2
+    assert st["gen_tokens"] == 8 + 6
+    assert st["decode_tokens"] == st["gen_tokens"] - st["requests"]
+    # request 0's stream was not restarted by the swap
+    assert len(r0.out_tokens) == 8
+    assert r0.out_tokens[:len(pre_swap)] == pre_swap
+    assert st["replans"] == 1
+    pt = st["phase_time_s"]
+    assert pt["replan"] > 0.0             # the migration interval is charged
+    assert pt["host_sync"] <= (pt["admission"] + pt["prefill"]
+                               + pt["decode"] + pt["replan"])
+    # the wall window spans the swap (t_submit of request 0 predates it)
+    assert st["throughput_tok_s"] > 0.0
+    # the shared pool's peak tracker survived the swap (attached once)
+    assert len(eng._peak_tracker.pools) == 1
+    # reset_stats covers the new counters too
+    eng.reset_stats()
+    st = eng.stats()
+    assert st["replans"] == 0 and st["migrations"] == 0
+    assert st["migration_copies"] == 0
+    assert st["phase_time_s"]["replan"] == 0.0
+
+
+def test_adaptive_controller_navigates_burst_then_idle():
+    """End-to-end controller loop (analytic profiles, measure=False): a
+    long-prompt burst drives the engine onto the pipelined plan, and the
+    drained near-idle tail brings it back to the monolithic point —
+    with every stream still completing."""
+    from repro.plan import lower_serving, uniform_plan
+    from repro.serving import AdaptiveConfig
+    cfg, model, params = _plan_setup()
+    plan = lower_serving(uniform_plan(cfg.num_groups, 2, n_microbatches=2),
+                         slots=2, chunk=8)
+    adapt = AdaptiveConfig(plans=[None, plan], measure=False,
+                           interval_ticks=2, cooldown_ticks=2,
+                           hysteresis=0.1, window_s=30.0, horizon_s=0.1)
+    eng = ServingEngine(model, params, slots=2, max_seq=64,
+                        paged=True, page_size=4, adapt=adapt)
+    assert eng._ctl is not None
+    # burst: 6 long prompts queue up behind 2 slots
+    for uid in range(6):
+        eng.submit(Request(uid, np.arange(1, 25, dtype=np.int32), 4))
+    for _ in range(8):
+        eng.tick()
+    assert eng.plan == plan               # backlog -> pipelined point
+    labels = [d[2] for d in eng._ctl.decisions]
+    assert labels[0] == plan.label
+    done = eng.run()                      # queue drains; idle tail
+    assert len(done) == 6
+    assert all(len(r.out_tokens) == 4 for r in done)
+    assert eng.plan is None               # near-idle -> monolithic point
+    assert eng.stats()["replans"] >= 2
+
+
+def test_adaptive_config_validation():
+    """Candidate ladders are validated at engine construction: slot
+    mismatches and single-point ladders fail loudly."""
+    from repro.plan import lower_serving, uniform_plan
+    from repro.serving import AdaptiveConfig
+    cfg, model, params = _plan_setup()
+    wrong = lower_serving(uniform_plan(cfg.num_groups, 2, n_microbatches=2),
+                          slots=4, chunk=4)
+    with pytest.raises(ValueError, match="slots"):
+        ServingEngine(model, params, slots=2, max_seq=48,
+                      adapt=AdaptiveConfig(plans=[wrong]))
+    with pytest.raises(ValueError, match="candidate design points"):
+        ServingEngine(model, params, slots=2, max_seq=48,
+                      adapt=AdaptiveConfig(plans=[]))

@@ -393,15 +393,15 @@ def test_paged_plan_reserved_slot_cannot_corrupt_shared_blocks():
     while eng._slot_req[0] is None:                 # A through prefill
         eng.tick()
     eng.submit(Request(1, pb, 6))
-    pool = eng._pagers[0].pool
+    pool = eng._pager.pool
     saw_shared_mid_prefill = False
     while 1 in eng._reserved or eng._slot_req[1] is None:
         eng.tick()                                  # A decodes every tick
         if 1 in eng._reserved:
             # B's prefix blocks are refcounted already, but its table
             # row must stay unmapped while it rides A's decode batch
-            assert eng._pagers[0].tables[1].n_mapped == 0
-            if pool.refcount[eng._pagers[0].tables[0].blocks[0]] == 2:
+            assert eng._pager.tables[1].n_mapped == 0
+            if pool.refcount[eng._pager.tables[0].blocks[0]] == 2:
                 saw_shared_mid_prefill = True
     assert saw_shared_mid_prefill                   # sharing really engaged
     done = {r.uid: r.out_tokens for r in eng.run()}
@@ -470,7 +470,8 @@ def test_paged_plan_replica_parity(slots):
     plan = uniform_plan(cfg.num_groups, 2, n_microbatches=2)
     eng = run_plan_staggered(model, params, plan, slots=slots, chunk=4,
                              paged=True, page_size=4)
-    assert eng.paged and len(eng._pagers) == 2
+    assert eng.paged and len(eng._all_pagers()) == 1
+    assert eng._pager.slots == slots                # global slot ids
     got = {r.uid: r.out_tokens for r in eng.done}
     assert len(got) == len(STAGGERED)
     for uid, gold in enumerate(golds):
@@ -574,7 +575,7 @@ def test_warm_prefix_suffix_only_parity_plan(chunk):
     eng.submit(Request(1, warm.copy(), 6))
     done = {r.uid: r.out_tokens for r in eng.run()}
     assert done[1] == gold
-    pool = eng._pagers[0].pool
+    pool = eng._pager.pool
     assert pool.prefill_compute_hits == 1
     assert pool.reused_prefill_tokens == 8
     # the warm admission chunked only its 10-token suffix
@@ -598,7 +599,7 @@ def test_chunked_prefill_publishes_blocks_mid_prompt_for_reuse():
                         plan=lower_serving(plan, slots=2, chunk=4),
                         paged=True, page_size=4)
     eng.submit(Request(0, pa, 6))
-    pool = eng._pagers[0].pool
+    pool = eng._pager.pool
     while not pool.registry:                       # first chunk publishes
         assert eng.tick()
     assert 0 in eng._reserved                      # A still mid-prefill
@@ -855,3 +856,197 @@ def test_overlap_with_speculation_falls_back_to_sync():
     got = {r.uid: r.out_tokens for r in eng.done}
     for uid, gold in enumerate(golds):
         assert got[uid] == gold, f"uid={uid}"
+
+
+# ---------------------------------------------------------------------------
+# adaptive re-planning: live plan swaps with zero-copy slot migration
+# ---------------------------------------------------------------------------
+
+def run_staggered_replans(model, params, *, slots, swaps, max_seq=64,
+                          sched=STAGGERED, **kw):
+    """Drive the STAGGERED arrival schedule while forcing ``replan`` at
+    the given ticks.  ``swaps``: [(tick, ServingPlan-or-None), ...]."""
+    eng = ServingEngine(model, params, slots=slots, max_seq=max_seq, **kw)
+    pending = sorted(enumerate(sched), key=lambda x: x[1][2])
+    swaps = sorted(swaps)
+    tick = 0
+    busy = True
+    while busy or pending or swaps:
+        while pending and pending[0][1][2] <= tick:
+            uid, (prompt, max_new, _) = pending.pop(0)
+            eng.submit(Request(uid, prompt, max_new))
+        while swaps and swaps[0][0] <= tick:
+            eng.replan(swaps.pop(0)[1])
+        busy = eng.tick()
+        tick += 1
+    return eng
+
+
+def _ladder(num_groups, slots, chunk=4):
+    """mono -> narrow plan -> widest plan candidates for ``slots``."""
+    from repro.plan import lower_serving, uniform_plan
+    return [
+        None,
+        lower_serving(uniform_plan(num_groups, 2, n_microbatches=1),
+                      slots=slots, chunk=chunk),
+        lower_serving(uniform_plan(num_groups, 2, n_microbatches=slots),
+                      slots=slots, chunk=chunk),
+    ]
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_replan_sequence_parity_mono_plan_wider_mono(paged):
+    """The tentpole invariant: any re-plan sequence — monolithic -> plan
+    -> wider plan -> monolithic, forced mid-traffic across staggered
+    arrivals — leaves every token stream identical to isolated one-shot
+    greedy decode.  On the paged path the swaps move ZERO KV bytes."""
+    cfg, model, params = build(layers=4)
+    golds = [gold_decode(model, params, p, mn, 64) for p, mn, _ in STAGGERED]
+    mono, narrow, wide = _ladder(cfg.num_groups, slots=3)
+    kw = {"paged": True, "page_size": 4} if paged else {}
+    eng = run_staggered_replans(
+        model, params, slots=3,
+        swaps=[(3, narrow), (6, wide), (9, mono)], **kw)
+    got = {r.uid: r.out_tokens for r in eng.done}
+    assert len(got) == len(STAGGERED)
+    for uid, gold in enumerate(golds):
+        assert got[uid] == gold, f"paged={paged} uid={uid}"
+    st = eng.stats()
+    assert st["replans"] == 3
+    assert st["plan_label"] == "mono"            # ended monolithic
+    if paged:
+        # zero-copy: yi-6b is all-global-attention, so slot moves are
+        # pure block-table handoffs — no dense rows, no page copies
+        assert st["migration_copies"] == 0
+        assert st["cache"]["migrations"] == eng._pager.migrations
+    else:
+        # dense engines move one batch row per migrated slot, at most
+        assert st["migration_copies"] == st["migrations"]
+
+
+def test_replan_rebalance_migrates_zero_copy_paged():
+    """Cross-replica work stealing on the paged path: going monolithic ->
+    2-replica plan with both active slots on what becomes replica 0
+    forces a migration to replica 1 — a block-table row handoff whose
+    pool counters prove no KV moved (no copies, no COW, no alloc/free
+    churn), with both streams still gold-identical."""
+    from repro.plan import lower_serving, uniform_plan
+    cfg, model, params = build(layers=4)
+    prompts = [np.arange(1, 6, dtype=np.int32),
+               np.arange(20, 29, dtype=np.int32)]
+    golds = [gold_decode(model, params, p, 10, 64) for p in prompts]
+    eng = ServingEngine(model, params, slots=4, max_seq=64,
+                        paged=True, page_size=4)
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, 10))
+    for _ in range(3):                           # both decode on slots 0, 1
+        eng.tick()
+    assert [s for s in range(4) if eng._slot_req[s] is not None] == [0, 1]
+    pool = eng._pager.pool
+    in_use = pool.blocks_in_use
+    cow0, evic0 = pool.cow_copies, pool.evictions
+    plan = lower_serving(uniform_plan(cfg.num_groups, 2, n_microbatches=2),
+                         slots=4, chunk=4)       # partitions [0,1] | [2,3]
+    eng.replan(plan)                             # load 2|0 -> steal one
+    assert eng.migrations == 1 and eng._pager.migrations == 1
+    assert eng.migration_copies == 0             # table handoff only
+    assert pool.blocks_in_use == in_use          # no alloc/free churn
+    assert pool.cow_copies == cow0 and pool.evictions == evic0
+    moved = [s for s in range(4) if eng._slot_req[s] is not None]
+    assert len(moved) == 2 and moved[1] >= 2     # one slot now on replica 1
+    done = {r.uid: r.out_tokens for r in eng.run()}
+    for uid, gold in enumerate(golds):
+        assert done[uid] == gold, f"uid={uid}"
+    assert eng.stats()["migrations"] == 1
+
+
+@pytest.mark.parametrize("to_mono", [False, True])
+def test_replan_mid_prefill_drains_on_admission_runtime(to_mono):
+    """Drain-and-rebind: a re-plan fired while a chunked prefill is
+    mid-flight lets the remaining chunks finish on the runtime they were
+    admitted under (plan -> wider plan, and plan -> monolithic where the
+    old pipeline survives solely to drain) — token streams stay gold."""
+    from repro.plan import lower_serving, uniform_plan
+    cfg, model, params = build(layers=4)
+    pa = np.arange(1, 4, dtype=np.int32)
+    pb = np.arange(5, 18, dtype=np.int32)        # 13 tokens = 4 chunks
+    ga = gold_decode(model, params, pa, 8, 64)
+    gb = gold_decode(model, params, pb, 6, 64)
+    narrow = lower_serving(uniform_plan(cfg.num_groups, 2, n_microbatches=1),
+                           slots=2, chunk=4)
+    wide = lower_serving(uniform_plan(cfg.num_groups, 2, n_microbatches=2),
+                         slots=2, chunk=4)
+    eng = ServingEngine(model, params, slots=2, max_seq=64, plan=narrow,
+                        paged=True, page_size=4)
+    eng.submit(Request(0, pa, 8))
+    while eng._slot_req[0] is None:              # A active, decoding
+        eng.tick()
+    eng.submit(Request(1, pb, 6))
+    eng.tick()                                   # B mid-prefill now
+    assert 1 in eng._reserved
+    item = eng._pf.items[0]
+    eng.replan(None if to_mono else wide)
+    assert (item.rt or eng._rt) is not None      # admission runtime pinned
+    if to_mono:
+        assert eng.plan is None and eng._pf is not None   # draining only
+    done = {r.uid: r.out_tokens for r in eng.run()}
+    if to_mono:
+        assert eng._pf is None                   # pipeline dropped when dry
+    assert done[0] == ga and done[1] == gb
+    assert eng.stats()["migration_copies"] == 0
+
+
+def test_replan_with_speculation_active_stays_gold():
+    """A re-plan between speculative verify ticks (drafter engaged, spec
+    window mid-stream): mono -> plan -> mono keeps every stream
+    bit-identical and speculation keeps accepting on both sides."""
+    cfg, model, params = build(layers=4)
+    golds = [gold_decode(model, params, p, mn, 64)
+             for p, mn, _ in SPEC_PROMPTS]
+    mono, narrow, _ = _ladder(cfg.num_groups, slots=2)
+    eng = run_staggered_replans(
+        model, params, slots=2, sched=SPEC_PROMPTS,
+        swaps=[(4, narrow), (8, mono)],
+        speculate=2, paged=True, page_size=4)
+    st = eng.stats()
+    assert st["replans"] == 2
+    assert st["spec_steps"] > 0 and st["spec_accepted"] > 0
+    assert st["migration_copies"] == 0
+    got = {r.uid: r.out_tokens for r in eng.done}
+    for uid, gold in enumerate(golds):
+        assert got[uid] == gold, f"uid={uid}"
+
+
+def test_replan_under_overlap_drains_inflight_first():
+    """Overlap mode dispatches step N before draining step N-1; a
+    re-plan must land the undrained step on the old binding first.
+    Token streams across mono -> plan -> mono swaps stay gold."""
+    cfg, model, params = build(layers=4)
+    golds = [gold_decode(model, params, p, mn, 64) for p, mn, _ in STAGGERED]
+    mono, narrow, _ = _ladder(cfg.num_groups, slots=2)
+    eng = run_staggered_replans(
+        model, params, slots=2,
+        swaps=[(4, narrow), (9, mono)],
+        overlap=True, paged=True, page_size=4)
+    assert eng._overlap
+    assert eng.stats()["replans"] == 2
+    got = {r.uid: r.out_tokens for r in eng.done}
+    for uid, gold in enumerate(golds):
+        assert got[uid] == gold, f"uid={uid}"
+
+
+def test_replan_to_unseen_plan_and_back_reuses_runtime_cache():
+    """Runtime lowering is cached per ServingPlan value: swapping back to
+    a previously-seen design point must reuse its compiled PlanRuntime
+    (no recompilation storm while navigating the Pareto front)."""
+    cfg, model, params = build(layers=4)
+    mono, narrow, wide = _ladder(cfg.num_groups, slots=2)
+    eng = ServingEngine(model, params, slots=2, max_seq=64, plan=narrow,
+                        paged=True, page_size=4)
+    rt0 = eng._rt
+    eng.replan(wide)
+    eng.replan(narrow)
+    assert eng._rt is rt0
+    eng.replan(mono)
+    assert eng._rt is None and eng.plan is None
+    assert eng.stats()["replans"] == 3
