@@ -127,7 +127,10 @@ def smoke_sections(sections, json_path: str = "", seed: int = 0) -> int:
     ``serving`` section additionally writes ``BENCH_serving.json`` (next
     to ``json_path``, else the cwd): the headline serving numbers —
     throughput, cold vs warm TTFT, prefix-hit rate, block savings — that
-    CI archives and gates on (warm TTFT must beat cold)."""
+    CI archives and gates on (warm TTFT must beat cold).  It also emits
+    the observability smoke artifacts ``trace_smoke.json`` (Perfetto) and
+    ``metrics.prom`` (Prometheus text) from one extra traced replay of
+    the adaptive trace — measured numbers stay tracing-off."""
     from benchmarks.serving import serving_bench_summary
     from benchmarks.serving import smoke_rows as serving_smoke
 
@@ -153,15 +156,19 @@ def smoke_sections(sections, json_path: str = "", seed: int = 0) -> int:
             summary["sections"][key] = {"error": f"{type(e).__name__}: {e}"}
             rc = 1
     if "serving" in sections:
-        bench_path = os.path.join(
-            os.path.dirname(os.path.abspath(json_path)) if json_path
-            else os.getcwd(), "BENCH_serving.json")
+        out_dir = (os.path.dirname(os.path.abspath(json_path)) if json_path
+                   else os.getcwd())
+        bench_path = os.path.join(out_dir, "BENCH_serving.json")
+        trace_path = os.path.join(out_dir, "trace_smoke.json")
+        metrics_path = os.path.join(out_dir, "metrics.prom")
         try:
-            bench = serving_bench_summary(seed=seed)
-            os.makedirs(os.path.dirname(bench_path), exist_ok=True)
+            os.makedirs(out_dir, exist_ok=True)
+            bench = serving_bench_summary(seed=seed, trace_out=trace_path,
+                                          metrics_out=metrics_path)
             with open(bench_path, "w") as f:
                 json.dump(bench, f, indent=2)
             print(f"[smoke] wrote {bench_path}")
+            print(f"[smoke] wrote {trace_path} and {metrics_path}")
         except Exception as e:      # pragma: no cover - keep harness alive
             print(f"serving/BENCH_ERROR,0,{type(e).__name__}: {e}")
             rc = 1

@@ -617,8 +617,8 @@ def _drive_trace(eng, arrivals, prompts, new_tokens: int) -> float:
 
 def adaptive_sweep(arch: str = "yi-6b", *, layers: int = 4, slots: int = 4,
                    chunk: int = 4, new_tokens: int = 10, max_seq: int = 96,
-                   page_size: int = 4, rounds: int = 2,
-                   seed: int = 0) -> dict:
+                   page_size: int = 4, rounds: int = 2, seed: int = 0,
+                   trace_out: str = None, metrics_out: str = None) -> dict:
     """Adaptive re-planning vs every static candidate on one time-varying
     trace (calm -> spike -> long-prompt burst), all on paged engines.
 
@@ -630,7 +630,16 @@ def adaptive_sweep(arch: str = "yi-6b", *, layers: int = 4, slots: int = 4,
     must be zero-copy (``migration_copies == 0``: block-table handoffs in
     the shared global pool, never KV copies).  Each leg keeps its best
     wall over ``rounds`` drives (CPU-CI noise).  CI gates the adaptive
-    leg's throughput and p50 TTFT against the best static leg."""
+    leg's throughput and p50 TTFT against the best static leg.
+
+    ``trace_out`` / ``metrics_out`` add ONE extra traced replay of the
+    same trace on the adaptive engine AFTER the measured legs (tracing
+    stays off for every measured number): the engine is first re-planned
+    onto the widest candidate so the calm opening phase forces the
+    controller to swap back — guaranteeing the artifact carries per-stage
+    ``prefill_chunk`` spans, per-replica decode tracks, and at least one
+    replan event — then the Perfetto JSON / Prometheus text files are
+    written."""
     import jax
 
     from repro.configs import REGISTRY, reduced
@@ -701,6 +710,39 @@ def adaptive_sweep(arch: str = "yi-6b", *, layers: int = 4, slots: int = 4,
             f"adaptive-sweep leg {name} diverged from {gold_label} "
             f"token streams — re-planning must be scheduling-only")
 
+    trace_info = None
+    if trace_out or metrics_out:
+        tr = eng.enable_trace()
+        for _ in range(2):                   # retry once if no live replan
+            tr.clear()
+            # start wide: the calm opening phase makes the controller's
+            # first scoring tick want a narrower point, so the trace is
+            # guaranteed a controller-driven replan (the forced swap below
+            # lands in the trace too, but stats() counts only live ones)
+            if len(cands) > 1 and eng.plan is not cands[-1]:
+                eng.replan(cands[-1])
+            eng.reset_stats()
+            # pinned-wide burst with the controller detached: the live
+            # controller narrows within ticks of the calm opening, so
+            # without this the artifact could carry zero per-stage
+            # ``prefill_chunk`` spans / stage-occupancy samples
+            ctl, eng._ctl = eng._ctl, None
+            for i, p in enumerate(prompts[:2]):
+                eng.submit(Request(-10 - i, p, new_tokens))
+            eng.run()
+            eng._ctl = ctl
+            _drive_trace(eng, arrivals, prompts, new_tokens)
+            if eng.stats()["replans"] >= 1:
+                break
+        if trace_out:
+            eng.write_trace(trace_out)
+        if metrics_out:
+            from repro.obs import write_metrics
+            write_metrics(eng.export_metrics(), metrics_out)
+        trace_info = {"trace_out": trace_out, "metrics_out": metrics_out,
+                      "events": eng._tr.events, "dropped": eng._tr.dropped,
+                      "traced_replans": eng.stats()["replans"]}
+
     best_label = max(legs, key=lambda k: legs[k]["throughput_tok_s"])
     best = legs[best_label]
     return {
@@ -714,6 +756,7 @@ def adaptive_sweep(arch: str = "yi-6b", *, layers: int = 4, slots: int = 4,
                         / max(best["throughput_tok_s"], 1e-9)),
         "ttft_ratio": (adaptive["ttft_p50_s"]
                        / max(best["ttft_p50_s"], 1e-9)),
+        "trace": trace_info,
     }
 
 
@@ -729,7 +772,8 @@ def _adaptive_rows(s: dict) -> List[Tuple[str, float, str]]:
              f"final={a['final_plan']}")]
 
 
-def serving_bench_summary(seed: int = 0) -> dict:
+def serving_bench_summary(seed: int = 0, *, trace_out: str = None,
+                          metrics_out: str = None) -> dict:
     """The ``BENCH_serving.json`` payload: the headline serving numbers —
     throughput, cold vs warm TTFT, prefix-hit rate, block/token savings
     from the shared-prefix compute-reuse sweep — plus the speculative
@@ -740,12 +784,16 @@ def serving_bench_summary(seed: int = 0) -> dict:
     ``"int8_kv"`` (CI gates ``kv_capacity_x >= 1.9``), and the adaptive
     re-planning comparison under ``"adaptive"`` (parity- and
     zero-copy-asserted; CI gates adaptive throughput and p50 TTFT
-    against the best static leg)."""
+    against the best static leg).  ``trace_out`` / ``metrics_out`` make
+    the adaptive sweep also emit the Perfetto trace + Prometheus metrics
+    smoke artifacts (measured numbers stay tracing-off)."""
     return {**prefix_reuse_sweep(seed=seed),
             "speculative": speculative_sweep(seed=seed),
             "overlap": overlap_sweep(seed=seed),
             "int8_kv": int8_kv_sweep(seed=seed),
-            "adaptive": adaptive_sweep(layers=2, seed=seed)}
+            "adaptive": adaptive_sweep(layers=2, seed=seed,
+                                       trace_out=trace_out,
+                                       metrics_out=metrics_out)}
 
 
 def _serving_plans(cfg, slots: int, chunk: int, seq: int, batch: int):

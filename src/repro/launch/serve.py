@@ -46,6 +46,13 @@ requests, zero-copy on the paged path (slot migration is a block-table
 handoff).  ``--slo-ttft S`` / ``--slo-tpot S`` set the controller's SLO
 targets in seconds (both require ``--adapt`` and must be positive); the
 stats line then adds the swap count and the final design point.
+
+``--trace out.json`` records per-request lifecycle spans and per-stage /
+per-replica engine timeline spans (``repro.obs``) and writes a
+Chrome/Perfetto ``trace_event`` JSON to open in ui.perfetto.dev;
+``--metrics-out out.prom`` writes Prometheus text-format metrics (TTFT /
+TPOT histograms, utilization gauges) after the run.  Both are strictly
+zero-overhead when not passed (see docs/observability.md).
 """
 from __future__ import annotations
 
@@ -179,6 +186,14 @@ def main(argv=None):
                     help="with --adapt: target time-per-output-token in "
                          "seconds the controller penalizes against "
                          "(0: no TPOT SLO)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record engine + request lifecycle spans and "
+                         "write a Chrome/Perfetto trace_event JSON here "
+                         "(open in ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="OUT.prom",
+                    help="write Prometheus text-format metrics (TTFT/TPOT "
+                         "histograms, utilization gauges) here after the "
+                         "run")
     args = ap.parse_args(argv)
 
     if args.kv_dtype != "fp" and not args.paged:
@@ -212,6 +227,10 @@ def main(argv=None):
         adapt = AdaptiveConfig(
             plans=_adaptive_ladder(cfg, splan, args.slots, args.chunk),
             slo_ttft_s=args.slo_ttft, slo_tpot_s=args.slo_tpot)
+    trace_cfg = None
+    if args.trace:
+        from repro.obs import TraceConfig
+        trace_cfg = TraceConfig(path=args.trace)
     eng = ServingEngine(model, params, slots=args.slots,
                         max_seq=args.max_seq, plan=splan, paged=args.paged,
                         page_size=args.page_size,
@@ -219,7 +238,7 @@ def main(argv=None):
                         prefix_cache=prefix_cache,
                         speculate=args.speculate,
                         overlap=args.overlap, kv_dtype=args.kv_dtype,
-                        adapt=adapt)
+                        adapt=adapt, trace=trace_cfg)
     if args.adapt:
         eng.warm_replans()                # compile candidates off the clock
         eng.reset_stats()
@@ -233,7 +252,7 @@ def main(argv=None):
     wall = time.perf_counter() - t0
     st = eng.stats()
     extra = ""
-    if splan is not None:
+    if "plan_stages" in st:    # absent when --adapt ended on the mono point
         extra = (f", {st['plan_stages']} stages x "
                  f"{st['decode_replicas']} replicas (chunk "
                  f"{st['prefill_chunk']})")
@@ -270,6 +289,14 @@ def main(argv=None):
           f"{st['gen_tokens']/wall:.1f} tok/s, "
           f"occupancy={st['slot_occupancy']:.2f}, "
           f"kernels={st['kernel_path']}{extra}")
+    if args.trace:
+        eng.write_trace(args.trace)
+        print(f"[serve] trace: {args.trace} ({eng._tr.events} events"
+              f", {eng._tr.dropped} dropped)")
+    if args.metrics_out:
+        from repro.obs import write_metrics
+        write_metrics(eng.export_metrics(), args.metrics_out)
+        print(f"[serve] metrics: {args.metrics_out}")
 
 
 if __name__ == "__main__":

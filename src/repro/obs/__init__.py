@@ -1,0 +1,40 @@
+"""Observability for the serving engine: tracing, metrics, exporters.
+
+- ``trace``: ring-buffered monotonic-clock :class:`Tracer` (strictly
+  no-op when disabled) and :class:`TraceConfig`.
+- ``metrics``: :class:`MetricsRegistry` of counters/gauges/histograms
+  with Prometheus text exposition.
+- ``derive``: typed :class:`TrafficSnapshot` for the adaptive
+  controller and trace-derived utilization views.
+- ``export``: Chrome/Perfetto trace_event JSON writer + validator,
+  Prometheus file writer.
+"""
+from .derive import TrafficSnapshot, fold_engine_metrics, utilization_from_trace
+from .metrics import (
+    TPOT_BUCKETS,
+    TTFT_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from .trace import TraceConfig, Tracer
+from .export import to_perfetto, validate_perfetto, write_metrics, write_trace
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "TPOT_BUCKETS",
+    "TTFT_BUCKETS",
+    "TraceConfig",
+    "Tracer",
+    "TrafficSnapshot",
+    "fold_engine_metrics",
+    "to_perfetto",
+    "utilization_from_trace",
+    "validate_perfetto",
+    "write_metrics",
+    "write_trace",
+]

@@ -37,6 +37,7 @@ copy; on a single host device it is a no-op passthrough.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, List
 
@@ -332,10 +333,15 @@ class PrefillPipeline:
     predecessor has left it — its stage-range cache writes must land
     first).  ``step`` returns the items that finished this tick."""
 
-    def __init__(self, runtime: PlanRuntime, params):
+    def __init__(self, runtime: PlanRuntime, params, tracer=None):
         self.rt = runtime
         self.params = params
         self.items: List[_PrefillItem] = []
+        self.tracer = tracer            # repro.obs.Tracer or None (no-op)
+        self.last_stages_run: frozenset = frozenset()  # stage idxs that
+        #                                 executed a chunk last step() —
+        #                                 the engine's per-stage occupancy
+        #                                 accounting reads this
 
     @property
     def busy(self) -> bool:
@@ -371,10 +377,14 @@ class PrefillPipeline:
         self.items.extend(items)
 
     def _run_stage(self, it: _PrefillItem, si: int, cont: bool, hidden,
-                   pos_base: int, caches):
+                   pos_base: int, caches, ci: int = 0):
         """Execute one stage for one chunk, routing paged items through
         the replica-cache-threading stage fns."""
         rt = it.rt or self.rt
+        tr = self.tracer
+        if tr is not None:
+            t0 = time.perf_counter()
+            ntok = int(hidden.shape[1])
         if it.bt is not None:
             fn = rt.stage_fns_paged[(si, cont)]
             hidden, new_cache, it.part_cache = fn(
@@ -394,6 +404,11 @@ class PrefillPipeline:
             fn = rt.stage_fns[(si, cont)]
             hidden, it.part_cache = fn(
                 self.params, it.part_cache, hidden, jnp.int32(pos_base))
+        if tr is not None:
+            tr.span(("stage", si), "prefill_chunk", t0, args={
+                "uid": int(getattr(it.req, "uid", -1)), "slot": it.slot,
+                "replica": it.replica, "chunk": ci, "tokens": ntok,
+                "cont": bool(cont)})
         return hidden
 
     def _chunk_exited(self, it: _PrefillItem, fl: _Flight, finished,
@@ -436,7 +451,7 @@ class PrefillPipeline:
             occupied.add(fl.si)
             fl.hidden = self._run_stage(
                 it, fl.si, fl.ci > 0 or it.reused > 0, fl.hidden,
-                fl.pos_base, caches)
+                fl.pos_base, caches, ci=fl.ci)
             fl.si += 1
             if fl.si == n_stages(it):
                 it.flight.remove(fl)
@@ -455,7 +470,7 @@ class PrefillPipeline:
             hidden = self.rt.embed(self.params, jnp.asarray(tokens))
             hidden = self._run_stage(
                 it, 0, it.next_chunk > 0 or it.reused > 0, hidden,
-                pos_base, caches)
+                pos_base, caches, ci=it.next_chunk)
             fl = _Flight(ci=it.next_chunk, si=1, hidden=hidden,
                          pos_base=pos_base)
             it.next_chunk += 1
@@ -466,4 +481,5 @@ class PrefillPipeline:
 
         for it in finished:
             self.items.remove(it)
+        self.last_stages_run = frozenset(occupied)
         return finished

@@ -1,3 +1,4 @@
+from repro.obs import TraceConfig, TrafficSnapshot
 from repro.serving.adaptive import (AdaptiveConfig, PlanProfile,
                                     ReplanController)
 from repro.serving.engine import (Request, ServingEngine, make_prefill_step,

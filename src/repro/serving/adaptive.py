@@ -136,6 +136,12 @@ class ReplanController:
         self._ticks = 0
         self._cooldown = 0
         self.decisions: List[Tuple[int, str, str]] = []   # (tick, from, to)
+        self.last_scores: Optional[List[List[Any]]] = None  # [[label,
+        #                               score], ...] of the most recent
+        #                               SCORING tick (None between
+        #                               decision windows) — the engine
+        #                               attaches this to its
+        #                               "replan_decision" trace event
 
     # ------------------------------------------------------------ set-up
     def validate(self, eng) -> None:
@@ -222,6 +228,7 @@ class ReplanController:
     # ----------------------------------------------------------- decision
     def observe(self, eng) -> Optional[Tuple[Any]]:
         self._ticks += 1
+        self.last_scores = None
         if self._cooldown > 0:
             self._cooldown -= 1
             return None
@@ -232,6 +239,9 @@ class ReplanController:
             return None
         scored = [(self._score(eng, cand, sig), i, cand)
                   for i, cand in enumerate(self.cfg.plans)]
+        self.last_scores = [
+            [cand.label if cand is not None else "mono", float(s)]
+            for s, _, cand in sorted(scored)]
         cur = next(s for s, _, cand in scored if cand == eng.plan)
         best_s, _, best = min(scored)
         if best == eng.plan:
@@ -242,7 +252,7 @@ class ReplanController:
                 self._cooldown = self.cfg.cooldown_ticks
                 return (eng.plan,)
             return None
-        margin = 0.0 if sig["violated"] else self.cfg.hysteresis
+        margin = 0.0 if sig.violated else self.cfg.hysteresis
         if best_s >= cur * (1.0 - margin):
             return None
         self._cooldown = self.cfg.cooldown_ticks
@@ -260,60 +270,32 @@ class ReplanController:
                 load[plan.replica_of_slot(s)[0]] += 1
         return max(load) - min(load) > 1
 
-    def _signals(self, eng) -> Optional[Dict[str, float]]:
-        now = time.perf_counter()
-        w = max(self.cfg.window_s, 1e-6)
-        recent = [(t, pl, mn) for t, pl, mn in eng._arrival_log
-                  if t >= now - w]
-        lam = len(recent) / w
-        avg_prompt = (float(np.mean([pl for _, pl, _ in recent]))
-                      if recent else 0.0)
-        avg_new = (float(np.mean([mn for _, _, mn in recent]))
-                   if recent else 0.0)
-        queued_tok = float(sum(len(r.prompt) for r in eng.queue))
-        rem = [r.max_new_tokens - len(r.out_tokens)
-               for r in eng._slot_req if r is not None]
-        depth = float(np.mean(rem)) if rem else 0.0
-        # forecast decode depth for work that has not prefilled yet
-        incoming = len(eng.queue) + lam * self.cfg.horizon_s
-        if incoming > 0 and avg_new > 0:
-            depth = max(depth, avg_new)
-        if not rem and not eng.queue and not recent:
-            return None                          # idle: nothing to navigate
-        violated = False
-        if self.cfg.slo_ttft_s > 0:
-            tail = eng.done[-8:]
-            if any(r.t_first - r.t_submit > self.cfg.slo_ttft_s
-                   for r in tail):
-                violated = True
-            if eng.queue and now - eng.queue[0].t_submit > self.cfg.slo_ttft_s:
-                violated = True
-        if self.cfg.slo_tpot_s > 0:
-            for r in eng.done[-8:]:
-                n = max(len(r.out_tokens) - 1, 1)
-                if (r.t_done - r.t_first) / n > self.cfg.slo_tpot_s:
-                    violated = True
-        return {"lam": lam, "avg_prompt": avg_prompt, "avg_new": avg_new,
-                "queued_tok": queued_tok, "depth": depth,
-                "violated": violated}
+    def _signals(self, eng):
+        """One typed ``repro.obs.TrafficSnapshot`` of the observation
+        window (None = idle).  The engine owns the computation
+        (``ServingEngine.traffic_snapshot``) — the controller only states
+        which window/SLO parameters it observes under."""
+        return eng.traffic_snapshot(
+            self.cfg.window_s, slo_ttft_s=self.cfg.slo_ttft_s,
+            slo_tpot_s=self.cfg.slo_tpot_s, horizon_s=self.cfg.horizon_s)
 
-    def _score(self, eng, cand, sig: Dict[str, float]) -> float:
+    def _score(self, eng, cand, sig) -> float:
         """SLO-penalized makespan of the backlog + ``horizon_s`` of
-        forecast arrivals under candidate ``cand``.  Mono serializes
-        prefill ahead of decode; a plan overlaps them (max + half the
-        smaller term) but pays every replica's dispatch per tick."""
+        forecast arrivals under candidate ``cand``, priced from a
+        ``TrafficSnapshot``.  Mono serializes prefill ahead of decode; a
+        plan overlaps them (max + half the smaller term) but pays every
+        replica's dispatch per tick."""
         prof = self._profile(eng, cand)
-        ptok = sig["queued_tok"] + sig["lam"] * self.cfg.horizon_s * \
-            sig["avg_prompt"]
+        ptok = sig.queued_tok + sig.lam * self.cfg.horizon_s * sig.avg_prompt
         t_pref = ptok * prof.prefill_tok_s
-        t_dec = sig["depth"] * prof.decode_tick_s
+        t_dec = sig.depth * prof.decode_tick_s
         if prof.is_plan:
             makespan = max(t_pref, t_dec) + 0.5 * min(t_pref, t_dec)
         else:
             makespan = t_pref + t_dec
         pen = 0.0
         if self.cfg.slo_ttft_s > 0:
-            own = sig["avg_prompt"] * prof.prefill_tok_s \
+            own = sig.avg_prompt * prof.prefill_tok_s \
                 + prof.first_latency_s
             ttft_pred = t_pref + own
             pen += max(0.0, ttft_pred / self.cfg.slo_ttft_s - 1.0)

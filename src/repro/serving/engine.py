@@ -250,6 +250,13 @@ class ServingEngine:
     #                                  controller scores the candidate
     #                                  design points each tick window and
     #                                  calls replan() when one dominates
+    trace: Optional[Any] = None      # repro.obs.TraceConfig (or True for
+    #                                  defaults): record request-lifecycle
+    #                                  + per-stage/per-replica spans into a
+    #                                  ring-buffered Tracer (write_trace()
+    #                                  exports Perfetto JSON).  None = off:
+    #                                  the hot path allocates no event
+    #                                  records at all
 
     def __post_init__(self):
         from repro.models import transformer as T
@@ -421,10 +428,18 @@ class ServingEngine:
         # (the quantity the async runtime shrinks) — see _sync().
         # "replan" charges controller decisions + live swaps, so the
         # migration interval is accounted, never lost or double-counted.
+        # "idle" is the host wall between one tick's end and the next
+        # tick's start (queue-empty waits, caller think time), so the
+        # partition buckets (all but the host_sync overlay) sum to the
+        # first-tick-start → last-tick-end wall.
         self.phase_time = {"admission": 0.0, "prefill": 0.0, "decode": 0.0,
-                           "replan": 0.0, "host_sync": 0.0}
+                           "replan": 0.0, "idle": 0.0, "host_sync": 0.0}
         self._prefill_window = 0.0        # prefill seconds inside _admit()
         self._t_window = time.perf_counter()  # stats window start (reset_stats)
+        self._t_tick_end = None           # end of the previous tick (idle
+        #                                   accrues from here to the next
+        #                                   tick's entry)
+        self._t_first_tick = None         # first tick entry this window
         self.submitted = 0                # lifetime submissions (monotonic)
         self._arrival_log = []            # (t_submit, prompt_len, max_new)
         #                                  ring consumed by the controller
@@ -433,6 +448,33 @@ class ServingEngine:
             from repro.serving.adaptive import ReplanController
             self._ctl = ReplanController(self.adapt)
             self._ctl.validate(self)
+        # observability ----------------------------------------------------
+        # Always on: a MetricsRegistry (one histogram observe + two counter
+        # incs per retirement) and per-stage / per-replica utilization
+        # accumulators (integer adds per decode dispatch).  Strictly
+        # opt-in: the Tracer — self._tr stays None unless trace= is passed
+        # (or enable_trace() is called) and every emission site is guarded
+        # on it, so the disabled hot path allocates no event records.
+        from repro.obs import MetricsRegistry, TPOT_BUCKETS, TTFT_BUCKETS
+        self.metrics = MetricsRegistry()
+        self._h_ttft = self.metrics.histogram(
+            "repro_ttft_seconds", TTFT_BUCKETS,
+            help="time to first token per retired request")
+        self._h_tpot = self.metrics.histogram(
+            "repro_tpot_seconds", TPOT_BUCKETS,
+            help="time per output token per retired request")
+        self._c_requests = self.metrics.counter(
+            "repro_requests_total", help="requests retired")
+        self._c_gen = self.metrics.counter(
+            "repro_tokens_generated_total", help="tokens generated")
+        self._stage_busy = {}             # stage idx -> busy stage-steps
+        self._pipeline_ticks = 0          # ticks the prefill pipeline ran
+        self._replica_busy = {}           # replica -> occupied slot-steps
+        self._replica_cap = {}            # replica -> dispatched capacity
+        self._tr = None
+        self.trace_config = None
+        if self.trace:
+            self.enable_trace(self.trace)
 
     # -- public API --------------------------------------------------------
     def submit(self, req: Request):
@@ -447,6 +489,25 @@ class ServingEngine:
                                   req.max_new_tokens))
         if len(self._arrival_log) > 4 * self.slots + 256:
             del self._arrival_log[:len(self._arrival_log) // 2]
+        if self._tr is not None:
+            self._tr.instant("requests", "submit", t=req.t_submit, args={
+                "uid": req.uid, "prompt_tokens": len(req.prompt),
+                "max_new": req.max_new_tokens})
+
+    def enable_trace(self, cfg: Any = True):
+        """Attach a fresh ring-buffered Tracer (``repro.obs.Tracer``) to
+        the engine and its prefill pipeline.  ``cfg`` is a
+        ``repro.obs.TraceConfig`` (or ``True`` for defaults).  Can be
+        called mid-serve — e.g. benchmarks measure with tracing off, then
+        trace one extra round for the artifact.  Returns the tracer."""
+        from repro.obs import TraceConfig, Tracer
+        if cfg is True or cfg is None:
+            cfg = TraceConfig()
+        self.trace_config = cfg
+        self._tr = Tracer(cfg.capacity)
+        if self._pf is not None:
+            self._pf.tracer = self._tr
+        return self._tr
 
     @property
     def active(self) -> int:
@@ -469,18 +530,41 @@ class ServingEngine:
         step N-1 and runs the next tick's admission bookkeeping.  The
         drained tokens retire slots exactly as sync mode does, one tick
         later; the per-request token streams are identical."""
+        t_enter = time.perf_counter()
+        if self._t_tick_end is not None:
+            # host wall between ticks: queue-empty waits / caller think
+            # time — the bucket that makes phase_time_s sum to the wall
+            self.phase_time["idle"] += t_enter - self._t_tick_end
+        if self._t_first_tick is None:
+            self._t_first_tick = t_enter
+        tr = self._tr
+        if tr is not None:
+            tr.counter("tick", "engine", {"queue": len(self.queue),
+                                          "active": self.active}, t=t_enter)
         if self._ctl is not None and not self._ctl.paused:
             tc = time.perf_counter()
             decision = self._ctl.observe(self)  # None = keep, (plan,) = swap
             self.phase_time["replan"] += time.perf_counter() - tc
+            if tr is not None and self._ctl.last_scores is not None:
+                # a decision tick: record what the controller weighed
+                tr.instant("tick", "replan_decision", args={
+                    "scores": self._ctl.last_scores,
+                    "decision": ("keep" if decision is None else
+                                 (decision[0].label
+                                  if decision[0] is not None else "mono"))})
             if decision is not None:
                 self.replan(decision[0])
         t0 = time.perf_counter()
         self._prefill_window = 0.0
+        q0 = len(self.queue)
         self._admit()
         t1 = time.perf_counter()
         self.phase_time["admission"] += (t1 - t0) - self._prefill_window
         self.phase_time["prefill"] += self._prefill_window
+        if tr is not None and q0:
+            tr.span("tick", "admission", t0, t1, args={
+                "queued": q0, "admitted": q0 - len(self.queue),
+                "plan": self.plan.label if self.plan is not None else "mono"})
         if self._pf is not None and self._pf.busy:
             # paged stage steps thread the replica caches; after a re-plan
             # to monolithic the drained items route through a one-entry
@@ -492,6 +576,9 @@ class ServingEngine:
                 clist = self._caches if self.plan is not None else None
             finished = self._pf.step(caches=clist,
                                      on_chunk=self._chunk_committed)
+            self._pipeline_ticks += 1
+            for s in self._pf.last_stages_run:
+                self._stage_busy[s] = self._stage_busy.get(s, 0) + 1
             if self.paged and self.plan is None:
                 self._cache = clist[0]
             for item in finished:
@@ -515,6 +602,7 @@ class ServingEngine:
                 self._drain_one()
             self.phase_time["decode"] += time.perf_counter() - t2
         self.ticks += 1
+        self._t_tick_end = time.perf_counter()
         return bool(self.active or self.queue or self._inflight
                     or (self._pf is not None and self._pf.busy))
 
@@ -557,6 +645,7 @@ class ServingEngine:
         zero-copy migrations (``rebalance=False`` suppresses it)."""
         from repro.models import transformer as T
         t0 = time.perf_counter()
+        old_label = self.plan.label if self.plan is not None else "mono"
         if plan is not None and plan.slots != self.slots:
             raise ValueError(
                 f"ServingPlan was lowered for {plan.slots} slots "
@@ -566,6 +655,9 @@ class ServingEngine:
             if rebalance and self.plan is not None:
                 self._drain_inflight()
                 self._rebalance_slots()
+                if self._tr is not None:
+                    self._tr.span("tick", "rebalance", t0, args={
+                        "plan": old_label, "migrations": self.migrations})
             self.phase_time["replan"] += time.perf_counter() - t0
             return
         # 1. land everything in flight on the old binding
@@ -584,7 +676,7 @@ class ServingEngine:
         if plan is not None:
             from repro.plan.serving import PrefillPipeline
             self._rt = self._runtime_for(plan)
-            pf = PrefillPipeline(self._rt, self.params)
+            pf = PrefillPipeline(self._rt, self.params, tracer=self._tr)
             pf.adopt(items)
             self._pf = pf
         else:
@@ -613,6 +705,12 @@ class ServingEngine:
             self._rebalance_slots()
         self.replans += 1
         self.phase_time["replan"] += time.perf_counter() - t0
+        if self._tr is not None:
+            self._tr.span("tick", "replan", t0, args={
+                "from": old_label,
+                "to": plan.label if plan is not None else "mono",
+                "migrations": self.migrations,
+                "migration_copies": self.migration_copies})
 
     def warm_replans(self):
         """Exercise every adaptive candidate once (measured profiles,
@@ -732,11 +830,18 @@ class ServingEngine:
         self.migrations = 0
         self.migration_copies = 0
         self.phase_time = {"admission": 0.0, "prefill": 0.0, "decode": 0.0,
-                           "replan": 0.0, "host_sync": 0.0}
+                           "replan": 0.0, "idle": 0.0, "host_sync": 0.0}
+        self._stage_busy = {}
+        self._pipeline_ticks = 0
+        self._replica_busy = {}
+        self._replica_cap = {}
+        self.metrics.reset()
         # requests already in flight keep their pre-reset t_submit; the
         # stats() wall window clamps to this timestamp so the measured
         # window never reaches back before the reset
         self._t_window = time.perf_counter()
+        self._t_tick_end = None       # idle accrues only BETWEEN ticks of
+        self._t_first_tick = None     # the new window
         self._peak_tracker.reset()
         for pager in self._all_pagers():
             p = pager.pool
@@ -791,6 +896,107 @@ class ServingEngine:
             out.update(agg)
         return out
 
+    def utilization_stats(self) -> Dict[str, Any]:
+        """Windowed pipeline/replica utilization from the always-on
+        accumulators — the paper's utilization story in numbers.  A pure
+        read (snapshot): repeated calls in one window return equal dicts.
+
+          * ``stage_bubble_frac[s]``: fraction of busy-pipeline ticks on
+            which prefill stage ``s`` ran NO chunk (pipeline bubbles);
+          * ``replica_occupancy[r]``: occupied slot-steps / dispatched
+            slot-step capacity of decode replica ``r`` (mono = replica 0
+            over all slots);
+          * ``replica_load_spread``: max-min occupancy gap (0 = balanced
+            — what ``_rebalance_slots`` drives toward);
+          * speculation acceptance + prefix compute-hit rates, the two
+            signals ROADMAP item 3 wants priced into the cost model."""
+        pt = self._pipeline_ticks
+        n_stages = self.plan.n_stages if self.plan is not None else 0
+        if self._stage_busy:
+            n_stages = max(n_stages, max(self._stage_busy) + 1)
+        bubbles = ({s: 1.0 - self._stage_busy.get(s, 0) / pt
+                    for s in range(n_stages)} if pt else {})
+        occ = {r: self._replica_busy.get(r, 0) / c
+               for r, c in sorted(self._replica_cap.items()) if c}
+        spread = (max(occ.values()) - min(occ.values())) if occ else 0.0
+        hits = queries = 0
+        for p in self._all_pagers():
+            ps = p.stats()
+            hits += ps["prefill_compute_hits"]
+            queries += ps["prefill_admissions"]
+        return {
+            "pipeline_ticks": pt,
+            "stage_busy_ticks": dict(sorted(self._stage_busy.items())),
+            "stage_bubble_frac": bubbles,
+            "replica_occupancy": occ,
+            "replica_load_spread": spread,
+            "spec_acceptance_rate": (self.spec_accepted
+                                     / max(self.spec_proposed, 1)),
+            "prefix_hit_rate": hits / max(queries, 1),
+        }
+
+    def traffic_snapshot(self, window_s: float = 2.0, *,
+                         slo_ttft_s: float = 0.0, slo_tpot_s: float = 0.0,
+                         horizon_s: float = 0.0):
+        """One typed observation of live traffic (``TrafficSnapshot``), or
+        None when the engine is idle — what the adaptive controller reads
+        each decision window instead of poking engine internals."""
+        from repro.obs import TrafficSnapshot
+        now = time.perf_counter()
+        w = max(window_s, 1e-6)
+        recent = [(t, pl, mn) for t, pl, mn in self._arrival_log
+                  if t >= now - w]
+        lam = len(recent) / w
+        avg_prompt = (float(np.mean([pl for _, pl, _ in recent]))
+                      if recent else 0.0)
+        avg_new = (float(np.mean([mn for _, _, mn in recent]))
+                   if recent else 0.0)
+        queued_tok = float(sum(len(r.prompt) for r in self.queue))
+        rem = [r.max_new_tokens - len(r.out_tokens)
+               for r in self._slot_req if r is not None]
+        depth = float(np.mean(rem)) if rem else 0.0
+        # forecast decode depth for work that has not prefilled yet
+        incoming = len(self.queue) + lam * horizon_s
+        if incoming > 0 and avg_new > 0:
+            depth = max(depth, avg_new)
+        if not rem and not self.queue and not recent:
+            return None                      # idle: nothing to navigate
+        violated = False
+        if slo_ttft_s > 0:
+            tail = self.done[-8:]
+            if any(r.t_first - r.t_submit > slo_ttft_s for r in tail):
+                violated = True
+            if self.queue and now - self.queue[0].t_submit > slo_ttft_s:
+                violated = True
+        if slo_tpot_s > 0:
+            for r in self.done[-8:]:
+                n = max(len(r.out_tokens) - 1, 1)
+                if (r.t_done - r.t_first) / n > slo_tpot_s:
+                    violated = True
+        return TrafficSnapshot(
+            lam=lam, avg_prompt=avg_prompt, avg_new=avg_new,
+            queued_tok=queued_tok, depth=depth, queue_len=len(self.queue),
+            active=self.active, violated=violated, window_s=w)
+
+    def export_metrics(self):
+        """Fold the current ``stats()`` snapshot into the engine's
+        ``MetricsRegistry`` as gauges (idempotent — gauges are set, never
+        accrued) and return the registry, ready for ``to_prometheus()``
+        or ``repro.obs.write_metrics``."""
+        from repro.obs import fold_engine_metrics
+        fold_engine_metrics(self.metrics, self.stats())
+        return self.metrics
+
+    def write_trace(self, path: str):
+        """Export the tracer's retained records as Perfetto trace_event
+        JSON (open at ui.perfetto.dev).  Requires tracing on."""
+        from repro.obs import write_trace
+        if self._tr is None:
+            raise ValueError(
+                "tracing is off: pass trace=TraceConfig() at construction "
+                "or call enable_trace() first")
+        write_trace(self._tr, path)
+
     def stats(self) -> Dict[str, Any]:
         """Serving-side latency/throughput numbers for the SSR story."""
         reqs = self.done
@@ -829,6 +1035,7 @@ class ServingEngine:
             "ticks": self.ticks,
             "phase_time_s": dict(self.phase_time),
             "cache": self.cache_stats(),
+            "utilization": self.utilization_stats(),
         }
         out["plan_label"] = (self.plan.label if self.plan is not None
                              else "mono")
@@ -978,6 +1185,10 @@ class ServingEngine:
             self._pager.commit(slot)      # pages landed: publish for reuse
             tok = int(self._sync(nxt)[0])  # host sync: prefill has run
             self._prefill_window += time.perf_counter() - t0
+            if self._tr is not None:
+                self._tr.span(("stage", 0), "prefill", t0, args={
+                    "uid": req.uid, "slot": slot, "tokens": slen,
+                    "reused": reused, "plan": "mono"})
         else:
             toks = np.zeros((1, self._padded_len(plen)), np.int32)
             toks[0, :plen] = req.prompt
@@ -987,6 +1198,10 @@ class ServingEngine:
                 jnp.int32(slot), jnp.int32(plen))
             tok = int(self._sync(nxt)[0])  # host sync: prefill has run
             self._prefill_window += time.perf_counter() - t0
+            if self._tr is not None:
+                self._tr.span(("stage", 0), "prefill", t0, args={
+                    "uid": req.uid, "slot": slot, "tokens": plen,
+                    "reused": 0, "plan": "mono"})
         self.prefill_batch_sizes.append(1)
         # unpadded suffix tokens, same unit as plan-mode admission:
         # bucket padding is a jit-shape artifact, not prefill work
@@ -1032,6 +1247,9 @@ class ServingEngine:
         pager, local = self._pager_of(slot)
         if pager is not None:
             pager.commit_chunk(local, tokens_done)
+            if self._tr is not None:
+                self._tr.instant("requests", "commit", args={
+                    "slot": slot, "tokens_done": tokens_done})
 
     def _finish_prefill(self, item):
         """Last chunk left the last stage: bank the first token, scatter
@@ -1073,6 +1291,13 @@ class ServingEngine:
     def _activate(self, req: Request, slot: int, first_token: int):
         req.slot = slot
         req.t_first = time.perf_counter()
+        if self._tr is not None:
+            # zero-width admit marker carrying the request flow start:
+            # the arrow leaves here and lands on the retire marker
+            self._tr.span("requests", "admit", req.t_first, req.t_first,
+                          args={"uid": req.uid, "slot": slot,
+                                "queued_s": req.t_first - req.t_submit},
+                          flow_out=req.uid)
         req.out_tokens.append(first_token)
         self._slot_req[slot] = req
         self._pos[slot] = len(req.prompt)
@@ -1107,6 +1332,25 @@ class ServingEngine:
                         self._caches[r], jnp.int32(src), jnp.int32(dst))
                     self._share_pool(r)
 
+    def _note_decode_util(self):
+        """Per-replica occupied/capacity slot-step accounting at decode
+        dispatch (always on — integer adds).  Mono counts as replica 0
+        over all slots.  Returns {replica: occupied_slots} for reuse by
+        the trace spans."""
+        if self.plan is None:
+            act = self.active
+            self._replica_busy[0] = self._replica_busy.get(0, 0) + act
+            self._replica_cap[0] = self._replica_cap.get(0, 0) + self.slots
+            return {0: act}
+        out = {}
+        for r in range(self.plan.n_replicas):
+            a, b = self.plan.replica_range(r)
+            act_r = sum(self._slot_req[s] is not None for s in range(a, b))
+            self._replica_busy[r] = self._replica_busy.get(r, 0) + act_r
+            self._replica_cap[r] = self._replica_cap.get(r, 0) + (b - a)
+            out[r] = act_r
+        return out
+
     def _decode_once(self):
         """One batched decode step at per-slot positions.  Idle slots ride
         along at fixed shape (their rows are garbage until the admission
@@ -1120,6 +1364,7 @@ class ServingEngine:
         window (current token + drafts) in one step, commits the
         accepted prefix, and rolls the rejected tail back."""
         act = self.active                 # sampled at dispatch (see init)
+        racts = self._note_decode_util()
         if self._spec_k:
             drafts = self._draft_all()
             if drafts is not None:
@@ -1128,7 +1373,9 @@ class ServingEngine:
                 self._decode_slot_steps += act
                 self._occupied_step_sum += self.active
                 return
+        tr = self._tr
         if self.plan is None:
+            td = time.perf_counter() if tr is not None else 0.0
             bt = None
             if self._pager is not None:
                 self._prepare_paged_writes(0, self.slots)
@@ -1137,6 +1384,9 @@ class ServingEngine:
                 self.params, self._cache, jnp.asarray(self._cur),
                 jnp.asarray(self._pos), None, bt)
             arr = self._sync(nxt)
+            if tr is not None:
+                tr.span(("replica", 0), "decode", td, args={
+                    "active": act, "slots": self.slots, "plan": "mono"})
             now = time.perf_counter()
             self._collect_decoded(arr, 0, self.slots, now)
         else:
@@ -1152,6 +1402,7 @@ class ServingEngine:
                 if not any(self._slot_req[s] is not None
                            for s in range(a, b)):
                     continue
+                td = time.perf_counter() if tr is not None else 0.0
                 bt = None
                 if self.paged:
                     self._prepare_paged_writes(a, b)
@@ -1161,8 +1412,15 @@ class ServingEngine:
                     jnp.asarray(self._cur[a:b]),
                     jnp.asarray(self._pos[a:b]), bt)
                 self._share_pool(r)
-                pending.append((nxt, a, b))
-            arrs = [(self._sync(nxt), a, b) for nxt, a, b in pending]
+                pending.append((nxt, a, b, r, td))
+            arrs = []
+            for nxt, a, b, r, td in pending:
+                arr = self._sync(nxt)
+                if tr is not None:
+                    tr.span(("replica", r), "decode", td, args={
+                        "active": racts.get(r, 0), "slots": b - a,
+                        "plan": self.plan.label})
+                arrs.append((arr, a, b))
             now = time.perf_counter()
             for arr, a, b in arrs:
                 self._collect_decoded(arr, a, b, now)
@@ -1188,11 +1446,14 @@ class ServingEngine:
         masked until its new owner's own frontier reaches it.  The
         record entry is skipped as stale at drain."""
         act = self.active
+        racts = self._note_decode_util()
+        tr = self._tr
         if self._cur_dev is None:
             self._cur_dev = jnp.asarray(self._cur)
         arrs = []
         rng = []
         if self.plan is None:
+            td = time.perf_counter() if tr is not None else 0.0
             bt = None
             if self._pager is not None:
                 self._prepare_paged_writes(0, self.slots)
@@ -1201,6 +1462,9 @@ class ServingEngine:
                 self.params, self._cache, self._cur_dev,
                 jnp.asarray(self._pos), None, bt)
             self._cur_dev = nxt
+            if tr is not None:
+                tr.span(("replica", 0), "decode_dispatch", td, args={
+                    "active": act, "slots": self.slots, "plan": "mono"})
             arrs.append((nxt, 0, self.slots))
             rng.append((0, self.slots))
         else:
@@ -1209,6 +1473,7 @@ class ServingEngine:
                 if not any(self._slot_req[s] is not None
                            for s in range(a, b)):
                     continue
+                td = time.perf_counter() if tr is not None else 0.0
                 bt = None
                 if self.paged:
                     self._prepare_paged_writes(a, b)
@@ -1218,6 +1483,10 @@ class ServingEngine:
                     jnp.asarray(self._pos[a:b]), bt)
                 self._share_pool(r)
                 self._cur_dev = self._cur_dev.at[a:b].set(nxt)
+                if tr is not None:
+                    tr.span(("replica", r), "decode_dispatch", td, args={
+                        "active": racts.get(r, 0), "slots": b - a,
+                        "plan": self.plan.label})
                 arrs.append((nxt, a, b))
                 rng.append((a, b))
         entries = []
@@ -1247,6 +1516,7 @@ class ServingEngine:
         tick later than sync mode — the per-request token STREAMS are
         identical), and hand each drained token to the next in-flight
         record, whose input it is."""
+        td = time.perf_counter() if self._tr is not None else 0.0
         rec = self._inflight.pop(0)
         arrs = [(self._sync(nxt), a, b) for nxt, a, b in rec.arrs]
         now = time.perf_counter()
@@ -1273,6 +1543,10 @@ class ServingEngine:
                 self.decode_tokens += 1
                 self._maybe_retire(slot, now, pos=pos_snap + 1)
         self._occupied_step_sum += self.active
+        if self._tr is not None:
+            self._tr.span("tick", "drain", td, args={
+                "slots_drained": len(rec.entries),
+                "inflight": len(self._inflight)})
 
     # ---- speculative decode ----------------------------------------------
     def _draft_all(self):
@@ -1337,7 +1611,9 @@ class ServingEngine:
         for slot, d in drafts.items():
             if d:
                 window[slot, 1:1 + len(d)] = d
+        tr = self._tr
         if self.plan is None:
+            td = time.perf_counter() if tr is not None else 0.0
             bt = None
             if self._pager is not None:
                 self._prepare_verify_writes(0, self.slots, sw)
@@ -1345,8 +1621,13 @@ class ServingEngine:
             outs, self._cache = self._verify_step(
                 self.params, self._cache, jnp.asarray(window),
                 jnp.asarray(self._pos), bt)
+            arr0 = self._sync(outs)
+            if tr is not None:
+                tr.span(("replica", 0), "verify", td, args={
+                    "window": sw, "drafted": sum(map(len, drafts.values())),
+                    "plan": "mono"})
             now = time.perf_counter()
-            self._collect_verified(window, self._sync(outs), drafts,
+            self._collect_verified(window, arr0, drafts,
                                    0, self.slots, now)
         else:
             pending = []
@@ -1355,6 +1636,7 @@ class ServingEngine:
                 if not any(self._slot_req[s] is not None
                            for s in range(a, b)):
                     continue
+                td = time.perf_counter() if tr is not None else 0.0
                 bt = None
                 if self.paged:
                     self._prepare_verify_writes(a, b, sw)
@@ -1364,8 +1646,14 @@ class ServingEngine:
                     jnp.asarray(window[a:b]),
                     jnp.asarray(self._pos[a:b]), bt)
                 self._share_pool(r)
-                pending.append((outs, a, b))
-            arrs = [(self._sync(o), a, b) for o, a, b in pending]
+                pending.append((outs, a, b, r, td))
+            arrs = []
+            for o, a, b, r, td in pending:
+                arr = self._sync(o)
+                if tr is not None:
+                    tr.span(("replica", r), "verify", td, args={
+                        "window": sw, "plan": self.plan.label})
+                arrs.append((arr, a, b))
             now = time.perf_counter()
             for arr, a, b in arrs:
                 self._collect_verified(window, arr, drafts, a, b, now)
@@ -1454,3 +1742,16 @@ class ServingEngine:
             pager, local = self._pager_of(slot)
             if pager is not None:
                 pager.release_slot(local)
+            # live request metrics (always on): explicit-bucket TTFT/TPOT
+            # histograms + retirement counters
+            self._h_ttft.observe(req.t_first - req.t_submit)
+            n = max(len(req.out_tokens) - 1, 1)
+            self._h_tpot.observe((req.t_done - req.t_first) / n)
+            self._c_requests.inc()
+            self._c_gen.inc(len(req.out_tokens))
+            if self._tr is not None:
+                self._tr.span("requests", "retire", now, now, args={
+                    "uid": req.uid, "slot": slot,
+                    "tokens": len(req.out_tokens),
+                    "latency_s": req.t_done - req.t_submit},
+                    flow_in=req.uid)

@@ -1,0 +1,271 @@
+"""Observability layer: tracer ring, metrics registry, Perfetto export,
+engine integration (no-op guarantee, parity, utilization, snapshots)."""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.obs.trace as trace_mod
+from repro.configs import REGISTRY, reduced
+from repro.models import build_model
+from repro.obs import (MetricsRegistry, TraceConfig, Tracer, TrafficSnapshot,
+                       to_perfetto, validate_perfetto, write_metrics,
+                       write_trace)
+from repro.obs.derive import utilization_from_trace
+from repro.plan import lower_serving, uniform_plan
+from repro.serving import AdaptiveConfig, Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(REGISTRY["yi-6b"], layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _plan(cfg, slots=2, chunk=4):
+    return lower_serving(uniform_plan(cfg.num_groups, 2, n_microbatches=2),
+                         slots=slots, chunk=chunk)
+
+
+def _drive(eng, n=3, new_tokens=4):
+    for i in range(n):
+        eng.submit(Request(i, np.arange(1, 7 + i, dtype=np.int32),
+                           new_tokens))
+    eng.run()
+    return [list(r.out_tokens) for r in sorted(eng.done, key=lambda r: r.uid)]
+
+
+# ---------------------------------------------------------------------------
+# trace core
+
+
+def test_tracer_ring_wraps_and_counts_drops():
+    tr = Tracer(capacity=4)
+    for i in range(10):
+        tr.instant("tick", f"e{i}", t=float(i))
+    assert tr.events == 10
+    assert tr.dropped == 6
+    recs = tr.records()
+    assert len(recs) == 4
+    # oldest-first, and only the newest 4 survive the wrap
+    assert [r[2] for r in recs] == ["e6", "e7", "e8", "e9"]
+    tr.clear()
+    assert tr.events == 0 and tr.records() == []
+
+
+def test_tracer_records_complete_spans_only():
+    """Spans enter the ring with both endpoints — a wrapped ring can
+    never export a B without its E."""
+    tr = Tracer(capacity=2)
+    for i in range(5):
+        tr.span("tick", "s", t0=float(i), t1=float(i) + 0.5)
+    for rec in tr.records():
+        assert rec[0] == "X" and rec[4] > rec[3]
+    with pytest.raises(ValueError):
+        tr.flow("tick", "x", 1)
+    with pytest.raises(ValueError):
+        Tracer(capacity=0)
+
+
+def test_perfetto_export_shape_and_validation():
+    tr = Tracer()
+    t = tr.t0
+    tr.span("tick", "outer", t + 0.001, t + 0.005)
+    tr.span(("stage", 0), "prefill_chunk", t + 0.002, t + 0.003,
+            args={"tokens": 4})
+    tr.span("requests", "admit", t + 0.002, t + 0.002, flow_out=7)
+    tr.span("requests", "retire", t + 0.004, t + 0.004, flow_in=7)
+    tr.instant("requests", "submit", t=t + 0.0005)
+    tr.counter("tick", "engine", {"queue": 1}, t=t + 0.001)
+    obj = to_perfetto(tr)
+    assert not validate_perfetto(
+        obj, require_names=("outer", "prefill_chunk", "submit"))
+    ev = obj["traceEvents"]
+    # B/E pairing per span, metadata names the tracks
+    assert sum(1 for e in ev if e.get("ph") == "B") == \
+        sum(1 for e in ev if e.get("ph") == "E") == 4
+    meta = {e["args"]["name"] for e in ev
+            if e.get("ph") == "M" and e["name"] == "thread_name"}
+    assert {"engine", "requests", "prefill stage 0"} <= meta
+    # flows resolve: one s and one f with the same id
+    flows = [(e["ph"], e["id"]) for e in ev if e.get("ph") in ("s", "f")]
+    assert ("s", "7") in flows and ("f", "7") in flows
+    # validator catches a dangling flow finish
+    tr2 = Tracer()
+    tr2.span("requests", "retire", tr2.t0, tr2.t0 + 1e-4, flow_in=9)
+    assert any("flow" in p for p in validate_perfetto(to_perfetto(tr2)))
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+
+
+def test_metrics_prometheus_exposition():
+    reg = MetricsRegistry()
+    reg.counter("repro_requests_total", help="requests").inc(3)
+    reg.gauge("repro_occ", stage="0").set(0.5)
+    reg.gauge("repro_occ", stage="1").set(0.25)
+    h = reg.histogram("repro_lat_seconds", (0.01, 0.1, 1.0), help="lat")
+    for v in (0.005, 0.05, 0.05, 5.0):
+        h.observe(v)
+    txt = reg.to_prometheus()
+    assert "# TYPE repro_requests_total counter" in txt
+    assert "repro_requests_total 3" in txt
+    assert 'repro_occ{stage="0"} 0.5' in txt
+    assert 'repro_occ{stage="1"} 0.25' in txt
+    # histogram buckets are CUMULATIVE in the exposition, +Inf == count
+    assert 'repro_lat_seconds_bucket{le="0.01"} 1' in txt
+    assert 'repro_lat_seconds_bucket{le="0.1"} 3' in txt
+    assert 'repro_lat_seconds_bucket{le="1"} 3' in txt
+    assert 'repro_lat_seconds_bucket{le="+Inf"} 4' in txt
+    assert "repro_lat_seconds_count 4" in txt
+    # registry invariants
+    assert reg.counter("repro_requests_total") is \
+        reg.counter("repro_requests_total")
+    with pytest.raises(ValueError):
+        reg.gauge("repro_requests_total")
+    with pytest.raises(ValueError):
+        reg.counter("repro_requests_total").inc(-1)
+    snap = reg.snapshot()
+    assert snap["repro_lat_seconds_count"] == 4.0
+    reg.reset()
+    assert reg.counter("repro_requests_total").value == 0.0
+    assert reg.names() == sorted(reg.names())
+
+
+# ---------------------------------------------------------------------------
+# engine integration: no-op guarantee + parity + valid traces
+
+
+@pytest.mark.parametrize("mode", ["mono-dense", "mono-paged",
+                                  "plan-dense", "plan-paged"])
+def test_tracing_is_noop_off_and_parity_preserving_on(setup, mode, tmp_path):
+    cfg, model, params = setup
+    kw = {}
+    if mode.startswith("plan"):
+        kw["plan"] = _plan(cfg)
+    if mode.endswith("paged"):
+        kw.update(paged=True, page_size=4)
+
+    before = trace_mod.RECORDS_TOTAL
+    gold = _drive(ServingEngine(model, params, slots=2, max_seq=48, **kw))
+    assert trace_mod.RECORDS_TOTAL == before, (
+        "trace=None engine pushed trace records on the hot path")
+
+    eng = ServingEngine(model, params, slots=2, max_seq=48,
+                        trace=TraceConfig(), **kw)
+    assert _drive(eng) == gold, f"{mode}: traced streams diverged"
+    assert trace_mod.RECORDS_TOTAL > before
+
+    obj = to_perfetto(eng._tr)
+    prefill_name = "prefill_chunk" if "plan" in mode else "prefill"
+    assert not validate_perfetto(
+        obj, require_names=(prefill_name, "decode", "admit", "retire",
+                            "submit"))
+    path = tmp_path / "t.json"
+    write_trace(eng._tr, str(path))
+    assert json.loads(path.read_text())["traceEvents"]
+
+
+def test_trace_spans_carry_stage_replica_and_request_tags(setup):
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, slots=2, max_seq=48,
+                        plan=_plan(cfg), paged=True, page_size=4, trace=True)
+    _drive(eng)
+    recs = eng._tr.records()
+    chunk_tracks = {r[1] for r in recs if r[0] == "X" and
+                    r[2] == "prefill_chunk"}
+    assert chunk_tracks and all(t[0] == "stage" for t in chunk_tracks)
+    dec_tracks = {r[1] for r in recs if r[0] == "X" and r[2] == "decode"}
+    assert dec_tracks == {("replica", 0), ("replica", 1)}
+    admits = [r for r in recs if r[0] == "X" and r[2] == "admit"]
+    assert admits and all(r[6] == r[5]["uid"] for r in admits)  # flow id
+    util = utilization_from_trace(eng._tr)
+    assert util["window_s"] > 0
+    assert set(util["replica_busy_frac"]) == {0, 1}
+
+
+def test_utilization_stats_present_and_bounded(setup):
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, slots=2, max_seq=48,
+                        plan=_plan(cfg), paged=True, page_size=4)
+    _drive(eng)
+    u = eng.stats()["utilization"]
+    assert u["pipeline_ticks"] > 0
+    assert set(u["stage_bubble_frac"]) == {0, 1}
+    assert all(0.0 <= v <= 1.0 for v in u["stage_bubble_frac"].values())
+    assert set(u["replica_occupancy"]) == {0, 1}
+    assert all(0.0 < v <= 1.0 for v in u["replica_occupancy"].values())
+    assert 0.0 <= u["replica_load_spread"] <= 1.0
+    assert 0.0 <= u["spec_acceptance_rate"] <= 1.0
+    assert 0.0 <= u["prefix_hit_rate"] <= 1.0
+    # mono window: replica 0 spans all slots, no pipeline ticks
+    mono = ServingEngine(model, params, slots=2, max_seq=48)
+    _drive(mono)
+    mu = mono.stats()["utilization"]
+    assert mu["pipeline_ticks"] == 0 and mu["stage_bubble_frac"] == {}
+    assert set(mu["replica_occupancy"]) == {0}
+
+
+def test_replan_decision_events_carry_scored_candidates(setup):
+    cfg, model, params = setup
+    plan = _plan(cfg)
+    eng = ServingEngine(
+        model, params, slots=2, max_seq=48, plan=plan, paged=True,
+        page_size=4, trace=True,
+        adapt=AdaptiveConfig(plans=[None, plan], interval_ticks=2,
+                             cooldown_ticks=2, window_s=5.0, measure=False))
+    _drive(eng, n=4, new_tokens=6)
+    decisions = [r for r in eng._tr.records()
+                 if r[0] == "I" and r[2] == "replan_decision"]
+    assert decisions, "no replan_decision instants traced"
+    scored = [r for r in decisions if r[4]["scores"]]
+    assert scored, "no decision carried candidate scores"
+    for label, score in scored[0][4]["scores"]:
+        assert isinstance(label, str) and isinstance(score, float)
+    assert all("decision" in r[4] for r in decisions)
+
+
+def test_traffic_snapshot_is_typed_and_none_when_idle(setup):
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, slots=2, max_seq=48)
+    assert eng.traffic_snapshot(1.0) is None       # no traffic yet
+    _drive(eng)
+    sig = eng.traffic_snapshot(60.0, slo_ttft_s=1.0, slo_tpot_s=1.0)
+    assert isinstance(sig, TrafficSnapshot)
+    assert sig.lam > 0 and sig.avg_prompt > 0 and sig.avg_new > 0
+    assert sig.window_s == 60.0
+    assert sig.queue_len == 0 and sig.active == 0
+    with pytest.raises(Exception):
+        sig.lam = 1.0                              # frozen dataclass
+
+
+def test_export_metrics_and_write_paths(setup, tmp_path):
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, slots=2, max_seq=48,
+                        plan=_plan(cfg), paged=True, page_size=4)
+    _drive(eng)
+    reg = eng.export_metrics()
+    names = set(reg.names())
+    assert {"repro_ttft_seconds", "repro_tpot_seconds",
+            "repro_requests_total", "repro_tokens_generated_total",
+            "repro_throughput_tok_s", "repro_phase_seconds",
+            "repro_stage_bubble_frac", "repro_replica_occupancy",
+            "repro_replans_total"} <= names
+    # folding is idempotent: gauges are set, not accrued
+    a = eng.export_metrics().snapshot()
+    b = eng.export_metrics().snapshot()
+    assert a == b
+    assert a["repro_requests_total"] == 3.0
+    p = tmp_path / "m.prom"
+    write_metrics(reg, str(p))
+    txt = p.read_text()
+    assert txt.endswith("\n")
+    assert "repro_ttft_seconds_bucket" in txt
+    # write_trace refuses on an untraced engine
+    with pytest.raises(ValueError):
+        eng.write_trace(str(tmp_path / "t.json"))

@@ -118,7 +118,7 @@ def test_stats_report_per_phase_host_timing():
     assert st["ticks"] > 0
     pt = st["phase_time_s"]
     assert set(pt) == {"admission", "prefill", "decode", "replan",
-                       "host_sync"}
+                       "idle", "host_sync"}
     assert all(v >= 0.0 for v in pt.values())
     assert pt["prefill"] > 0.0 and pt["decode"] > 0.0
     # host_sync overlays the phase windows: every tick blocks on at
@@ -130,6 +130,54 @@ def test_stats_report_per_phase_host_timing():
     st = eng.stats()
     assert st["ticks"] == 0
     assert all(v == 0.0 for v in st["phase_time_s"].values())
+
+
+def test_phase_time_partition_sums_to_wall_including_idle():
+    """The partition buckets (admission / prefill / decode / replan /
+    idle) tile the first-tick..last-tick wall window: idle charges the
+    host time BETWEEN ticks, so the sum matches the window even when the
+    caller sleeps mid-run.  host_sync is an overlay (accrues inside open
+    phases) and stays outside the partition."""
+    import time
+
+    cfg, model, params = setup()
+    eng = ServingEngine(model, params, slots=2, max_seq=48)
+    eng.submit(Request(0, np.arange(1, 6, dtype=np.int32), 6))
+    busy = True
+    while busy:
+        busy = eng.tick()
+        time.sleep(0.002)            # caller-side gap -> idle bucket
+    pt = eng.stats()["phase_time_s"]
+    assert pt["idle"] > 0.0
+    wall = eng._t_tick_end - eng._t_first_tick
+    partition = (pt["admission"] + pt["prefill"] + pt["decode"]
+                 + pt["replan"] + pt["idle"])
+    assert partition == pytest.approx(wall, rel=0.02, abs=1e-4)
+    eng.reset_stats()
+    assert eng._t_first_tick is None and eng._t_tick_end is None
+    assert eng.stats()["phase_time_s"]["idle"] == 0.0
+
+
+def test_stats_repeat_calls_are_idempotent():
+    """stats() is a pure snapshot: calling it twice in the same window
+    returns identical payloads (no double-aggregation), including the
+    nested cache and utilization sub-dicts, on dense and paged engines."""
+    cfg, model, params = setup()
+    for kw in ({}, {"paged": True, "page_size": 4}):
+        eng = ServingEngine(model, params, slots=2, max_seq=48, **kw)
+        for uid in range(3):
+            eng.submit(Request(uid, np.arange(1, 6, dtype=np.int32), 4))
+        eng.run()
+        a, b = eng.stats(), eng.stats()
+        assert a == b
+        assert a["cache"] == b["cache"]
+        assert a["utilization"] == b["utilization"]
+        # a mutated copy must not leak back into the engine's counters
+        a["cache"]["layout"] = "mutated"
+        a["utilization"]["pipeline_ticks"] = -1
+        c = eng.stats()
+        assert c["cache"]["layout"] != "mutated"
+        assert c == b
 
 
 def test_warm_prefix_runs_suffix_only_and_stays_token_identical():
@@ -374,7 +422,7 @@ def test_overlap_reduces_host_sync_share_and_keeps_stats_coherent():
     assert st["ticks"] > 0 and st["gen_tokens"] == 18
     pt = st["phase_time_s"]
     assert set(pt) == {"admission", "prefill", "decode", "replan",
-                       "host_sync"}
+                       "idle", "host_sync"}
     assert pt["host_sync"] > 0.0
     assert pt["host_sync"] <= pt["admission"] + pt["prefill"] + pt["decode"]
     for r in done:
